@@ -1,0 +1,115 @@
+"""Shared benchmark scaffolding.
+
+All paper-table benchmarks run the REAL edge pipeline (GMM -> RoI ->
+Algorithm 1) on the ten synthetic scenes at 1/8 of 4K (480x270; canvas
+scales 1024 -> 128 accordingly) and feed the same patch streams to every
+policy.  Results are deterministic (seeded scenes, seeded platform).
+"""
+from __future__ import annotations
+
+import functools
+import sys
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gmm, partitioning, rois
+from repro.core.baselines import FrameMeta
+from repro.core.latency import detector_latency_model
+from repro.core.partitioning import Patch
+from repro.data.synthetic import SCENE_PRESETS, Scene, preset
+
+WIDTH, HEIGHT = 480, 272          # 1/8 of 4K (rounded to /16)
+CANVAS = 128                      # 1024 * (480/3840)
+N_FRAMES = 30
+WARMUP_S = 1.0
+FPS = 10.0
+SLO = 1.0
+N_SCENES = len(SCENE_PRESETS)
+
+# The spatial 1/8 downscale shrinks bytes and compute by ~64x; to keep the
+# simulation in the paper's operating regime (uplinks that can saturate,
+# inference that pressures the SLO) the schedulers see bandwidth scaled
+# accordingly, and canvas latency is modelled at the production 1024^2
+# canvas on a 1-chip function slice.  The scale is half the raw area ratio
+# because the GMM/zone pipeline on the synthetic scenes covers ~2-3x more
+# frame area per patch than PANDA RoIs (box quantization at 1/8 res) —
+# 20 Mbps should be feasible-but-pressured, as in Fig. 12.
+AREA_SCALE = (3840 * 2160) / (WIDTH * HEIGHT) / 2.0
+
+
+def sim_bandwidth(nominal_bps: float) -> float:
+    """Nominal (paper-label) bandwidth -> simulated-scale bandwidth."""
+    return nominal_bps / AREA_SCALE
+
+
+ROI_CFG = rois.RoIConfig(downsample=4, dilate=1, max_rois=64, min_area=2)
+
+
+@functools.lru_cache(maxsize=None)
+def scene_pipeline(scene_idx: int, zone_x: int = 4, zone_y: int = 4,
+                   n_frames: int = N_FRAMES, slo: float = SLO,
+                   clamp_canvas: bool = True):
+    """Run GMM -> RoIs -> Alg.1 for one scene.
+
+    Returns (patches, frame_metas, gt_by_frame, stats) where stats carries
+    per-frame RoI proportions and patch counts.  ``clamp_canvas`` caps
+    patch extents at the canvas (scheduler paths); coverage studies pass
+    False to evaluate the raw Algorithm-1 output.
+    """
+    scene = Scene(preset(scene_idx, width=WIDTH, height=HEIGHT, fps=FPS))
+    state = gmm.init_state(HEIGHT, WIDTH)
+    patches, metas, gt_by_frame = [], [], {}
+    roi_props, patch_counts = [], []
+    extract = lambda m: rois.extract_rois(m, ROI_CFG)
+    import jax as _jax
+    extract = _jax.jit(extract)
+    for t, frame, gt in scene.frames(n_frames):
+        state, fg = gmm.update_jit(state, jnp.asarray(frame))
+        if t < WARMUP_S:
+            continue
+        boxes, valid = extract(jnp.asarray(fg))
+        b = np.asarray(boxes)[np.asarray(valid)]
+        ps = partitioning.partition_host(
+            b, WIDTH, HEIGHT, zone_x, zone_y, frame_id=scene.t,
+            camera_id=scene_idx, t_gen=t, slo=slo)
+        if clamp_canvas:
+            # cap patch extents at the canvas (zones can exceed it at
+            # coarse grids; the scheduler validates this in production)
+            ps = [Patch(p.x0, p.y0, min(p.x1, p.x0 + CANVAS),
+                        min(p.y1, p.y0 + CANVAS), p.frame_id, p.camera_id,
+                        p.t_gen, p.slo) for p in ps]
+        patches.extend(ps)
+        gt_area = int(((gt[:, 2] - gt[:, 0]) *
+                       (gt[:, 3] - gt[:, 1])).sum()) if len(gt) else 0
+        metas.append(FrameMeta(WIDTH, HEIGHT, gt_area, t_gen=t, slo=slo,
+                               camera_id=scene_idx))
+        gt_by_frame[scene.t] = gt
+        roi_props.append(gt_area / (WIDTH * HEIGHT))
+        patch_counts.append(len(ps))
+    stats = {"roi_props": roi_props, "patch_counts": patch_counts}
+    return patches, metas, gt_by_frame, stats
+
+
+def canvas_latency_table(max_batch: int = 16):
+    # production canvas (1024^2) on a single-chip function slice
+    return detector_latency_model(1024, 1024, chips=1,
+                                  overhead_s=0.012).build_table(max_batch)
+
+
+def fullframe_latency_table():
+    # full 4K frame as one input on the same slice (Masked/Full baselines)
+    return detector_latency_model(2176, 3840, chips=1,
+                                  overhead_s=0.012).build_table(4)
+
+
+def emit(name: str, us_per_call: float, derived):
+    """CSV contract for benchmarks/run.py: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,38 @@
+"""Fig. 10: adaptivity — patches per frame and canvas-efficiency CDF."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+from repro.data.synthetic import SCENE_PRESETS
+
+
+def run():
+    table = common.canvas_latency_table()
+    counts, effs = {}, []
+    for i, (name, *_r) in enumerate(SCENE_PRESETS):
+        patches, _, _, stats = common.scene_pipeline(i)
+        counts[name] = (float(np.mean(stats["patch_counts"])),
+                        int(np.max(stats["patch_counts"])))
+        res = TangramScheduler(common.CANVAS, common.CANVAS, table,
+                               Platform(table, PlatformConfig())).run(
+            [patches], common.sim_bandwidth(40e6))
+        effs.extend(res.canvas_efficiencies)
+    cdf = {q: float(np.percentile(effs, q)) for q in (10, 25, 50, 75, 90)}
+    return counts, cdf
+
+
+def main():
+    (counts, cdf), us = common.timed(run)
+    print("scene,mean_patches_per_frame,max_patches_per_frame")
+    for name, (mean, mx) in counts.items():
+        print(f"{name},{mean:.2f},{mx}")
+    print("canvas_eff_cdf," +
+          ",".join(f"p{q}={v:.3f}" for q, v in cdf.items()))
+    common.emit("fig10_adaptivity", us, f"median_canvas_eff={cdf[50]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

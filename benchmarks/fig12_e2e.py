@@ -1,0 +1,88 @@
+"""Fig. 12: end-to-end cost + SLO violation across bandwidth x SLO grid,
+Tangram vs Clipper vs ELF vs MArk.
+
+Paper: Tangram achieves the lowest cost at every (bw, SLO) cell and keeps
+violations < 5% (savings up to 61.2% / 31.0% / 66.4% vs Clipper / ELF /
+MArk at 20/40/80 Mbps).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+BWS = (20e6, 40e6, 80e6)
+SLOS = (0.5, 1.0, 1.5)
+N_SCENES = 4
+
+
+def _streams(slo):
+    streams = []
+    for i in range(N_SCENES):
+        patches, _, _, _ = common.scene_pipeline(i, slo=slo)
+        streams.append([p.__class__(p.x0, p.y0, p.x1, p.y1, p.frame_id,
+                                    p.camera_id, p.t_gen, slo)
+                        for p in patches])
+    return streams
+
+
+def run():
+    table = common.canvas_latency_table()
+    area = common.CANVAS ** 2
+    rows = []
+    for bw in BWS:
+        for slo in SLOS:
+            streams = _streams(slo)
+            t = TangramScheduler(common.CANVAS, common.CANVAS, table,
+                                 Platform(table, PlatformConfig())).run(
+                streams, common.sim_bandwidth(bw))
+            # Clipper/MArk pad every patch to the worst-case tile (the
+            # canvas: patches can reach canvas size) — the paper's
+            # padding-overhead argument for uniform-input batching
+            c = baselines.run_clipper(streams, common.sim_bandwidth(bw),
+                                      Platform(table, PlatformConfig()),
+                                      area, tile_side=common.CANVAS,
+                                      slo=slo)
+            e = baselines.run_elf(streams, common.sim_bandwidth(bw),
+                                  Platform(table, PlatformConfig()), area)
+            m = baselines.run_mark(streams, common.sim_bandwidth(bw),
+                                   Platform(table, PlatformConfig()), area,
+                                   tile_side=common.CANVAS,
+                                   timeout=slo / 4)
+            rows.append({
+                "bw_mbps": bw / 1e6, "slo_s": slo,
+                "tangram": (t.total_cost, t.violation_rate),
+                "clipper": (c.total_cost, c.violation_rate),
+                "elf": (e.total_cost, e.violation_rate),
+                "mark": (m.total_cost, m.violation_rate),
+            })
+    return rows
+
+
+def main():
+    rows, us = common.timed(run)
+    print("bw_mbps,slo_s,"
+          "tangram_usd,tangram_viol,clipper_usd,clipper_viol,"
+          "elf_usd,elf_viol,mark_usd,mark_viol")
+    for r in rows:
+        print(f"{r['bw_mbps']:.0f},{r['slo_s']},"
+              f"{r['tangram'][0]:.3e},{r['tangram'][1]:.3f},"
+              f"{r['clipper'][0]:.3e},{r['clipper'][1]:.3f},"
+              f"{r['elf'][0]:.3e},{r['elf'][1]:.3f},"
+              f"{r['mark'][0]:.3e},{r['mark'][1]:.3f}")
+    viols = [r["tangram"][1] for r in rows]
+    save = {}
+    for base in ("clipper", "elf", "mark"):
+        save[base] = 100 * max(1 - r["tangram"][0] / max(r[base][0], 1e-12)
+                               for r in rows)
+    common.emit("fig12_e2e", us,
+                f"max_viol={max(viols):.3f} " +
+                " ".join(f"max_save_vs_{k}={v:.1f}%"
+                         for k, v in save.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Fig. 13: canvas efficiency under different bandwidth / SLO settings.
+
+Paper: efficiency grows with both SLO (more time to wait for stitchable
+patches) and bandwidth (faster arrivals give the solver more choices).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+def _effs(bw, slo, n_scenes=4):
+    table = common.canvas_latency_table()
+    effs = []
+    for i in range(n_scenes):
+        patches, _, _, _ = common.scene_pipeline(i, slo=slo)
+        patches = [p.__class__(p.x0, p.y0, p.x1, p.y1, p.frame_id,
+                               p.camera_id, p.t_gen, slo) for p in patches]
+        res = TangramScheduler(common.CANVAS, common.CANVAS, table,
+                               Platform(table, PlatformConfig())).run(
+            [patches], common.sim_bandwidth(bw))
+        effs.extend(res.canvas_efficiencies)
+    return effs
+
+
+def run():
+    by_slo = {slo: _effs(40e6, slo) for slo in (0.5, 1.0, 1.5)}
+    by_bw = {bw: _effs(bw, 1.0) for bw in (20e6, 40e6, 80e6)}
+    return by_slo, by_bw
+
+
+def main():
+    (by_slo, by_bw), us = common.timed(run)
+    print("dimension,setting,mean_eff,p50_eff,frac_above_60pct")
+    for slo, effs in by_slo.items():
+        e = np.asarray(effs)
+        print(f"slo,{slo},{e.mean():.3f},{np.median(e):.3f},"
+              f"{(e > 0.6).mean():.3f}")
+    for bw, effs in by_bw.items():
+        e = np.asarray(effs)
+        print(f"bw_mbps,{bw/1e6:.0f},{e.mean():.3f},{np.median(e):.3f},"
+              f"{(e > 0.6).mean():.3f}")
+    slo_means = [np.mean(by_slo[s]) for s in sorted(by_slo)]
+    common.emit("fig13_canvas_eff", us,
+                f"eff_slo_trend={slo_means[0]:.3f}->{slo_means[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

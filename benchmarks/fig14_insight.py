@@ -1,0 +1,58 @@
+"""Fig. 14: batching insight — execution latency distribution, patches per
+batch, amortized per-patch latency, transmission/execution breakdown.
+
+Paper: higher bandwidth -> bigger batches -> larger per-batch latency but
+LOWER amortized per-patch latency (0.0252 / 0.0223 / 0.0213 s at
+20/40/80 Mbps, SLO = 1 s).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+def run():
+    table = common.canvas_latency_table()
+    out = {}
+    for bw in (20e6, 40e6, 80e6):
+        execs, ppb, results = [], [], []
+        for i in range(4):
+            patches, _, _, _ = common.scene_pipeline(i)
+            plat = Platform(table, PlatformConfig())
+            res = TangramScheduler(common.CANVAS, common.CANVAS, table,
+                                   plat).run([patches], common.sim_bandwidth(bw))
+            execs.extend(r.exec_s for r in plat.records)
+            ppb.extend(res.patches_per_batch)
+            results.append(res)
+        out[bw] = {
+            "exec_mean": float(np.mean(execs)),
+            "exec_p99": float(np.percentile(execs, 99)),
+            "patches_per_batch": float(np.mean(ppb)),
+            "amortized": float(np.mean([r.amortized_latency
+                                        for r in results])),
+            "trans_s": float(np.sum([r.transmission_seconds
+                                     for r in results])),
+            "exec_s": float(np.sum([r.exec_seconds for r in results])),
+        }
+    return out
+
+
+def main():
+    out, us = common.timed(run)
+    print("bw_mbps,exec_mean_s,exec_p99_s,patches_per_batch,"
+          "amortized_s,total_trans_s,total_exec_s")
+    for bw, r in out.items():
+        print(f"{bw/1e6:.0f},{r['exec_mean']:.4f},{r['exec_p99']:.4f},"
+              f"{r['patches_per_batch']:.2f},{r['amortized']:.4f},"
+              f"{r['trans_s']:.2f},{r['exec_s']:.2f}")
+    amort = [out[bw]["amortized"] for bw in sorted(out)]
+    common.emit("fig14_insight", us,
+                f"amortized_20/40/80={amort[0]:.4f}/{amort[1]:.4f}/"
+                f"{amort[2]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fig. 8: serverless cost — Tangram vs ELF vs Masked Frame vs Full Frame.
+
+Paper: Tangram cuts cost by 66.4% / 57.4% / 41.1% on average vs Masked,
+Full, ELF respectively.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+BW = 40e6
+
+
+def run(n_scenes: int = common.N_SCENES):
+    table = common.canvas_latency_table()
+    ftable = common.fullframe_latency_table()
+    rows = []
+    for i in range(n_scenes):
+        patches, metas, _, _ = common.scene_pipeline(i)
+        streams = [patches]
+        t = TangramScheduler(common.CANVAS, common.CANVAS, table,
+                             Platform(table, PlatformConfig())).run(
+            streams, common.sim_bandwidth(BW), name="tangram")
+        e = baselines.run_elf(streams, common.sim_bandwidth(BW),
+                              Platform(table, PlatformConfig()),
+                              common.CANVAS ** 2)
+        m = baselines.run_frame_baseline([metas], common.sim_bandwidth(BW),
+                                         Platform(ftable, PlatformConfig()),
+                                         masked=True)
+        f = baselines.run_frame_baseline([metas], common.sim_bandwidth(BW),
+                                         Platform(ftable, PlatformConfig()),
+                                         masked=False)
+        rows.append((i, t.total_cost, e.total_cost, m.total_cost,
+                     f.total_cost))
+    return rows
+
+
+def main():
+    rows, us = common.timed(run)
+    print("scene,tangram_usd,elf_usd,masked_usd,full_usd")
+    for i, t, e, m, f in rows:
+        print(f"{i},{t:.3e},{e:.3e},{m:.3e},{f:.3e}")
+    t = np.mean([r[1] for r in rows])
+    savings = {
+        "vs_elf": 100 * (1 - t / np.mean([r[2] for r in rows])),
+        "vs_masked": 100 * (1 - t / np.mean([r[3] for r in rows])),
+        "vs_full": 100 * (1 - t / np.mean([r[4] for r in rows])),
+    }
+    common.emit("fig8_cost", us,
+                " ".join(f"save_{k}={v:.1f}%" for k, v in savings.items()))
+
+
+if __name__ == "__main__":
+    main()

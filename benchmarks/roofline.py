@@ -1,0 +1,75 @@
+"""§Roofline report: reads the dry-run JSON and prints the per-cell terms.
+
+The dry-run itself (launch/dryrun.py) needs the 512-device world and runs
+separately:
+    PYTHONPATH=src python -m repro.launch.dryrun --all \
+        --json out/dryrun_single_pod.json
+This module is the analysis/reporting half and runs in the 1-device bench
+world.  Also times a kernel microbench triple (interpret mode) so run.py
+has a wall-clock component.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "out",
+                         "dryrun_single_pod.json")
+
+
+def load(path=JSON_PATH):
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def print_table(data):
+    cols = ("arch", "shape", "bottleneck", "t_compute_s", "t_memory_s",
+            "t_collective_s", "useful_flops_ratio", "roofline_fraction")
+    print(",".join(cols))
+    for r in data["results"]:
+        print(",".join(str(r[c]) for c in cols))
+    worst = min(data["results"],
+                key=lambda r: float(r["roofline_fraction"]))
+    coll = [r for r in data["results"] if r["bottleneck"] == "collective"]
+    return worst, coll
+
+
+def kernel_microbench():
+    """Interpret-mode kernel timings (CPU correctness path, not TPU perf)."""
+    from repro.kernels.attention import ops as aops
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    t0 = time.perf_counter()
+    aops.flash_attention(q, k, k, causal=True, block_q=128, block_kv=128,
+                         interpret=True).block_until_ready()
+    return (time.perf_counter() - t0) * 1e6
+
+
+def main():
+    data = load()
+    if data is None:
+        common.emit("roofline", 0.0,
+                    "missing out/dryrun_single_pod.json — run "
+                    "repro.launch.dryrun --all first")
+        return
+    t0 = time.perf_counter()
+    worst, coll = print_table(data)
+    us = (time.perf_counter() - t0) * 1e6
+    n_fit = sum(1 for r in data["results"] if r["fits_hbm"])
+    common.emit(
+        "roofline", us,
+        f"cells={len(data['results'])} fits_hbm={n_fit} "
+        f"worst_fraction={worst['arch']}x{worst['shape']}="
+        f"{worst['roofline_fraction']} collective_bound={len(coll)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Each module prints its own CSV table plus one summary line in the
+``name,us_per_call,derived`` contract.  Usage:
+    PYTHONPATH=src python -m benchmarks.run          # everything
+    PYTHONPATH=src python -m benchmarks.run table2   # substring filter
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig8_cost, fig9_bandwidth, fig10_adaptivity,
+                        fig12_e2e, fig13_canvas_eff, fig14_insight,
+                        roofline, table1_redundancy, table2_bandwidth,
+                        table3_accuracy, table4_roi_methods)
+
+MODULES = [
+    ("table1_redundancy", table1_redundancy),
+    ("table2_bandwidth", table2_bandwidth),
+    ("table3_accuracy", table3_accuracy),
+    ("table4_roi_methods", table4_roi_methods),
+    ("fig8_cost", fig8_cost),
+    ("fig9_bandwidth", fig9_bandwidth),
+    ("fig10_adaptivity", fig10_adaptivity),
+    ("fig12_e2e", fig12_e2e),
+    ("fig13_canvas_eff", fig13_canvas_eff),
+    ("fig14_insight", fig14_insight),
+    ("roofline", roofline),
+]
+
+
+def main() -> None:
+    pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if pattern and pattern not in name:
+            continue
+        print(f"# --- {name} ---")
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

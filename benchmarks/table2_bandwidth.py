@@ -1,0 +1,42 @@
+"""Table II: bandwidth consumption vs Full Frame at 2x2 / 4x4 / 6x6 zones.
+
+Paper: finer grids save more bandwidth (19-95% of full frame across
+scenes, decreasing with grid size).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.data import video
+from repro.data.synthetic import SCENE_PRESETS
+
+
+def run():
+    rows = []
+    for i, (name, *_rest) in enumerate(SCENE_PRESETS):
+        cells = []
+        for grid in (2, 4, 6):
+            patches, metas, _, _ = common.scene_pipeline(i, zone_x=grid,
+                                                         zone_y=grid)
+            patch_b = sum(video.patch_bytes(p) for p in patches)
+            full_b = sum(video.frame_bytes(m.width, m.height) for m in metas)
+            cells.append(100 * patch_b / full_b)
+        rows.append((name, *cells))
+    return rows
+
+
+def main():
+    rows, us = common.timed(run)
+    print("scene,grid2x2_pct,grid4x4_pct,grid6x6_pct")
+    for name, g2, g4, g6 in rows:
+        print(f"{name},{g2:.1f},{g4:.1f},{g6:.1f}")
+    # finer grids must not use more bandwidth on average (paper claim)
+    means = [np.mean([r[k] for r in rows]) for k in (1, 2, 3)]
+    common.emit("table2_bandwidth", us,
+                f"mean_pct 2x2={means[0]:.1f} 4x4={means[1]:.1f} "
+                f"6x6={means[2]:.1f}")
+
+
+if __name__ == "__main__":
+    main()

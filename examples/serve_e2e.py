@@ -1,0 +1,14 @@
+"""End-to-end serving driver: batched requests through a REAL jit'd model.
+
+This is the paper's deployment loop with actual tensors: the edge pipeline
+emits patches, the SLO-aware invoker batches them, the Pallas stitch
+kernel (interpret mode on CPU) assembles canvases, and a jit-compiled
+ViT detector serves each batch.
+
+    PYTHONPATH=src python examples/serve_e2e.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(["--frames", "40", "--canvas", "192", "--slo", "2.0",
+                "--use-pallas-stitch"])

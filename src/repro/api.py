@@ -1,0 +1,355 @@
+"""Cell planning: (architecture x shape x mesh) -> jittable step + shardings.
+
+``plan_cell`` is the single entry point used by the dry-run, the roofline
+harness, training/serving launchers and the smoke tests.  It returns the
+step function, abstract (ShapeDtypeStruct) arguments — so nothing is
+allocated for 100B-param cells — and the in/out shardings resolved from
+the logical-axis rules with divisibility fixups for the concrete mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import param as param_lib
+from repro.config import (DetectorConfig, DiTConfig, EfficientNetConfig,
+                          ShapeConfig, TransformerConfig, ViTConfig, dtype_of)
+from repro.models import detector as detector_lib
+from repro.models import dit as dit_lib
+from repro.models import efficientnet as effnet_lib
+from repro.models import transformer as tfm_lib
+from repro.models import vit as vit_lib
+from repro.sharding import Rules, divisible_sharding
+from repro.training import optimizer as opt_lib
+from repro.training import train_state
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch: str
+    shape: str
+    kind: str                    # train | prefill | decode | gen | serve
+    step_fn: Callable
+    args: Tuple[Any, ...]        # abstract trees (ShapeDtypeStructs)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    n_params: int
+    n_active_params: int
+    notes: str = ""
+    # dry-run scaling: the compiled program is one repeated unit (a
+    # microbatch / one sampler step); the full step = scale x this unit.
+    scale: float = 1.0
+
+
+def _shard_tree(mesh, abstract_tree, axes_tree, rules: Rules):
+    """Zip an abstract tree with a parallel tree of logical-axes tuples."""
+    is_axes_leaf = lambda x: x is None or (
+        isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x))
+    ab_leaves, treedef = jax.tree_util.tree_flatten(abstract_tree)
+    ax_leaves = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes_leaf)[0]
+    assert len(ab_leaves) == len(ax_leaves), (len(ab_leaves), len(ax_leaves))
+    out = [divisible_sharding(mesh, a.shape, ax, rules)
+           for a, ax in zip(ab_leaves, ax_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _param_shardings(mesh, specs, rules: Rules):
+    pspecs = param_lib.param_pspecs(specs, rules, mesh)
+    return param_lib.tree_map_specs(
+        lambda s: None, specs) if mesh is None else jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_shardings(mesh, param_shardings):
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _metric_shardings(mesh):
+    rep = _replicated(mesh)
+    return {"grad_norm": rep, "lr": rep, "loss": rep}
+
+
+# ------------------------------------------------------------- factories ----
+
+
+def _model_module(cfg):
+    if isinstance(cfg, TransformerConfig):
+        return tfm_lib
+    if isinstance(cfg, ViTConfig):
+        return vit_lib
+    if isinstance(cfg, DiTConfig):
+        return dit_lib
+    if isinstance(cfg, EfficientNetConfig):
+        return effnet_lib
+    if isinstance(cfg, DetectorConfig):
+        return detector_lib
+    raise TypeError(type(cfg))
+
+
+def param_specs(cfg):
+    return _model_module(cfg).param_specs(cfg)
+
+
+def _loss_fn(cfg, rules: Rules, impl: str = "xla",
+             unroll_loss: bool = False):
+    if isinstance(cfg, TransformerConfig):
+        return lambda p, b: tfm_lib.lm_loss(cfg, p, b, rules, impl=impl,
+                                            unroll_loss=unroll_loss)
+    if isinstance(cfg, ViTConfig):
+        return lambda p, b: vit_lib.cls_loss(cfg, p, b, rules)
+    if isinstance(cfg, DiTConfig):
+        return lambda p, b: dit_lib.diffusion_loss(cfg, p, b, rules)
+    if isinstance(cfg, EfficientNetConfig):
+        return lambda p, b: effnet_lib.cls_loss(cfg, p, b, rules)
+    if isinstance(cfg, DetectorConfig):
+        return lambda p, b: detector_lib.detection_loss(cfg, p, b, rules)
+    raise TypeError(type(cfg))
+
+
+def train_batch_specs(cfg, shape: ShapeConfig):
+    """Abstract batch tree + logical axes tree for the train step input."""
+    B = shape.global_batch
+    if isinstance(cfg, TransformerConfig):
+        S = shape.seq_len
+        ab = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        ax = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+        return ab, ax
+    if isinstance(cfg, DiTConfig):
+        side = shape.img_res // cfg.vae_factor
+        lat = jax.ShapeDtypeStruct((B, side, side, cfg.latent_channels),
+                                   jnp.float32)
+        ab = {"latents": lat, "noise": lat,
+              "t": jax.ShapeDtypeStruct((B,), jnp.int32),
+              "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        ax = {"latents": ("batch", None, None, None),
+              "noise": ("batch", None, None, None),
+              "t": ("batch",), "labels": ("batch",)}
+        return ab, ax
+    if isinstance(cfg, (ViTConfig, EfficientNetConfig)):
+        r = shape.img_res
+        ab = {"images": jax.ShapeDtypeStruct((B, r, r, 3), jnp.float32),
+              "labels": jax.ShapeDtypeStruct((B,), jnp.int32)}
+        ax = {"images": ("batch", "img_h", "img_w", None),
+              "labels": ("batch",)}
+        return ab, ax
+    if isinstance(cfg, DetectorConfig):
+        ab = {"canvases": jax.ShapeDtypeStruct((B, cfg.canvas, cfg.canvas, 3),
+                                               jnp.float32),
+              "boxes": jax.ShapeDtypeStruct((B, 64, 4), jnp.float32),
+              "valid": jax.ShapeDtypeStruct((B, 64), jnp.bool_)}
+        ax = {"canvases": ("canvas", None, None, None),
+              "boxes": ("canvas", None, None), "valid": ("canvas", None)}
+        return ab, ax
+    raise TypeError(type(cfg))
+
+
+def plan_train(cfg, shape: ShapeConfig, mesh, rules: Rules, *,
+               opt_cfg: Optional[opt_lib.OptimizerConfig] = None,
+               accum_steps: int = 1, impl: str = "xla",
+               unroll_loss: bool = False, scale: float = 1.0,
+               notes: str = "", grad_rs: bool = False) -> CellPlan:
+    opt_cfg = opt_cfg or opt_lib.OptimizerConfig()
+    specs = param_specs(cfg)
+    ab_params = param_lib.abstract_params(specs)
+    ab_opt = opt_lib.abstract_state(ab_params)
+    ab_batch, batch_axes = train_batch_specs(cfg, shape)
+
+    grad_pspecs = (param_lib.param_pspecs(specs, rules, mesh)
+                   if grad_rs else None)
+    step = train_state.make_train_step(
+        _loss_fn(cfg, rules, impl=impl, unroll_loss=unroll_loss), opt_cfg,
+        accum_steps=accum_steps, grad_pspecs=grad_pspecs)
+    p_sh = _param_shardings(mesh, specs, rules)
+    o_sh = _opt_shardings(mesh, p_sh)
+    b_sh = _shard_tree(mesh, ab_batch, batch_axes, rules)
+    return CellPlan(
+        arch=cfg.name, shape=shape.name, kind="train", step_fn=step,
+        args=(ab_params, ab_opt, ab_batch),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, _metric_shardings(mesh)),
+        n_params=cfg.n_params, n_active_params=cfg.n_active_params,
+        notes=notes or f"accum={accum_steps}", scale=scale)
+
+
+def plan_prefill(cfg: TransformerConfig, shape: ShapeConfig, mesh,
+                 rules: Rules, *, impl: str = "xla") -> CellPlan:
+    specs = param_specs(cfg)
+    ab_params = param_lib.abstract_params(specs)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+
+    def step(params, tokens):
+        logits, h = tfm_lib.prefill(cfg, params, tokens, rules, impl=impl)
+        return logits
+
+    p_sh = _param_shardings(mesh, specs, rules)
+    t_sh = divisible_sharding(mesh, (B, S), ("batch", "seq"), rules)
+    out_sh = divisible_sharding(mesh, (B, 1, cfg.vocab),
+                                ("batch", None, "vocab"), rules)
+    return CellPlan(cfg.name, shape.name, "prefill", step,
+                    (ab_params, tokens), (p_sh, t_sh), out_sh,
+                    cfg.n_params, cfg.n_active_params)
+
+
+def plan_decode(cfg: TransformerConfig, shape: ShapeConfig, mesh,
+                rules: Rules) -> CellPlan:
+    specs = param_specs(cfg)
+    ab_params = param_lib.abstract_params(specs)
+    B, S = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = tfm_lib.init_cache(cfg, B, S, abstract=True)
+    cache_ax = tfm_lib.cache_axes(cfg)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, tokens, cache, pos):
+        return tfm_lib.decode_step(cfg, params, tokens, cache, pos, rules)
+
+    p_sh = _param_shardings(mesh, specs, rules)
+    t_sh = divisible_sharding(mesh, (B, 1), ("decode_batch", None), rules)
+    c_sh = _shard_tree(mesh, cache, cache_ax, rules)
+    logits_sh = divisible_sharding(mesh, (B, 1, cfg.vocab),
+                                   ("decode_batch", None, "vocab"), rules)
+    return CellPlan(cfg.name, shape.name, "decode", step,
+                    (ab_params, tokens, cache, pos),
+                    (p_sh, t_sh, c_sh, _replicated(mesh)),
+                    (logits_sh, c_sh),
+                    cfg.n_params, cfg.n_active_params,
+                    notes=f"kv_cache_len={S}")
+
+
+def plan_gen(cfg: DiTConfig, shape: ShapeConfig, mesh, rules: Rules, *,
+             steps_override: Optional[int] = None, scale: float = 1.0,
+             notes: str = "") -> CellPlan:
+    specs = param_specs(cfg)
+    ab_params = param_lib.abstract_params(specs)
+    B = shape.global_batch
+    side = shape.img_res // cfg.vae_factor
+    noise = jax.ShapeDtypeStruct((B, side, side, cfg.latent_channels),
+                                 jnp.float32)
+    labels = jax.ShapeDtypeStruct((B,), jnp.int32)
+    n_steps = steps_override or shape.steps
+
+    def step(params, noise, labels):
+        return dit_lib.ddim_sample(cfg, params, noise, labels, rules,
+                                   n_steps=n_steps)
+
+    p_sh = _param_shardings(mesh, specs, rules)
+    n_sh = divisible_sharding(mesh, noise.shape, ("batch", None, None, None),
+                              rules)
+    l_sh = divisible_sharding(mesh, (B,), ("batch",), rules)
+    return CellPlan(cfg.name, shape.name, "gen", step,
+                    (ab_params, noise, labels), (p_sh, n_sh, l_sh), n_sh,
+                    cfg.n_params, cfg.n_active_params,
+                    notes=notes or f"sampler_steps={n_steps}", scale=scale)
+
+
+def plan_serve(cfg, shape: ShapeConfig, mesh, rules: Rules) -> CellPlan:
+    specs = param_specs(cfg)
+    ab_params = param_lib.abstract_params(specs)
+    B, r = shape.global_batch, shape.img_res
+    if isinstance(cfg, DetectorConfig):
+        images = jax.ShapeDtypeStruct((B, cfg.canvas, cfg.canvas, 3),
+                                      jnp.float32)
+        step = lambda p, x: detector_lib.serve(cfg, p, x, rules)
+        out_sh = None
+    else:
+        images = jax.ShapeDtypeStruct((B, r, r, 3), jnp.float32)
+        mod = _model_module(cfg)
+        step = lambda p, x: mod.serve(cfg, p, x, rules)
+        out_sh = divisible_sharding(mesh, (B, cfg.n_classes),
+                                    ("batch", "vocab"), rules)
+    p_sh = _param_shardings(mesh, specs, rules)
+    i_sh = divisible_sharding(mesh, images.shape,
+                              ("batch", "img_h", "img_w", None), rules)
+    return CellPlan(cfg.name, shape.name, "serve", step,
+                    (ab_params, images), (p_sh, i_sh), out_sh,
+                    cfg.n_params, cfg.n_active_params)
+
+
+CHUNKED_SEQ = 2048       # LM seq length at/above which the pure-XLA
+                         # chunked flash stand-in replaces naive attention
+
+
+def plan_cell(cfg, shape: ShapeConfig, mesh, rules: Rules, *,
+              accum_steps: int = 1,
+              opt_cfg: Optional[opt_lib.OptimizerConfig] = None,
+              dryrun: bool = False,
+              depth_override: Optional[int] = None,
+              grad_rs: bool = False) -> CellPlan:
+    """Plan a cell.
+
+    Exec mode (default): the production program — scan-over-layers as
+    configured, chunked (flash-equivalent) attention for LM cells with
+    seq >= CHUNKED_SEQ, microbatch accumulation as configured.
+
+    Unit mode (``dryrun=True``): one *repeated unit* with exact HLO
+    accounting — unrolled layers (optionally ``depth_override`` of them),
+    unrolled loss chunks, one microbatch, one sampler step — with
+    ``scale`` = units per full step.  XLA's cost_analysis counts
+    while-loop bodies once, so scanned programs undercount
+    flops/collectives by the trip count; the dry-run derives exact totals
+    from two unit compiles at depths 1 and 2 (secant over depth, see
+    launch/dryrun.py and EXPERIMENTS.md §Dry-run).
+    """
+    if dryrun:
+        replace = {}
+        if getattr(cfg, "scan_layers", False):
+            replace["scan_layers"] = False
+        if depth_override is not None and hasattr(cfg, "n_layers"):
+            replace["n_layers"] = depth_override
+        if replace:
+            cfg = dataclasses.replace(cfg, **replace)
+
+    lm_seq = shape.seq_len if isinstance(cfg, TransformerConfig) else 0
+
+    if shape.kind in ("train", "cls"):
+        impl = "chunked" if lm_seq >= CHUNKED_SEQ else "xla"
+        if dryrun and accum_steps > 1:
+            micro = dataclasses.replace(
+                shape, global_batch=shape.global_batch // accum_steps)
+            return plan_train(
+                cfg, micro, mesh, rules, opt_cfg=opt_cfg, accum_steps=1,
+                impl=impl, unroll_loss=dryrun, scale=float(accum_steps),
+                notes=f"unit=microbatch({micro.global_batch}) "
+                      f"x{accum_steps}; optimizer counted per unit",
+                grad_rs=grad_rs)
+        return plan_train(cfg, shape, mesh, rules, opt_cfg=opt_cfg,
+                          accum_steps=accum_steps, impl=impl,
+                          unroll_loss=dryrun, grad_rs=grad_rs)
+    if shape.kind == "prefill":
+        impl = "chunked" if lm_seq >= CHUNKED_SEQ else "xla"
+        return plan_prefill(cfg, shape, mesh, rules, impl=impl)
+    if shape.kind == "decode":
+        return plan_decode(cfg, shape, mesh, rules)
+    if shape.kind == "gen":
+        if dryrun and shape.steps > 1:
+            return plan_gen(cfg, shape, mesh, rules, steps_override=1,
+                            scale=float(shape.steps),
+                            notes=f"unit=1 sampler step x{shape.steps}")
+        return plan_gen(cfg, shape, mesh, rules)
+    if shape.kind == "serve":
+        return plan_serve(cfg, shape, mesh, rules)
+    raise ValueError(shape.kind)
+
+
+def lower_cell(plan: CellPlan, mesh):
+    """Lower (not compile) the planned step on the mesh."""
+    with jax.sharding.set_mesh(mesh):
+        jitted = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings)
+        return jitted.lower(*plan.args)

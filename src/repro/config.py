@@ -1,0 +1,365 @@
+"""Config dataclasses for architectures, shapes, meshes and the scheduler.
+
+Every assigned architecture gets one file in ``repro/configs/<id>.py`` that
+instantiates one of the model config dataclasses below plus its shape set.
+``repro.configs.registry`` maps ``--arch <id>`` to the instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Model families
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0            # shared (always-on) experts, DeepSeekMoE-style
+    d_ff_expert: int = 0         # per-expert hidden size (0 -> use model d_ff)
+    capacity_factor: float = 1.25
+    group_size: int = 512        # tokens per dispatch group (GShard grouping)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """Decoder-only LM (dense or MoE)."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # "dots": save per-layer dot outputs (fast bwd, more memory);
+    # "minimal": save only layer-boundary carries (full recompute)
+    remat_policy: str = "dots"
+    scan_layers: bool = True
+    # decode KV-cache write: "dus" | "masked" | "auto" (masked iff the
+    # cache seq axis is sharded — see attention.decode_attention)
+    cache_update: str = "auto"
+    # fuse q/k/v projections into one matmul (serving optimization)
+    fused_qkv: bool = False
+    # int8-resident weights (per-output-channel scales): serving mode that
+    # lets 100B-class models stay HBM-resident without per-step FSDP
+    # gathers (§Perf iteration 2.3)
+    quant_weights: bool = False
+    # int8 KV cache (per-position-per-head scales): halves the decode
+    # streaming bound (§Perf iteration 2.4)
+    quant_kv: bool = False
+    # flash attention block sizes (TPU targets; used by the Pallas kernel)
+    flash_block_q: int = 512
+    flash_block_kv: int = 512
+
+    family: str = "lm"
+
+    @property
+    def n_params(self) -> int:
+        """Total parameter count (embedding + layers)."""
+        d, L = self.d_model, self.n_layers
+        att = d * self.n_heads * self.head_dim + 2 * d * self.n_kv_heads * self.head_dim \
+            + self.n_heads * self.head_dim * d
+        if self.moe is not None:
+            ff = self.moe.d_ff_expert or self.d_ff
+            mlp = (self.moe.n_experts + self.moe.n_shared) * 3 * d * ff
+            mlp += d * self.moe.n_experts  # router
+        else:
+            mlp = 3 * d * self.d_ff
+        norms = 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (att + mlp + norms) + emb + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE counts only routed top-k)."""
+        if self.moe is None:
+            return self.n_params
+        d, L = self.d_model, self.n_layers
+        att = d * self.n_heads * self.head_dim + 2 * d * self.n_kv_heads * self.head_dim \
+            + self.n_heads * self.head_dim * d
+        ff = self.moe.d_ff_expert or self.d_ff
+        mlp = (self.moe.top_k + self.moe.n_shared) * 3 * d * ff + d * self.moe.n_experts
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return L * (att + mlp + 2 * d) + emb + d
+
+
+@dataclasses.dataclass(frozen=True)
+class ViTConfig:
+    """ViT / DeiT encoder classifier."""
+
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int = 1000
+    distill_token: bool = False
+    in_channels: int = 3
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    fused_qkv: bool = False
+    # "reshape" (transpose+reshape patchify) or "conv" (strided conv stem)
+    patch_embed: str = "reshape"
+    family: str = "vision"
+
+    @property
+    def n_tokens(self) -> int:
+        side = self.img_res // self.patch
+        return side * side + 1 + (1 if self.distill_token else 0)
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 4 * d * d + 2 * d * self.d_ff + 4 * d
+        patch_embed = self.in_channels * self.patch * self.patch * d + d
+        head = d * self.n_classes
+        return self.n_layers * per_layer + patch_embed + head + self.n_tokens * d
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+@dataclasses.dataclass(frozen=True)
+class DiTConfig:
+    """Diffusion transformer (DiT) with adaLN-zero conditioning.
+
+    Operates on a VAE latent grid: latent side = img_res // 8, 4 channels,
+    as in the DiT paper.  ``patch`` patchifies the latent grid.
+    """
+
+    name: str
+    img_res: int
+    patch: int
+    n_layers: int
+    d_model: int
+    n_heads: int
+    latent_channels: int = 4
+    vae_factor: int = 8
+    n_classes: int = 1000
+    timestep_dim: int = 256
+    norm_eps: float = 1e-6
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    family: str = "diffusion"
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def n_tokens(self, img_res: Optional[int] = None) -> int:
+        res = img_res or self.img_res
+        side = res // self.vae_factor // self.patch
+        return side * side
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 4 * d * d + 2 * d * self.d_ff + 6 * d * d + 4 * d  # attn+mlp+adaLN
+        io = self.latent_channels * self.patch**2 * d * 2
+        cond = self.timestep_dim * d + d * d + self.n_classes * d
+        return self.n_layers * per_layer + io + cond
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+@dataclasses.dataclass(frozen=True)
+class EfficientNetConfig:
+    """EfficientNet with compound scaling (B0 base scaled by width/depth)."""
+
+    name: str
+    img_res: int
+    width_mult: float
+    depth_mult: float
+    n_classes: int = 1000
+    dropout: float = 0.5
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    family: str = "vision"
+
+    # B0 stage template: (expand, channels, repeats, stride, kernel)
+    STAGES: Tuple[Tuple[int, int, int, int, int], ...] = (
+        (1, 16, 1, 1, 3),
+        (6, 24, 2, 2, 3),
+        (6, 40, 2, 2, 5),
+        (6, 80, 3, 2, 3),
+        (6, 112, 3, 1, 5),
+        (6, 192, 4, 2, 5),
+        (6, 320, 1, 1, 3),
+    )
+    stem_channels: int = 32
+    head_channels: int = 1280
+
+    def scaled_channels(self, c: int) -> int:
+        c = c * self.width_mult
+        new_c = max(8, int(c + 4) // 8 * 8)
+        if new_c < 0.9 * c:
+            new_c += 8
+        return new_c
+
+    def scaled_repeats(self, r: int) -> int:
+        import math
+        return int(math.ceil(self.depth_mult * r))
+
+    @property
+    def n_params(self) -> int:
+        # computed exactly by the param spec tree; rough estimate here
+        from repro.models import efficientnet as _e
+        return _e.count_params(self)
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    """ViT-backbone anchor-free detector for the Tangram pipeline."""
+
+    name: str
+    canvas: int = 1024
+    patch: int = 32
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: bool = False
+    scan_layers: bool = True
+    family: str = "detector"
+
+    @property
+    def n_tokens(self) -> int:
+        side = self.canvas // self.patch
+        return side * side
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        per_layer = 4 * d * d + 2 * d * self.d_ff + 4 * d
+        return self.n_layers * per_layer + 3 * self.patch**2 * d + d * 5 + self.n_tokens * d
+
+    @property
+    def n_active_params(self) -> int:
+        return self.n_params
+
+
+# --------------------------------------------------------------------------
+# Shapes (workload cells)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One workload cell: what step gets lowered and with what sizes."""
+
+    name: str
+    kind: str               # train | prefill | decode | gen | cls | serve
+    seq_len: int = 0
+    global_batch: int = 0
+    img_res: int = 0
+    steps: int = 0          # diffusion sampler steps
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind in ("train", "cls")
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+LM_SHAPES = (
+    ShapeConfig("train_4k", "train", seq_len=4096, global_batch=256),
+    ShapeConfig("prefill_32k", "prefill", seq_len=32_768, global_batch=32),
+    ShapeConfig("decode_32k", "decode", seq_len=32_768, global_batch=128),
+    ShapeConfig("long_500k", "decode", seq_len=524_288, global_batch=1),
+)
+
+DIFFUSION_SHAPES = (
+    ShapeConfig("train_256", "train", img_res=256, global_batch=256, steps=1000),
+    ShapeConfig("gen_1024", "gen", img_res=1024, global_batch=4, steps=50),
+    ShapeConfig("gen_fast", "gen", img_res=512, global_batch=16, steps=4),
+    ShapeConfig("train_1024", "train", img_res=1024, global_batch=32, steps=1000),
+)
+
+VISION_SHAPES = (
+    ShapeConfig("cls_224", "cls", img_res=224, global_batch=256),
+    ShapeConfig("cls_384", "cls", img_res=384, global_batch=64),
+    ShapeConfig("serve_b1", "serve", img_res=224, global_batch=1),
+    ShapeConfig("serve_b128", "serve", img_res=224, global_batch=128),
+)
+
+
+def shapes_for(model_cfg) -> Tuple[ShapeConfig, ...]:
+    fam = model_cfg.family
+    if fam == "lm":
+        return LM_SHAPES
+    if fam == "diffusion":
+        return DIFFUSION_SHAPES
+    if fam in ("vision", "detector"):
+        return VISION_SHAPES
+    raise ValueError(f"unknown family {fam}")
+
+
+# --------------------------------------------------------------------------
+# Hardware + scheduler configs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """TPU v5e constants used in the roofline analysis."""
+
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: int = 16 * 1024**3    # per chip
+
+
+@dataclasses.dataclass(frozen=True)
+class TangramConfig:
+    """Paper-facing knobs (Sections III-IV defaults)."""
+
+    canvas_m: int = 1024             # canvas height M
+    canvas_n: int = 1024             # canvas width N
+    zone_x: int = 4                  # partition grid X
+    zone_y: int = 4                  # partition grid Y
+    slo_s: float = 1.0               # default SLO
+    slack_sigmas: float = 3.0        # T_slack = mu + 3 sigma
+    max_canvases_per_batch: int = 8  # from function memory (Eq. 5)
+    # Alibaba FC function spec from Section V-A
+    n_vcpu: int = 2
+    mem_gb: float = 4.0
+    gpu_mem_gb: float = 6.0
+    model_mem_gb: float = 1.5        # tau: model residency in accelerator mem
+    canvas_mem_gb: float = 0.5       # w: activation memory per canvas
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]

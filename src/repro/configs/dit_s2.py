@@ -1,0 +1,19 @@
+"""dit-s2 [arXiv:2212.09748; paper] — DiT-S/2: 12L d=384 6H, patch 2."""
+from repro.config import DIFFUSION_SHAPES, DiTConfig
+from repro.configs import CellOverride
+
+ARCH = DiTConfig(
+    name="dit-s2",
+    img_res=256,
+    patch=2,
+    n_layers=12,
+    d_model=384,
+    n_heads=6,
+)
+
+SHAPES = DIFFUSION_SHAPES
+
+# batch 4 < 16 data rows: token context-parallelism (see dit_xl2.py)
+OVERRIDES = {
+    "gen_1024": CellOverride(extra_rules={"seq": "data"}),
+}

@@ -1,0 +1,25 @@
+"""efficientnet-b7 [arXiv:1905.11946; paper] — w2.0 d3.1 r600.
+
+Conv-dominant: weights replicated (DP regime, see DESIGN.md §4);
+classifier head shards over "model"; BN is cross-replica (sync-BN via
+sharded batch means).  Vision shape cells run at their own resolutions
+(cls_224/cls_384/serve_*), the native 600px resolution is exercised by
+the per-arch smoke test and the roofline extras.
+"""
+from repro.config import EfficientNetConfig, VISION_SHAPES
+from repro.configs import CellOverride
+
+ARCH = EfficientNetConfig(
+    name="efficientnet-b7",
+    img_res=600,
+    width_mult=2.0,
+    depth_mult=3.1,
+)
+
+SHAPES = VISION_SHAPES
+
+# Conv nets don't use tensor parallelism at 66M params: fold the "model"
+# axis into data parallelism (batch shards over data x model) so all 256
+# chips do useful work instead of replicating convs 16x.
+_DP_ALL = {"batch": ("data", "model", "pod")}
+OVERRIDES = {s.name: CellOverride(extra_rules=_DP_ALL) for s in SHAPES}

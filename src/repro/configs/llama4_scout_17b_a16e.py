@@ -1,0 +1,39 @@
+"""llama4-scout-17b-a16e [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1.
+~109B total / ~17B active parameters; FSDP overlay shards optimizer state.
+Note: 40 heads / 8 kv heads do not divide the 16-way model axis — attention
+projections stay replicated (see DESIGN.md §4 / sharding.divisible_spec);
+experts (16) shard 1-per-device on "model".
+"""
+from repro.config import LM_SHAPES, MoEConfig, TransformerConfig
+from repro.configs import CellOverride
+
+ARCH = TransformerConfig(
+    name="llama4-scout-17b-a16e",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202_048,
+    head_dim=128,
+    # group_size 128: MoE dispatch-einsum cost is ~linear in group size
+    # (§Perf llama4 v7: 512 -> 128 cut the collective term a further 26 %)
+    moe=MoEConfig(n_experts=16, top_k=1, n_shared=0, d_ff_expert=8192,
+                  capacity_factor=1.25, group_size=128),
+)
+
+SHAPES = LM_SHAPES
+
+OVERRIDES = {
+    # accum 1 (single FSDP param-gather per step) + act_seq (doubles as
+    # context parallelism for the replicated 40-head attention): §Perf v7
+    "train_4k": CellOverride(accum_steps=1, fsdp=True, act_seq=True,
+                             remat_policy="minimal"),
+    "prefill_32k": CellOverride(fsdp=True),
+    # int8-resident weights: no per-token FSDP regathers (§Perf v3)
+    "decode_32k": CellOverride(sequence_parallel=True, quant_weights=True),
+    "long_500k": CellOverride(fsdp=True, sequence_parallel=True,
+                              quant_weights=True),
+}

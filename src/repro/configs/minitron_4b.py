@@ -1,0 +1,28 @@
+"""minitron-4b [arXiv:2407.14679; hf] — pruned nemotron.
+
+32L d_model=3072 24H (GQA kv=8) d_ff=9216 vocab=256000, dense.
+24 heads / 8 kv heads do not divide the 16-way model axis — attention
+projections replicated; MLP (9216) and vocab (256000) shard on "model".
+"""
+from repro.config import LM_SHAPES, TransformerConfig
+from repro.configs import CellOverride
+
+ARCH = TransformerConfig(
+    name="minitron-4b",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=9216,
+    vocab=256_000,
+    head_dim=128,
+)
+
+SHAPES = LM_SHAPES
+
+OVERRIDES = {
+    "train_4k": CellOverride(accum_steps=2, fsdp=True, act_seq=True,
+                             remat_policy="minimal"),
+    "decode_32k": CellOverride(sequence_parallel=True),
+    "long_500k": CellOverride(sequence_parallel=True),
+}

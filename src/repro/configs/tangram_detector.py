@@ -1,0 +1,25 @@
+"""The paper's own serving model: ViT-backbone detector on 1024^2 canvases.
+
+~100M params (ViT-B trunk at patch 32): the model the serverless function
+executes on stitched canvases and the one trained in
+``examples/train_detector.py``.
+"""
+from repro.config import DetectorConfig, ShapeConfig
+
+ARCH = DetectorConfig(
+    name="tangram-detector",
+    canvas=1024,
+    patch=32,
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    d_ff=3072,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)
+
+SHAPES = (
+    ShapeConfig("serve_c8", "serve", img_res=1024, global_batch=8),
+    ShapeConfig("serve_c1", "serve", img_res=1024, global_batch=1),
+    ShapeConfig("train_c32", "train", img_res=1024, global_batch=32),
+)

@@ -1,0 +1,14 @@
+"""vit-b16 [arXiv:2010.11929; paper] — ViT-B/16."""
+from repro.config import VISION_SHAPES, ViTConfig
+
+ARCH = ViTConfig(
+    name="vit-b16",
+    img_res=224,
+    patch=16,
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    d_ff=3072,
+)
+
+SHAPES = VISION_SHAPES

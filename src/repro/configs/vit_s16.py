@@ -1,0 +1,14 @@
+"""vit-s16 [arXiv:2010.11929; paper] — ViT-S/16."""
+from repro.config import VISION_SHAPES, ViTConfig
+
+ARCH = ViTConfig(
+    name="vit-s16",
+    img_res=224,
+    patch=16,
+    n_layers=12,
+    d_model=384,
+    n_heads=6,
+    d_ff=1536,
+)
+
+SHAPES = VISION_SHAPES

@@ -1,0 +1,2 @@
+"""Tangram core: GMM RoI extraction, adaptive frame partitioning (Alg. 1),
+patch stitching + SLO-aware batching (Alg. 2), latency/cost models."""

@@ -1,0 +1,194 @@
+"""Baseline serving policies from Section V-A.
+
+* Full Frame   — whole 4K frame per request, triggered in sequence.
+* Masked Frame — non-RoIs masked, still full resolution per request [35].
+* ELF          — every patch its own request [12].
+* Clipper      — AIMD dynamic batch size over padded fixed-size tiles [23].
+* MArk         — max-batch + timeout over padded fixed-size tiles [24].
+
+Clipper and MArk cannot batch variable-size inputs, so patches are padded
+to a fixed tile (``tile_side``); that padding waste vs Tangram's stitching
+is exactly the paper's point.  All policies share the arrival model, the
+platform (cost/billing), and the ``Results`` record.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.core.latency import AnalyticalLatencyModel, LatencyTable
+from repro.core.partitioning import Patch
+from repro.core.scheduler import PatchOutcome, Results
+from repro.data import video
+from repro.data.video import Arrival, merge_arrivals, shape_arrivals
+from repro.serverless.platform import Platform
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameMeta:
+    """Per-frame record for the frame-level baselines."""
+    width: int
+    height: int
+    fg_area: int
+    t_gen: float
+    slo: float
+    camera_id: int = 0
+
+    @property
+    def deadline(self) -> float:
+        return self.t_gen + self.slo
+
+
+def _frame_arrivals(frames: Sequence[FrameMeta], bandwidth_bps: float,
+                    masked: bool) -> List[Arrival]:
+    byte_rate = bandwidth_bps / 8.0
+    link_free = 0.0
+    out = []
+    for f in frames:
+        b = (video.masked_frame_bytes(f.width, f.height, f.fg_area)
+             if masked else video.frame_bytes(f.width, f.height))
+        start = max(f.t_gen, link_free)
+        t_arr = start + b / byte_rate
+        link_free = t_arr
+        proxy = Patch(0, 0, f.width, f.height, t_gen=f.t_gen, slo=f.slo,
+                      camera_id=f.camera_id)
+        out.append(Arrival(t_arr, proxy, b))
+    return out
+
+
+def _collect(name: str, outcomes, bytes_sent, platform, batch_sizes,
+             patches_per_batch, trans) -> Results:
+    return Results(
+        name=name, outcomes=outcomes, canvas_efficiencies=[],
+        batch_sizes=batch_sizes, patches_per_batch=patches_per_batch,
+        bytes_sent=bytes_sent, total_cost=platform.total_cost,
+        invocations=len(platform.records),
+        exec_seconds=platform.meter.busy_seconds,
+        transmission_seconds=trans)
+
+
+# ------------------------------------------------------------ full/masked ----
+
+def run_frame_baseline(frame_streams: Sequence[Sequence[FrameMeta]],
+                       bandwidth_bps: float, platform: Platform,
+                       masked: bool, name: Optional[str] = None) -> Results:
+    """Full Frame / Masked Frame: one request per frame, in sequence."""
+    per_cam = [_frame_arrivals(s, bandwidth_bps, masked)
+               for s in frame_streams]
+    arrivals = merge_arrivals(per_cam)
+    outcomes = []
+    for a in arrivals:
+        rec = platform.submit(a.t_arrive, 1)
+        outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
+                                     rec.t_finish))
+    bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
+    trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
+    return _collect(name or ("masked_frame" if masked else "full_frame"),
+                    outcomes, bytes_sent, platform,
+                    [1] * len(arrivals), [1] * len(arrivals), trans)
+
+
+# -------------------------------------------------------------------- ELF ----
+
+def run_elf(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
+            platform: Platform, canvas_area: int) -> Results:
+    """Every patch is its own request (fractional canvas-equivalents)."""
+    per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
+    arrivals = merge_arrivals(per_cam)
+    outcomes = []
+    for a in arrivals:
+        equiv = max(a.patch.area / canvas_area, 0.05)
+        rec = platform.submit(a.t_arrive, equiv)
+        outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
+                                     rec.t_finish))
+    bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
+    trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
+    return _collect("elf", outcomes, bytes_sent, platform,
+                    [1] * len(arrivals), [1] * len(arrivals), trans)
+
+
+# ---------------------------------------------------------------- Clipper ----
+
+def run_clipper(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
+                platform: Platform, canvas_area: int, tile_side: int = 512,
+                slo: float = 1.0) -> Results:
+    """AIMD dynamic batch size (Additive-Increase Multiplicative-Decrease).
+
+    Requests are patches padded to tile_side^2; a batch fires when the
+    queue reaches the current target; the target grows +1 when the batch
+    met its SLO budget and halves on violation.  A drain timer (slo/2)
+    bounds tail waiting, as in Clipper's adaptive batching.
+    """
+    per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
+    arrivals = merge_arrivals(per_cam)
+    tile_equiv = tile_side * tile_side / canvas_area
+    target = 1.0
+    queue: List[Arrival] = []
+    outcomes, batch_sizes, ppb = [], [], []
+
+    def fire(t_now: float):
+        nonlocal target
+        batch = queue[: max(1, int(target))]
+        del queue[: len(batch)]
+        rec = platform.submit(t_now, len(batch) * tile_equiv)
+        batch_sizes.append(len(batch))
+        ppb.append(len(batch))
+        ok = True
+        for a in batch:
+            outcomes.append(PatchOutcome(a.patch, a.t_arrive, t_now,
+                                         rec.t_finish))
+            ok &= rec.t_finish <= a.patch.deadline
+        target = target + 1.0 if ok else max(1.0, target / 2.0)
+
+    drain = slo / 2.0
+    for a in arrivals:
+        while queue and a.t_arrive - queue[0].t_arrive > drain:
+            fire(queue[0].t_arrive + drain)
+        queue.append(a)
+        if len(queue) >= int(target):
+            fire(a.t_arrive)
+    while queue:
+        fire(queue[0].t_arrive + drain)
+
+    bytes_sent = sum(x.n_bytes for cam in per_cam for x in cam)
+    trans = sum(x.t_arrive - x.patch.t_gen for cam in per_cam for x in cam)
+    return _collect("clipper", outcomes, bytes_sent, platform, batch_sizes,
+                    ppb, trans)
+
+
+# ------------------------------------------------------------------- MArk ----
+
+def run_mark(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
+             platform: Platform, canvas_area: int, tile_side: int = 512,
+             max_batch: int = 8, timeout: float = 0.25) -> Results:
+    """Max-batch + timeout batching over padded tiles."""
+    per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
+    arrivals = merge_arrivals(per_cam)
+    tile_equiv = tile_side * tile_side / canvas_area
+    queue: List[Arrival] = []
+    outcomes, batch_sizes, ppb = [], [], []
+
+    def fire(t_now: float):
+        batch = list(queue)
+        queue.clear()
+        rec = platform.submit(t_now, len(batch) * tile_equiv)
+        batch_sizes.append(len(batch))
+        ppb.append(len(batch))
+        for a in batch:
+            outcomes.append(PatchOutcome(a.patch, a.t_arrive, t_now,
+                                         rec.t_finish))
+
+    for a in arrivals:
+        while queue and a.t_arrive - queue[0].t_arrive >= timeout:
+            fire(queue[0].t_arrive + timeout)
+        queue.append(a)
+        if len(queue) >= max_batch:
+            fire(a.t_arrive)
+    while queue:
+        fire(queue[0].t_arrive + timeout)
+
+    bytes_sent = sum(x.n_bytes for cam in per_cam for x in cam)
+    trans = sum(x.t_arrive - x.patch.t_gen for cam in per_cam for x in cam)
+    return _collect("mark", outcomes, bytes_sent, platform, batch_sizes,
+                    ppb, trans)

@@ -1,0 +1,58 @@
+"""Serverless cost models.
+
+``alibaba_cost`` is Eqn. (1) of the paper with the published unit prices
+(Alibaba Cloud Function Compute, GPU instances).  ``TPUCostModel`` maps the
+same objective to chip-seconds on the v5e serving fabric so the scheduler
+optimizes an identical quantity on either substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# unit prices from Section III-B
+P_C = 2.138e-5        # $ / vCPU-second
+P_M = 2.138e-5        # $ / GB(mem)-second
+P_G = 1.05e-4         # $ / GB(GPU mem)-second
+P_REQ = 2e-7          # $ / request
+
+
+def alibaba_cost(t_f: float, n_vcpu: float = 2.0, mem_gb: float = 4.0,
+                 gpu_mem_gb: float = 6.0) -> float:
+    """Eqn. (1): C = T_f * (n_C P_C + m_M P_M + m_G P_G) + P_req."""
+    return t_f * (n_vcpu * P_C + mem_gb * P_M + gpu_mem_gb * P_G) + P_REQ
+
+
+def rate_per_second(n_vcpu: float = 2.0, mem_gb: float = 4.0,
+                    gpu_mem_gb: float = 6.0) -> float:
+    return n_vcpu * P_C + mem_gb * P_M + gpu_mem_gb * P_G
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUCostModel:
+    """Chip-second pricing for a v5e slice (on-demand list-ish price)."""
+
+    usd_per_chip_hour: float = 1.2
+    chips: int = 4                    # chips in one function slice
+    p_req: float = P_REQ
+
+    def cost(self, t_f: float) -> float:
+        return t_f * self.chips * self.usd_per_chip_hour / 3600.0 + self.p_req
+
+
+@dataclasses.dataclass
+class CostMeter:
+    """Accumulates per-invocation costs (Fig. 8 / Fig. 12 accounting)."""
+
+    n_vcpu: float = 2.0
+    mem_gb: float = 4.0
+    gpu_mem_gb: float = 6.0
+    total: float = 0.0
+    invocations: int = 0
+    busy_seconds: float = 0.0
+
+    def charge(self, t_f: float) -> float:
+        c = alibaba_cost(t_f, self.n_vcpu, self.mem_gb, self.gpu_mem_gb)
+        self.total += c
+        self.invocations += 1
+        self.busy_seconds += t_f
+        return c

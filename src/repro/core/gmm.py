@@ -1,0 +1,107 @@
+"""Stauffer–Grimson adaptive background mixture model (pure JAX).
+
+Per-pixel K-component Gaussian mixture over luminance, the paper's RoI
+extractor (cv2 BackgroundSubtractorMOG2 on the edge Jetson).  The update
+is a classic streaming rule and is the compute hot-spot of the edge side —
+the Pallas kernel in ``repro/kernels/gmm`` implements the same update with
+explicit VMEM tiling; this module is the jnp oracle and the jit path used
+by the host pipeline.
+
+State arrays are (H, W, K): weight w, mean mu, variance var.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GMMConfig:
+    n_components: int = 3
+    learning_rate: float = 0.05
+    match_sigmas: float = 2.5      # match if |x-mu| < 2.5 sigma
+    background_ratio: float = 0.8  # cumulative weight treated as background
+    init_var: float = 0.04         # variance for new components ([0,1] pixels)
+    min_var: float = 1e-4
+
+
+def init_state(h: int, w: int, cfg: GMMConfig = GMMConfig()):
+    k = cfg.n_components
+    return {
+        "w": jnp.concatenate([jnp.ones((h, w, 1), jnp.float32),
+                              jnp.zeros((h, w, k - 1), jnp.float32)], -1),
+        "mu": jnp.zeros((h, w, k), jnp.float32),
+        "var": jnp.full((h, w, k), cfg.init_var, jnp.float32),
+    }
+
+
+def update(state, frame: jnp.ndarray, cfg: GMMConfig = GMMConfig()
+           ) -> Tuple[dict, jnp.ndarray]:
+    """One streaming update.  frame: (H, W) float32 in [0, 1].
+
+    Returns (new_state, foreground_mask (H, W) bool).
+    """
+    w, mu, var = state["w"], state["mu"], state["var"]
+    x = frame[..., None]                               # (H, W, 1)
+    lr = cfg.learning_rate
+
+    dist2 = jnp.square(x - mu)                         # (H, W, K)
+    matched = dist2 < (cfg.match_sigmas ** 2) * var    # (H, W, K)
+    any_match = jnp.any(matched, axis=-1)              # (H, W)
+
+    # among matched components pick the most dominant (max w/sigma)
+    fitness = w / jnp.sqrt(var)
+    fit_masked = jnp.where(matched, fitness, -jnp.inf)
+    best = jnp.argmax(fit_masked, axis=-1)             # (H, W)
+    onehot = jax.nn.one_hot(best, cfg.n_components) * any_match[..., None]
+
+    # matched update
+    w_new = (1 - lr) * w + lr * onehot
+    rho = lr  # classic approximation of lr * N(x | mu, var)
+    mu_new = jnp.where(onehot > 0, (1 - rho) * mu + rho * x, mu)
+    var_new = jnp.where(onehot > 0,
+                        jnp.maximum((1 - rho) * var + rho * dist2, cfg.min_var),
+                        var)
+
+    # no match: replace the weakest component with a fresh one at x
+    weakest = jnp.argmin(w, axis=-1)
+    replace = jax.nn.one_hot(weakest, cfg.n_components) * (~any_match)[..., None]
+    w_new = jnp.where(replace > 0, lr, w_new)
+    mu_new = jnp.where(replace > 0, x, mu_new)
+    var_new = jnp.where(replace > 0, cfg.init_var, var_new)
+
+    # renormalize weights
+    w_new = w_new / jnp.sum(w_new, axis=-1, keepdims=True)
+
+    # background = top components (by fitness) covering background_ratio.
+    # Sort-free rank formulation (identical to sorted-cumsum, but purely
+    # elementwise so the Pallas kernel can mirror it exactly): a component
+    # is background iff the total weight of strictly-fitter components is
+    # below the threshold.  Index tie-break keeps it deterministic.
+    fit_new = w_new / jnp.sqrt(var_new)
+    ki = jnp.arange(cfg.n_components)
+    fitter = (fit_new[..., None, :] > fit_new[..., :, None]) | (
+        (fit_new[..., None, :] == fit_new[..., :, None])
+        & (ki[None, :] < ki[:, None]))                 # (H, W, K, K')
+    cum_before = jnp.sum(jnp.where(fitter, w_new[..., None, :], 0.0), axis=-1)
+    is_bg = cum_before < cfg.background_ratio
+
+    fg = ~jnp.any(matched & is_bg, axis=-1)
+    new_state = {"w": w_new, "mu": mu_new, "var": var_new}
+    return new_state, fg
+
+
+@jax.jit
+def update_jit(state, frame):
+    return update(state, frame)
+
+
+def warmup(state, frames, cfg: GMMConfig = GMMConfig()):
+    """Run the model over a stack of frames (T, H, W) via scan."""
+    def body(s, f):
+        s, fg = update(s, f, cfg)
+        return s, fg
+    return jax.lax.scan(body, state, frames)

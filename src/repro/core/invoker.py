@@ -1,0 +1,106 @@
+"""Online SLO-aware Batching Invoker (Algorithm 2, lines 1-23).
+
+Event-driven over a virtual clock.  On every patch arrival the queue is
+restitched, the Latency Estimator gives the conservative batch time
+T_slack, and the invocation instant is ``t_remain = t_DDL - T_slack``
+(Eqn. 8).  The invoker fires:
+
+* at ``t_remain`` (timer)                                    [lines 19-22]
+* immediately, dispatching the *previous* canvases, when adding the new
+  patch would make the earliest deadline unmeetable or overflow function
+  memory; the new patch seeds the next queue                 [lines 11-17]
+
+Note: line 11 of the paper's pseudo-code reads ``t_remain > t``; the prose
+("If the estimated t_remain has already exceeded the current time ...
+adding this patch to the queue would violate the SLO") makes clear the
+intended condition is ``t_remain < t`` — we implement the prose.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+from repro.core.latency import LatencyTable
+from repro.core.partitioning import Patch
+from repro.core.stitching import Canvas, stitch
+
+
+@dataclasses.dataclass
+class Invocation:
+    t_submit: float
+    canvases: List[Canvas]
+    patches: List[Patch]
+    t_slack: float
+    reason: str                 # timer | slo_pressure | memory | late | flush
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.canvases)
+
+
+class SLOAwareInvoker:
+    def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
+                 max_canvases: int = 8):
+        self.m, self.n = canvas_m, canvas_n
+        self.latency = latency
+        self.max_canvases = max_canvases
+        self.queue: List[Patch] = []
+        self.canvases: List[Canvas] = []
+        self.t_remain: float = math.inf
+
+    # ------------------------------------------------------------ events ----
+
+    def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
+        """Lines 4-18.  Returns invocations fired by this arrival."""
+        fired: List[Invocation] = []
+        old_queue = list(self.queue)
+        old_canvases = self.canvases
+
+        self.queue.append(patch)
+        self._restitch()
+
+        if self.t_remain < t_now or len(self.canvases) > self.max_canvases:
+            reason = ("memory" if len(self.canvases) > self.max_canvases
+                      else "slo_pressure")
+            if old_queue:
+                fired.append(Invocation(
+                    t_now, old_canvases, old_queue,
+                    self.latency.t_slack(len(old_canvases)), reason))
+            self.queue = [patch]
+            self._restitch()
+            if self.t_remain < t_now:
+                # a lone patch that still cannot meet its SLO: fire ASAP to
+                # minimise lateness (not covered by the paper's pseudo-code)
+                fired.append(self._fire(t_now, "late"))
+        return fired
+
+    def poll(self, t_now: float) -> Optional[Invocation]:
+        """Lines 19-22: the timer alignment check."""
+        if self.queue and t_now >= self.t_remain:
+            return self._fire(max(t_now, self.t_remain), "timer")
+        return None
+
+    def flush(self, t_now: float) -> Optional[Invocation]:
+        if self.queue:
+            return self._fire(t_now, "flush")
+        return None
+
+    def next_timer(self) -> float:
+        return self.t_remain if self.queue else math.inf
+
+    # ---------------------------------------------------------- internals ----
+
+    def _restitch(self):
+        self.canvases = stitch(self.queue, self.m, self.n)
+        t_ddl = min(p.deadline for p in self.queue)
+        t_slack = self.latency.t_slack(len(self.canvases))
+        self.t_remain = t_ddl - t_slack
+
+    def _fire(self, t_now: float, reason: str) -> Invocation:
+        inv = Invocation(t_now, self.canvases, list(self.queue),
+                         self.latency.t_slack(len(self.canvases)), reason)
+        self.queue = []
+        self.canvases = []
+        self.t_remain = math.inf
+        return inv

@@ -1,0 +1,158 @@
+"""Algorithm 1: Adaptive Frame Partitioning.
+
+Divide the frame into X x Y zones, affiliate each RoI with the zone of
+maximum overlap, shrink each non-empty zone to the minimum enclosing
+rectangle of its RoIs, and cut the zones out as patches.
+
+Two implementations with identical semantics:
+  * ``partition``      — jit-able JAX, static (X*Y) patch slots + validity,
+  * ``partition_host`` — plain numpy for the host-side scheduler/tests.
+
+Patch sizes are rounded up to multiples of ``align`` (encoder/stitcher
+tile friendliness), clamped to the frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Patch:
+    """A cut-out region with Tangram metadata (Section III-A)."""
+    x0: int
+    y0: int
+    x1: int
+    y1: int
+    frame_id: int = 0
+    camera_id: int = 0
+    t_gen: float = 0.0          # generation time
+    slo: float = 1.0            # seconds
+
+    @property
+    def w(self) -> int:
+        return self.x1 - self.x0
+
+    @property
+    def h(self) -> int:
+        return self.y1 - self.y0
+
+    @property
+    def area(self) -> int:
+        return self.w * self.h
+
+    @property
+    def deadline(self) -> float:
+        return self.t_gen + self.slo
+
+
+def _overlap_1d(a0, a1, b0, b1):
+    return jnp.maximum(0, jnp.minimum(a1, b1) - jnp.maximum(a0, b0))
+
+
+def partition(boxes: jnp.ndarray, valid: jnp.ndarray, frame_w: int,
+              frame_h: int, zone_x: int, zone_y: int, align: int = 16
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """boxes: (K, 4) int32 xyxy RoIs; valid: (K,) bool.
+
+    Returns (patches (X*Y, 4) int32 xyxy, patch_valid (X*Y,) bool).
+    """
+    n_zones = zone_x * zone_y
+    zw, zh = frame_w // zone_x, frame_h // zone_y
+    zi = jnp.arange(n_zones, dtype=jnp.int32)
+    zx0 = (zi % zone_x) * zw
+    zy0 = (zi // zone_x) * zh
+    zx1 = zx0 + zw
+    zy1 = zy0 + zh
+
+    bx0, by0, bx1, by1 = (boxes[:, i] for i in range(4))
+    ox = _overlap_1d(bx0[:, None], bx1[:, None], zx0[None, :], zx1[None, :])
+    oy = _overlap_1d(by0[:, None], by1[:, None], zy0[None, :], zy1[None, :])
+    overlap = ox * oy                                    # (K, Z)
+    zone_of = jnp.argmax(overlap, axis=1)                # (K,)
+    has_overlap = jnp.max(overlap, axis=1) > 0
+    use = valid & has_overlap
+
+    onehot = jax.nn.one_hot(zone_of, n_zones, dtype=jnp.int32) * use[:, None]
+    big = jnp.int32(1 << 30)
+    px0 = jnp.min(jnp.where(onehot > 0, bx0[:, None], big), axis=0)
+    py0 = jnp.min(jnp.where(onehot > 0, by0[:, None], big), axis=0)
+    px1 = jnp.max(jnp.where(onehot > 0, bx1[:, None], -big), axis=0)
+    py1 = jnp.max(jnp.where(onehot > 0, by1[:, None], -big), axis=0)
+    patch_valid = jnp.sum(onehot, axis=0) > 0
+
+    # align sizes up, clamp to frame
+    def align_up(lo, hi, limit):
+        size = hi - lo
+        size = ((size + align - 1) // align) * align
+        hi = jnp.minimum(lo + size, limit)
+        lo = jnp.maximum(hi - size, 0)
+        return lo, hi
+
+    px0, px1 = align_up(px0, px1, frame_w)
+    py0, py1 = align_up(py0, py1, frame_h)
+    patches = jnp.stack([px0, py0, px1, py1], axis=-1) * patch_valid[:, None]
+    return patches.astype(jnp.int32), patch_valid
+
+
+def partition_host(boxes: np.ndarray, frame_w: int, frame_h: int,
+                   zone_x: int, zone_y: int, align: int = 16,
+                   frame_id: int = 0, camera_id: int = 0, t_gen: float = 0.0,
+                   slo: float = 1.0) -> List[Patch]:
+    """Numpy Algorithm 1 producing Patch objects for the scheduler."""
+    if len(boxes) == 0:
+        return []
+    zw, zh = frame_w // zone_x, frame_h // zone_y
+    zones: dict = {}
+    for (x0, y0, x1, y1) in boxes:
+        # zone of max overlap
+        best, best_area = None, 0
+        for zyi in range(zone_y):
+            for zxi in range(zone_x):
+                ox = max(0, min(x1, (zxi + 1) * zw) - max(x0, zxi * zw))
+                oy = max(0, min(y1, (zyi + 1) * zh) - max(y0, zyi * zh))
+                if ox * oy > best_area:
+                    best_area = ox * oy
+                    best = zyi * zone_x + zxi
+        if best is None:
+            continue
+        zones.setdefault(best, []).append((x0, y0, x1, y1))
+
+    patches = []
+    for z, bs in sorted(zones.items()):
+        x0 = min(b[0] for b in bs)
+        y0 = min(b[1] for b in bs)
+        x1 = max(b[2] for b in bs)
+        y1 = max(b[3] for b in bs)
+        w = int(np.ceil((x1 - x0) / align) * align)
+        h = int(np.ceil((y1 - y0) / align) * align)
+        x1 = min(x0 + w, frame_w)
+        x0 = max(x1 - w, 0)
+        y1 = min(y0 + h, frame_h)
+        y0 = max(y1 - h, 0)
+        patches.append(Patch(int(x0), int(y0), int(x1), int(y1),
+                             frame_id=frame_id, camera_id=camera_id,
+                             t_gen=t_gen, slo=slo))
+    return patches
+
+
+def patch_pixels(frame: np.ndarray, p: Patch) -> np.ndarray:
+    return frame[p.y0:p.y1, p.x0:p.x1]
+
+
+def coverage(patches: List[Patch], boxes: np.ndarray) -> float:
+    """Fraction of ground-truth boxes fully covered by some patch
+    (the Table III accuracy proxy: a covered object is detectable)."""
+    if len(boxes) == 0:
+        return 1.0
+    covered = 0
+    for (x0, y0, x1, y1) in boxes:
+        for p in patches:
+            if p.x0 <= x0 and p.y0 <= y0 and p.x1 >= x1 and p.y1 >= y1:
+                covered += 1
+                break
+    return covered / len(boxes)

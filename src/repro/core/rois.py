@@ -1,0 +1,151 @@
+"""Foreground mask -> RoI bounding boxes.
+
+Pipeline (all static shapes, jit-able):
+  1. max-pool downsample the mask by ``downsample`` (small objects survive),
+  2. morphological dilation (``dilate`` rounds of 3x3 max) to merge nearby
+     fragments,
+  3. connected components by iterative min-label propagation
+     (lax.while_loop to fixpoint),
+  4. per-component bbox via scatter-min/max, compacted to the ``max_rois``
+     largest components by pixel count.
+
+Returns boxes in full-resolution pixel coords (x0, y0, x1, y1) + validity.
+A numpy reference (``numpy_rois``) exists for property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RoIConfig:
+    downsample: int = 8
+    dilate: int = 2
+    max_rois: int = 64
+    min_area: int = 2          # in downsampled cells
+
+
+def _maxpool(mask: jnp.ndarray, k: int) -> jnp.ndarray:
+    h, w = mask.shape
+    m = mask[: h - h % k, : w - w % k]
+    m = m.reshape(h // k, k, w // k, k)
+    return m.any(axis=(1, 3))
+
+
+def _dilate(mask: jnp.ndarray, rounds: int) -> jnp.ndarray:
+    for _ in range(rounds):
+        p = jnp.pad(mask, 1)
+        mask = (p[:-2, 1:-1] | p[2:, 1:-1] | p[1:-1, :-2] | p[1:-1, 2:]
+                | p[1:-1, 1:-1])
+    return mask
+
+
+def _label(mask: jnp.ndarray) -> jnp.ndarray:
+    """Connected components (4-neighborhood) via min-label propagation."""
+    h, w = mask.shape
+    init = jnp.where(mask, jnp.arange(h * w, dtype=jnp.int32).reshape(h, w),
+                     jnp.int32(h * w))
+
+    def step(labels):
+        p = jnp.pad(labels, 1, constant_values=h * w)
+        nbr = jnp.minimum(jnp.minimum(p[:-2, 1:-1], p[2:, 1:-1]),
+                          jnp.minimum(p[1:-1, :-2], p[1:-1, 2:]))
+        return jnp.where(mask, jnp.minimum(labels, nbr), h * w)
+
+    def cond(carry):
+        labels, prev_changed = carry
+        return prev_changed
+
+    def body(carry):
+        labels, _ = carry
+        new = step(labels)
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, body, (init, jnp.bool_(True)))
+    return labels
+
+
+def extract_rois(mask: jnp.ndarray, cfg: RoIConfig = RoIConfig()
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """mask: (H, W) bool full-res -> (boxes (max_rois, 4) int32, valid)."""
+    ds = cfg.downsample
+    small = _dilate(_maxpool(mask, ds), cfg.dilate)
+    hd, wd = small.shape
+    labels = _label(small)                              # (hd, wd), hd*wd = bg
+
+    n = hd * wd
+    flat = labels.reshape(-1)
+    ys, xs = jnp.divmod(jnp.arange(n, dtype=jnp.int32), wd)
+    valid_px = flat < n
+
+    count = jnp.zeros(n + 1, jnp.int32).at[flat].add(1)
+    x0 = jnp.full(n + 1, wd, jnp.int32).at[flat].min(jnp.where(valid_px, xs, wd))
+    y0 = jnp.full(n + 1, hd, jnp.int32).at[flat].min(jnp.where(valid_px, ys, hd))
+    x1 = jnp.zeros(n + 1, jnp.int32).at[flat].max(jnp.where(valid_px, xs, 0))
+    y1 = jnp.zeros(n + 1, jnp.int32).at[flat].max(jnp.where(valid_px, ys, 0))
+    count = count.at[n].set(0)                          # background bucket
+
+    top_count, top_idx = jax.lax.top_k(count[:-1], cfg.max_rois)
+    valid = top_count >= cfg.min_area
+    boxes = jnp.stack([
+        x0[top_idx] * ds,
+        y0[top_idx] * ds,
+        (x1[top_idx] + 1) * ds,
+        (y1[top_idx] + 1) * ds,
+    ], axis=-1).astype(jnp.int32)
+    boxes = boxes * valid[:, None]
+    return boxes, valid
+
+
+@jax.jit
+def extract_rois_jit(mask):
+    return extract_rois(mask)
+
+
+# ------------------------------------------------------------- reference ----
+
+def numpy_rois(mask: np.ndarray, cfg: RoIConfig = RoIConfig()):
+    """Reference implementation with a classic two-pass flood fill."""
+    ds = cfg.downsample
+    h, w = mask.shape
+    small = mask[: h - h % ds, : w - w % ds].reshape(
+        h // ds, ds, w // ds, ds).any(axis=(1, 3))
+    for _ in range(cfg.dilate):
+        p = np.pad(small, 1)
+        small = (p[:-2, 1:-1] | p[2:, 1:-1] | p[1:-1, :-2] | p[1:-1, 2:]
+                 | p[1:-1, 1:-1])
+    hd, wd = small.shape
+    labels = -np.ones((hd, wd), np.int32)
+    comps = []
+    for i in range(hd):
+        for j in range(wd):
+            if small[i, j] and labels[i, j] < 0:
+                stack = [(i, j)]
+                labels[i, j] = len(comps)
+                px = []
+                while stack:
+                    y, x = stack.pop()
+                    px.append((y, x))
+                    for dy, dx in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                        yy, xx = y + dy, x + dx
+                        if 0 <= yy < hd and 0 <= xx < wd and small[yy, xx] \
+                                and labels[yy, xx] < 0:
+                            labels[yy, xx] = len(comps)
+                            stack.append((yy, xx))
+                comps.append(px)
+    comps.sort(key=len, reverse=True)
+    boxes, valid = [], []
+    for px in comps[: cfg.max_rois]:
+        if len(px) < cfg.min_area:
+            continue
+        ys = [p[0] for p in px]
+        xs = [p[1] for p in px]
+        boxes.append((min(xs) * ds, min(ys) * ds,
+                      (max(xs) + 1) * ds, (max(ys) + 1) * ds))
+        valid.append(True)
+    return np.array(boxes, np.int32).reshape(-1, 4), np.array(valid, bool)

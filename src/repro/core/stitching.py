@@ -1,0 +1,146 @@
+"""Patch-stitching Solver (Algorithm 2, lines 24-39).
+
+Guillotine 2-D packing with the paper's exact placement rule: among free
+rectangles that fit the patch, choose the one minimizing
+``min(w_c - w_i, h_c - h_i)`` (best-short-side-fit), place the patch at the
+bottom-left corner, and split the residual space into two non-overlapping
+rectangles along the *shorter axis* of the free rectangle.  Patches are
+never overlapped, rotated, resized, or padded.  When no free rectangle
+fits, a new canvas is opened.
+
+The solver is restitched from scratch on every arrival (paper semantics:
+``C <- Patch_stitching_solver(Q, M, N)``), so placements are a pure
+function of the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.partitioning import Patch
+
+
+@dataclasses.dataclass(frozen=True)
+class FreeRect:
+    x: int
+    y: int
+    w: int
+    h: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    patch_idx: int          # index into the stitched queue
+    canvas_idx: int
+    x: int
+    y: int
+    w: int
+    h: int
+
+
+@dataclasses.dataclass
+class Canvas:
+    m: int                  # height (M)
+    n: int                  # width  (N)
+    free: List[FreeRect] = dataclasses.field(default_factory=list)
+    placements: List[Placement] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.free and not self.placements:
+            self.free = [FreeRect(0, 0, self.n, self.m)]
+
+    @property
+    def used_area(self) -> int:
+        return sum(p.w * p.h for p in self.placements)
+
+    @property
+    def efficiency(self) -> float:
+        return self.used_area / (self.m * self.n)
+
+
+def _choose(free: Sequence[FreeRect], w: int, h: int) -> Optional[int]:
+    """Best-short-side-fit: argmin over fitting rects of min(dw, dh)."""
+    best, best_key = None, None
+    for i, c in enumerate(free):
+        if c.w >= w and c.h >= h:
+            key = (min(c.w - w, c.h - h), c.w * c.h)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+    return best
+
+
+def _split(c: FreeRect, w: int, h: int) -> List[FreeRect]:
+    """Place (w, h) at the bottom-left of c; split residual on the rect's
+    shorter axis (SAS rule).  Returns 0-2 non-empty free rects."""
+    out = []
+    if c.w <= c.h:
+        # shorter axis horizontal: split with a horizontal cut
+        #   c'  = right of the patch, patch-height strip
+        #   c'' = everything above the patch row, full width
+        if c.w - w > 0:
+            out.append(FreeRect(c.x + w, c.y, c.w - w, h))
+        if c.h - h > 0:
+            out.append(FreeRect(c.x, c.y + h, c.w, c.h - h))
+    else:
+        # shorter axis vertical: split with a vertical cut
+        #   c'  = right of the patch, full height
+        #   c'' = above the patch, patch-width strip
+        if c.w - w > 0:
+            out.append(FreeRect(c.x + w, c.y, c.w - w, c.h))
+        if c.h - h > 0:
+            out.append(FreeRect(c.x, c.y + h, w, c.h - h))
+    return out
+
+
+def stitch(patches: Sequence[Patch], m: int, n: int) -> List[Canvas]:
+    """Pack patches (in queue order) onto canvases of size m x n.
+
+    Patches larger than the canvas raise ValueError — the partitioner is
+    configured so zones never exceed the canvas (zone grid vs canvas size
+    is validated in ``scheduler.Scheduler``).
+    """
+    canvases: List[Canvas] = []
+    for i, p in enumerate(patches):
+        if p.w > n or p.h > m:
+            raise ValueError(
+                f"patch {i} ({p.w}x{p.h}) exceeds canvas ({n}x{m})")
+        placed = False
+        for ci, canvas in enumerate(canvases):
+            j = _choose(canvas.free, p.w, p.h)
+            if j is not None:
+                c = canvas.free.pop(j)
+                canvas.placements.append(
+                    Placement(i, ci, c.x, c.y, p.w, p.h))
+                canvas.free.extend(_split(c, p.w, p.h))
+                placed = True
+                break
+        if not placed:
+            canvas = Canvas(m, n)
+            c = canvas.free.pop(0)
+            canvas.placements.append(
+                Placement(i, len(canvases), c.x, c.y, p.w, p.h))
+            canvas.free.extend(_split(c, p.w, p.h))
+            canvases.append(canvas)
+    return canvases
+
+
+def total_efficiency(canvases: Sequence[Canvas]) -> float:
+    if not canvases:
+        return 0.0
+    used = sum(c.used_area for c in canvases)
+    return used / sum(c.m * c.n for c in canvases)
+
+
+def validate(canvases: Sequence[Canvas]) -> None:
+    """Invariants (property-tested): in-bounds and non-overlapping."""
+    for canvas in canvases:
+        for p in canvas.placements:
+            assert 0 <= p.x and p.x + p.w <= canvas.n, p
+            assert 0 <= p.y and p.y + p.h <= canvas.m, p
+        ps = canvas.placements
+        for i in range(len(ps)):
+            for j in range(i + 1, len(ps)):
+                a, b = ps[i], ps[j]
+                sep = (a.x + a.w <= b.x or b.x + b.w <= a.x or
+                       a.y + a.h <= b.y or b.y + b.h <= a.y)
+                assert sep, (a, b)

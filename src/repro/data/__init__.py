@@ -1,0 +1,2 @@
+"""Data pipeline: synthetic PANDA-like scenes, byte/bandwidth models,
+training loaders."""

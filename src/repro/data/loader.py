@@ -1,0 +1,83 @@
+"""Host-side training data loaders (detector training + LM synth data).
+
+Deterministic, seeded, prefetch-free (CPU container); the interfaces match
+what a tf.data/grain pipeline would expose on a real pod: an iterator of
+ready-to-device batch dicts matching ``api.train_batch_specs``.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import partitioning, rois, stitching
+from repro.core.gmm import GMMConfig, init_state, update
+from repro.data.synthetic import Scene, SceneConfig, preset
+
+
+def detector_batches(canvas: int, batch: int, max_boxes: int = 64,
+                     seed: int = 0, scene_idx: int = 0,
+                     n_batches: Optional[int] = None) -> Iterator[dict]:
+    """Stitched-canvas detection batches from synthetic scenes.
+
+    Runs the real edge pipeline (scene -> GT boxes -> Algorithm 1 ->
+    stitching) and composites patch pixels onto canvases, yielding
+    {canvases, boxes, valid} with boxes in canvas coordinates.
+    """
+    rng = np.random.default_rng(seed)
+    scene = Scene(preset(scene_idx, width=canvas * 2, height=canvas,
+                         fps=10.0))
+    made = 0
+    while n_batches is None or made < n_batches:
+        canvases_px = np.zeros((batch, canvas, canvas, 3), np.float32)
+        boxes_out = np.zeros((batch, max_boxes, 4), np.float32)
+        valid_out = np.zeros((batch, max_boxes), bool)
+        b = 0
+        while b < batch:
+            scene.step()
+            frame = scene.render_rgb()
+            gt = scene.boxes()
+            patches = partitioning.partition_host(
+                gt, scene.cfg.width, scene.cfg.height, 4, 4,
+                frame_id=scene.t)
+            if not patches:
+                continue
+            canvases = stitching.stitch(patches, canvas, canvas)
+            for cv in canvases:
+                if b >= batch:
+                    break
+                k = 0
+                for pl in cv.placements:
+                    p = patches[pl.patch_idx]
+                    canvases_px[b, pl.y:pl.y + pl.h, pl.x:pl.x + pl.w] = \
+                        frame[p.y0:p.y1, p.x0:p.x1]
+                    # ground-truth boxes falling inside this patch,
+                    # translated into canvas coordinates
+                    for (x0, y0, x1, y1) in gt:
+                        if k >= max_boxes:
+                            break
+                        if x0 >= p.x0 and y0 >= p.y0 and x1 <= p.x1 \
+                                and y1 <= p.y1:
+                            boxes_out[b, k] = (x0 - p.x0 + pl.x,
+                                               y0 - p.y0 + pl.y,
+                                               x1 - p.x0 + pl.x,
+                                               y1 - p.y0 + pl.y)
+                            valid_out[b, k] = True
+                            k += 1
+                b += 1
+        yield {"canvases": canvases_px, "boxes": boxes_out,
+               "valid": valid_out}
+        made += 1
+
+
+def lm_batches(vocab: int, batch: int, seq: int, seed: int = 0,
+               n_batches: Optional[int] = None) -> Iterator[dict]:
+    """Synthetic LM batches (Zipf-ish tokens with local structure)."""
+    rng = np.random.default_rng(seed)
+    made = 0
+    while n_batches is None or made < n_batches:
+        base = rng.zipf(1.3, size=(batch, seq)).clip(0, vocab - 1)
+        tokens = base.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        yield {"tokens": tokens, "labels": labels}
+        made += 1

@@ -1,0 +1,245 @@
+"""Pallas TPU flash attention: GQA, causal, packed-segment masking; and a
+chunked-KV flash-decode kernel for the long-context serve cells.
+
+Layout/tiling rationale (TPU v5e):
+  * grid (B, H, Q_blocks, KV_blocks); KV innermost so the online-softmax
+    accumulators (m, l, acc) live in VMEM scratch across the KV sweep and
+    the output block is written once at the final KV step.
+  * block_q x block_kv default 512x512: the two matmuls per step are
+    (512, D) @ (D, 512) and (512, 512) @ (512, D) — MXU-aligned for
+    D in {64, 128}; VMEM per step = q + k + v + acc + probs
+    ~ 512*128*4 * 4 + 512*512*4 B ~ 2.1 MiB.
+  * causal cells skip fully-masked KV blocks via a cheap early-out mask
+    (the grid is still dense; Mosaic hoists the skipped compute), and the
+    diagonal block applies the triangular mask.
+  * GQA folds the group into the head grid axis: q head h reads kv head
+    h // group via the k/v index_maps — no repeated KV in HBM.
+  * segment ids (Tangram sequence packing) ride as an extra (B, S) input
+    blocked along q and kv; masking is block-diagonal equality.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, qseg_ref, kseg_ref,
+                  o_ref, m_scr, l_scr, acc_scr,
+                  *, causal: bool, block_q: int, block_kv: int,
+                  n_kv_blocks: int, sm_scale: float, use_segments: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_first = qi * block_q
+    k_first = ki * block_kv
+
+    def _step():
+        q = q_ref[0, :, 0, :]                        # (block_q, D)
+        k = k_ref[0, :, 0, :]                        # (block_kv, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale
+
+        if causal:
+            rows = q_first + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            cols = k_first + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        if use_segments:
+            qs = qseg_ref[0, :]                      # (block_q,)
+            ks = kseg_ref[0, :]                      # (block_kv,)
+            s = jnp.where(qs[:, None] == ks[None, :], s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=-1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # early-out: skip KV blocks strictly above the diagonal
+        pl.when(k_first <= q_first + block_q - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        # fully-masked rows (possible with segments) produce l = 0
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    segment_ids: Optional[jnp.ndarray] = None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Skv, Kv, D); H % Kv == 0.
+
+    Returns the attention context (B, Sq, H, D).
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv)
+    n_kv_blocks = skv // block_kv
+    grid = (b, h, sq // block_q, n_kv_blocks)
+    sm_scale = 1.0 / (d ** 0.5)
+
+    use_segments = segment_ids is not None
+    if segment_ids is None:
+        segment_ids = jnp.zeros((b, sq), jnp.int32)
+        kv_segment_ids = jnp.zeros((b, skv), jnp.int32)
+    else:
+        kv_segment_ids = segment_ids
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, block_q=block_q, block_kv=block_kv,
+        n_kv_blocks=n_kv_blocks, sm_scale=sm_scale,
+        use_segments=use_segments)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda bi, hi, qi, ki, g=g: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_q), lambda bi, hi, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, block_kv), lambda bi, hi, qi, ki: (bi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, segment_ids, kv_segment_ids)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, block_kv: int, n_kv_blocks: int, sm_scale: float,
+                   groups: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    pos = pos_ref[0]
+    k_first = ki * block_kv
+
+    @pl.when(k_first <= pos)
+    def _step():
+        q = q_ref[0, 0]                              # (H, D) all heads
+        k = k_ref[0, :, 0, :]                        # (block_kv, D)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (H, block_kv)
+        cols = k_first + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos, s, NEG_INF)
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_cur = jnp.max(s, axis=-1)[:, None]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, pos, *, block_kv: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """One-token decode against a KV cache, chunked over KV blocks.
+
+    q: (B, 1, H, D); k, v: (B, Smax, Kv, D); pos: scalar int32.
+    Streams the cache HBM->VMEM in block_kv chunks (O(Smax) bytes, the
+    long_500k bottleneck) and skips blocks beyond ``pos``.
+
+    Grid is (B, KV_blocks) with all H heads of one batch element resident:
+    per-step VMEM = H*D + 2*block_kv*D floats — for H=96, D=128,
+    block_kv=512: ~0.6 MiB.  GQA is handled by processing each kv head's
+    query group per batch step (fold below keeps one kernel for all G).
+    """
+    b, one, h, d = q.shape
+    smax, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_kv = min(block_kv, smax)
+    assert smax % block_kv == 0
+    n_kv_blocks = smax // block_kv
+    sm_scale = 1.0 / (d ** 0.5)
+
+    # fold kv heads into the batch axis so each kernel instance sees one
+    # kv head and its G query heads: q (B*Kv, 1, G, D), k/v (B*Kv, S, 1, D)
+    qf = q.reshape(b, 1, kvh, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b * kvh, 1, g, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, smax, 1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, smax, 1, d)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _decode_kernel, block_kv=block_kv, n_kv_blocks=n_kv_blocks,
+        sm_scale=sm_scale, groups=g)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * kvh, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, d), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_kv, 1, d), lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, ki: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kvh, 1, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(b, kvh, 1, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, 1, h, d)

@@ -1,0 +1,32 @@
+"""Jit'd public entries for flash attention / flash decode."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.attention import flash as _flash
+from repro.kernels.attention import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_kv",
+                                             "interpret", "impl"))
+def flash_attention(q, k, v, *, causal: bool = True, segment_ids=None,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False, impl: str = "pallas"):
+    if impl == "xla":
+        return _ref.mha_reference(q, k, v, causal=causal,
+                                  segment_ids=segment_ids)
+    return _flash.flash_attention(q, k, v, causal=causal,
+                                  segment_ids=segment_ids, block_q=block_q,
+                                  block_kv=block_kv, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv", "interpret", "impl"))
+def flash_decode(q, k, v, pos, *, block_kv: int = 512,
+                 interpret: bool = False, impl: str = "pallas"):
+    if impl == "xla":
+        return _ref.decode_reference(q, k, v, pos)
+    return _flash.flash_decode(q, k, v, pos, block_kv=block_kv,
+                               interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the flash attention kernels (GQA + segments)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal: bool,
+                  segment_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Skv, Kv, D) with H % Kv == 0.
+
+    segment_ids: optional (B, S) int32 — packed-sequence block-diagonal
+    masking (Tangram sequence packing): positions in different segments
+    never attend to each other.  Assumes Sq == Skv when given.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    skv = k.shape[1]
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if segment_ids is not None:
+        seg = (segment_ids[:, :, None] == segment_ids[:, None, :])
+        scores = jnp.where(seg[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v)
+    return ctx.reshape(b, sq, h, d)
+
+
+def decode_reference(q, k, v, pos) -> jnp.ndarray:
+    """q: (B, 1, H, D); k, v: (B, Smax, Kv, D); attend to positions <= pos."""
+    b, _, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    valid = (jnp.arange(k.shape[1]) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v)
+    return ctx.reshape(b, 1, h, d)

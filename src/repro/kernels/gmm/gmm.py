@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: Stauffer-Grimson GMM background update.
+
+TPU adaptation of cv2 cuda::BackgroundSubtractorMOG2 (DESIGN.md §2): the
+update is purely per-pixel, so the kernel streams (block_h, block_w) pixel
+tiles HBM->VMEM with the K mixture components unrolled in registers
+(K = 3).  The background-selection uses the sort-free rank formulation so
+the kernel math is identical to ``repro.core.gmm.update``.
+
+Default tiling: (8, 512) tiles x K=3 components x 3 state arrays
+= 8*512*3*3*4 B = 147 KiB in VMEM — deep pipelining headroom.
+Every lane op is elementwise, so the VPU (8x128) is fully utilized;
+arithmetic intensity is low (one frame read, 3 state arrays r/w), making
+this kernel HBM-bound — the roofline term the §Perf log tracks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gmm import GMMConfig
+
+
+def _gmm_kernel(w_ref, mu_ref, var_ref, x_ref,
+                w_out, mu_out, var_out, fg_out, *, cfg: GMMConfig):
+    w = w_ref[...]
+    mu = mu_ref[...]
+    var = var_ref[...]
+    x = x_ref[...][..., None]
+    lr = cfg.learning_rate
+    k = cfg.n_components
+
+    dist2 = jnp.square(x - mu)
+    matched = dist2 < (cfg.match_sigmas ** 2) * var
+    any_match = jnp.any(matched, axis=-1)
+
+    fitness = w / jnp.sqrt(var)
+    fit_masked = jnp.where(matched, fitness, -jnp.inf)
+    best = jnp.argmax(fit_masked, axis=-1)
+    onehot = jax.nn.one_hot(best, k) * any_match[..., None]
+
+    w_new = (1 - lr) * w + lr * onehot
+    mu_new = jnp.where(onehot > 0, (1 - lr) * mu + lr * x, mu)
+    var_new = jnp.where(onehot > 0,
+                        jnp.maximum((1 - lr) * var + lr * dist2, cfg.min_var),
+                        var)
+
+    weakest = jnp.argmin(w, axis=-1)
+    replace = jax.nn.one_hot(weakest, k) * (~any_match)[..., None]
+    w_new = jnp.where(replace > 0, lr, w_new)
+    mu_new = jnp.where(replace > 0, x, mu_new)
+    var_new = jnp.where(replace > 0, cfg.init_var, var_new)
+    w_new = w_new / jnp.sum(w_new, axis=-1, keepdims=True)
+
+    fit_new = w_new / jnp.sqrt(var_new)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)      # row = i
+    kj = jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)      # col = j
+    fitter = (fit_new[..., None, :] > fit_new[..., :, None]) | (
+        (fit_new[..., None, :] == fit_new[..., :, None]) & (kj < ki))
+    cum_before = jnp.sum(jnp.where(fitter, w_new[..., None, :], 0.0), axis=-1)
+    is_bg = cum_before < cfg.background_ratio
+    fg = ~jnp.any(matched & is_bg, axis=-1)
+
+    w_out[...] = w_new
+    mu_out[...] = mu_new
+    var_out[...] = var_new
+    fg_out[...] = fg
+
+
+def gmm_update_pallas(state, frame, cfg: GMMConfig = GMMConfig(), *,
+                      block_h: int = 8, block_w: int = 512,
+                      interpret: bool = False):
+    """state: {w, mu, var} each (H, W, K) f32; frame: (H, W) f32.
+
+    Returns (new_state, fg (H, W) bool).  H % block_h == 0 and
+    W % block_w == 0 (pad upstream; 4K and the test sizes satisfy this).
+    """
+    h, w_dim, k = state["w"].shape
+    assert h % block_h == 0 and w_dim % block_w == 0, (h, w_dim)
+    grid = (h // block_h, w_dim // block_w)
+
+    state_spec = pl.BlockSpec((block_h, block_w, k), lambda i, j: (i, j, 0))
+    frame_spec = pl.BlockSpec((block_h, block_w), lambda i, j: (i, j))
+
+    kernel = functools.partial(_gmm_kernel, cfg=cfg)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[state_spec, state_spec, state_spec, frame_spec],
+        out_specs=[state_spec, state_spec, state_spec, frame_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w_dim, k), jnp.float32),
+            jax.ShapeDtypeStruct((h, w_dim, k), jnp.float32),
+            jax.ShapeDtypeStruct((h, w_dim, k), jnp.float32),
+            jax.ShapeDtypeStruct((h, w_dim), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(state["w"], state["mu"], state["var"], frame)
+    w_new, mu_new, var_new, fg = out
+    return {"w": w_new, "mu": mu_new, "var": var_new}, fg

@@ -1,0 +1,22 @@
+"""Jit'd public entry for the GMM background-model update."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.gmm import GMMConfig
+from repro.kernels.gmm.gmm import gmm_update_pallas
+from repro.kernels.gmm.ref import gmm_update_reference
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "impl", "block_h",
+                                             "block_w"))
+def gmm_update(state, frame, cfg: GMMConfig = GMMConfig(),
+               impl: str = "xla", block_h: int = 8, block_w: int = 512):
+    """impl: xla | pallas | pallas_interpret."""
+    if impl == "xla":
+        return gmm_update_reference(state, frame, cfg)
+    return gmm_update_pallas(state, frame, cfg, block_h=block_h,
+                             block_w=block_w,
+                             interpret=(impl == "pallas_interpret"))

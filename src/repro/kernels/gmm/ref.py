@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the GMM update kernel = the core model itself."""
+from __future__ import annotations
+
+from repro.core.gmm import GMMConfig, update
+
+
+def gmm_update_reference(state, frame, cfg: GMMConfig = GMMConfig()):
+    return update(state, frame, cfg)

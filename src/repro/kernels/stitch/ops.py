@@ -1,0 +1,52 @@
+"""Jit'd public entry for canvas stitching + host-side record packing."""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partitioning import Patch
+from repro.core.stitching import Canvas
+from repro.kernels.stitch.ref import stitch_reference
+from repro.kernels.stitch.stitch import stitch_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "impl"))
+def stitch_canvases(patch_pixels, records, m: int, n: int,
+                    impl: str = "xla"):
+    """Assemble canvases from padded patch slots.
+
+    impl: "xla" (reference), "pallas" (TPU kernel),
+          "pallas_interpret" (kernel body on CPU, for tests).
+    """
+    if impl == "xla":
+        return stitch_reference(patch_pixels, records, m, n)
+    return stitch_pallas(patch_pixels, records, m, n,
+                         interpret=(impl == "pallas_interpret"))
+
+
+def pack_host(frame_pixels: Sequence[np.ndarray],
+              patches: Sequence[Patch], canvases: Sequence[Canvas],
+              hmax: int, wmax: int, max_per_canvas: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Host prep: patch crops -> padded slots + placement records.
+
+    frame_pixels[i] is the (h, w, C) crop for patches[i].  Returns
+    (patch_pixels (P, hmax, wmax, C), records (B, K, 6) int32).
+    """
+    c = frame_pixels[0].shape[-1] if frame_pixels else 3
+    p = max(len(patches), 1)
+    slots = np.zeros((p, hmax, wmax, c), np.float32)
+    for i, px in enumerate(frame_pixels):
+        h, w = px.shape[:2]
+        assert h <= hmax and w <= wmax, (h, w, hmax, wmax)
+        slots[i, :h, :w] = px
+    records = np.zeros((max(len(canvases), 1), max_per_canvas, 6), np.int32)
+    for bi, canvas in enumerate(canvases):
+        assert len(canvas.placements) <= max_per_canvas, "raise K"
+        for ki, pl_ in enumerate(canvas.placements):
+            records[bi, ki] = (1, pl_.patch_idx, pl_.x, pl_.y, pl_.w, pl_.h)
+    return slots, records

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the canvas stitch kernel.
+
+Device-side canvas assembly: patches live in padded slots
+``patch_pixels (P, Hmax, Wmax, C)`` with per-placement records
+``records (B, K, 6) int32 = (valid, slot, x, y, w, h)`` — B canvases, at
+most K placements per canvas.  Output: ``canvases (B, M, N, C)`` with each
+patch's valid (h, w) region copied to (y, x); untouched pixels are zero.
+Placements are guaranteed non-overlapping by the packer (property-tested),
+so blend order is irrelevant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stitch_reference(patch_pixels: jnp.ndarray, records: jnp.ndarray,
+                     m: int, n: int) -> jnp.ndarray:
+    p_, hmax, wmax, c = patch_pixels.shape
+    b, k, _ = records.shape
+    out = jnp.zeros((b, m, n, c), patch_pixels.dtype)
+
+    rows = jnp.arange(hmax)
+    cols = jnp.arange(wmax)
+
+    for bi in range(b):
+        for ki in range(k):
+            valid, slot, x, y, w, h = (records[bi, ki, i] for i in range(6))
+            img = jax.lax.dynamic_index_in_dim(patch_pixels, slot, axis=0,
+                                               keepdims=False)
+            # clamp the Hmax x Wmax window inside the canvas; shift the
+            # valid-region mask by the clamp offset
+            ys = jnp.clip(y, 0, m - hmax)
+            xs = jnp.clip(x, 0, n - wmax)
+            dy = y - ys
+            dx = x - xs
+            mask = ((rows[:, None] >= dy) & (rows[:, None] < dy + h)
+                    & (cols[None, :] >= dx) & (cols[None, :] < dx + w)
+                    & (valid > 0))
+            window = jax.lax.dynamic_slice(out[bi], (ys, xs, 0),
+                                           (hmax, wmax, c))
+            # the patch's (h, w) region starts at its slot origin (0, 0);
+            # shift it to (dy, dx) inside the window
+            shifted = jnp.roll(jnp.roll(img, dy, axis=0), dx, axis=1)
+            blended = jnp.where(mask[..., None], shifted, window)
+            out = out.at[bi].set(
+                jax.lax.dynamic_update_slice(out[bi], blended, (ys, xs, 0)))
+    return out

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: scatter packed patches into canvases.
+
+TPU adaptation of Tangram's host-side cv2 canvas assembly (DESIGN.md §2):
+instead of compositing on the host and DMA'ing finished canvases, the
+function instance DMAs compact patch slots HBM->VMEM and assembles the
+canvas entirely in VMEM, one pass, no host round-trip.
+
+Grid: (B canvases, K placement slots).  The output BlockSpec maps every k
+step of a canvas to the same (M, N, C) block, so the canvas stays resident
+in VMEM across its K placement steps (accumulation pattern); the patch
+input streams one (Hmax, Wmax, C) slot per step.  Records ride in SMEM via
+scalar prefetch and drive the dynamic in-VMEM stores.
+
+VMEM budget (defaults): canvas 1024x1024x3 bf16 = 6.0 MiB + one patch slot
+512x512x3 bf16 = 1.5 MiB << 16 MiB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stitch_kernel(records_ref,          # SMEM (B, K, 6) int32
+                   patch_ref,            # VMEM (1, Hmax, Wmax, C)
+                   out_ref,              # VMEM (1, M, N, C)
+                   *, m: int, n: int, hmax: int, wmax: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = records_ref[b, k, 0]
+    slot_x = records_ref[b, k, 2]
+    slot_y = records_ref[b, k, 3]
+    w = records_ref[b, k, 4]
+    h = records_ref[b, k, 5]
+
+    @pl.when(valid > 0)
+    def _place():
+        img = patch_ref[0]                            # (Hmax, Wmax, C)
+        ys = jnp.clip(slot_y, 0, m - hmax)
+        xs = jnp.clip(slot_x, 0, n - wmax)
+        dy = slot_y - ys
+        dx = slot_x - xs
+        rows = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 1)
+        mask = ((rows >= dy) & (rows < dy + h)
+                & (cols >= dx) & (cols < dx + w))
+        shifted = jnp.roll(jnp.roll(img, dy, axis=0), dx, axis=1)
+        window = pl.load(out_ref, (0, pl.dslice(ys, hmax),
+                                   pl.dslice(xs, wmax), slice(None)))
+        blended = jnp.where(mask[..., None], shifted, window)
+        pl.store(out_ref, (0, pl.dslice(ys, hmax), pl.dslice(xs, wmax),
+                           slice(None)), blended)
+
+
+def stitch_pallas(patch_pixels: jnp.ndarray, records: jnp.ndarray,
+                  m: int, n: int, *, interpret: bool = False) -> jnp.ndarray:
+    """patch_pixels: (P, Hmax, Wmax, C); records: (B, K, 6) int32
+    (valid, slot, x, y, w, h) -> canvases (B, M, N, C)."""
+    p_, hmax, wmax, c = patch_pixels.shape
+    b, k, _ = records.shape
+    assert hmax <= m and wmax <= n, "patch slot larger than canvas"
+
+    kernel = functools.partial(_stitch_kernel, m=m, n=n, hmax=hmax, wmax=wmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            # one patch slot per (b, k) step, selected by the record's slot id
+            pl.BlockSpec((1, hmax, wmax, c),
+                         lambda bi, ki, recs: (recs[bi, ki, 1], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n, c),
+                               lambda bi, ki, recs: (bi, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, m, n, c), patch_pixels.dtype),
+        interpret=interpret,
+    )(records, patch_pixels)

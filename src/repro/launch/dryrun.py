@@ -1,0 +1,245 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract roofline terms from the compiled artifact.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices for the
+2 x 16 x 16 multi-pod mesh.  (Smoke tests / benches import other modules
+and keep a 1-device world.)
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch vit-b16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --json out/dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --arch dit-xl2 --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro import api
+from repro import configs as cfg_registry
+from repro.config import HardwareConfig, shapes_for
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_chips
+from repro.sharding import ShardingConfig
+
+
+def input_specs(arch_id: str, shape_name: str = None):
+    """ShapeDtypeStruct stand-ins for every model input of the arch's
+    cells: {shape_name: args tuple} (weak-type-correct, no allocation)."""
+    spec = cfg_registry.get(arch_id)
+    mesh = make_test_mesh()
+    out = {}
+    for shape in spec.shapes:
+        if shape_name and shape.name != shape_name:
+            continue
+        ov = spec.override(shape.name)
+        rules = ShardingConfig.make(fsdp=ov.fsdp,
+                                    sequence_parallel=ov.sequence_parallel).rules
+        plan = api.plan_cell(spec.model, shape, mesh, rules,
+                             accum_steps=ov.accum_steps)
+        out[shape.name] = plan.args
+    return out
+
+
+def _compile_metrics(plan, mesh):
+    compiled = api.lower_cell(plan, mesh).compile()
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    coll = hlo_analysis.parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll": coll.total_bytes,
+        "coll_by_kind": coll.bytes_by_kind,
+        "coll_count": coll.total_count,
+        "args": ma.argument_size_in_bytes if ma else 0,
+        "temp": ma.temp_size_in_bytes if ma else 0,
+        "out": ma.output_size_in_bytes if ma else 0,
+    }
+
+
+def run_cell(arch_id: str, shape, mesh, mesh_name: str, hw: HardwareConfig,
+             verbose: bool = True, rules_override=None, accum_override=None,
+             model_override=None, quick: bool = False,
+             grad_rs: bool = False):
+    """Three compiles per cell:
+
+    1. the full production program (proves it compiles; memory analysis;
+       collective schedule),
+    2-3. unit programs at depths 1 and 2 (unrolled; exact HLO accounting).
+    Totals = secant over depth: R + L*B with B = m2 - m1, R = m1 - B,
+    times the unit scale (microbatch accum / sampler steps).  This is
+    exact for repeated-layer models; XLA's cost_analysis counts scanned
+    while bodies once, which the full program alone cannot correct.
+    """
+    spec = cfg_registry.get(arch_id)
+    model = model_override if model_override is not None else spec.model
+    ov = spec.override(shape.name)
+    rules = rules_override if rules_override is not None else \
+        ShardingConfig.make(fsdp=ov.fsdp,
+                            sequence_parallel=ov.sequence_parallel,
+                            act_seq=ov.act_seq,
+                            extra=ov.extra_rules).rules
+    if ov.remat_policy and hasattr(model, "remat_policy"):
+        model = dataclasses.replace(model, remat_policy=ov.remat_policy)
+    if ov.quant_weights and hasattr(model, "quant_weights"):
+        model = dataclasses.replace(model, quant_weights=True)
+    accum = accum_override or ov.accum_steps
+
+    t0 = time.time()
+    full_plan = api.plan_cell(model, shape, mesh, rules, accum_steps=accum,
+                              grad_rs=grad_rs)
+    full = _compile_metrics(full_plan, mesh)
+
+    if not quick and hasattr(model, "n_layers") and model.n_layers > 1:
+        u1_plan = api.plan_cell(model, shape, mesh, rules, accum_steps=accum,
+                                dryrun=True, depth_override=1,
+                                grad_rs=grad_rs)
+        u1 = _compile_metrics(u1_plan, mesh)
+        u2_plan = api.plan_cell(model, shape, mesh, rules, accum_steps=accum,
+                                dryrun=True, depth_override=2,
+                                grad_rs=grad_rs)
+        u2 = _compile_metrics(u2_plan, mesh)
+        L, scale = model.n_layers, u1_plan.scale
+
+        def total(key):
+            b = u2[key] - u1[key]
+            return (u1[key] + (L - 1) * b) * scale
+        flops, by, coll = total("flops"), total("bytes"), total("coll")
+        method = f"secant(L={L}, scale={scale:g})"
+    else:
+        flops, by, coll = full["flops"], full["bytes"], full["coll"]
+        method = "direct"
+    compile_s = time.time() - t0
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_size = axis_sizes.get("data", 1) * axis_sizes.get("pod", 1)
+    terms = hlo_analysis.RooflineTerms(
+        arch=arch_id, shape=shape.name, mesh=mesh_name,
+        flops_per_device=flops,
+        bytes_per_device=by,
+        collective_bytes_per_device=coll,
+        peak_flops=hw.peak_flops, hbm_bw=hw.hbm_bw, ici_bw=hw.ici_bw,
+        model_flops_global=hlo_analysis.model_flops(
+            full_plan.n_params, full_plan.n_active_params, shape,
+            full_plan.kind, model),
+        chips=mesh_chips(mesh),
+        arg_bytes=full["args"],
+        temp_bytes=full["temp"],
+        out_bytes=full["out"],
+        analytic_act_bytes=hlo_analysis.estimate_activation_bytes(
+            model, shape, full_plan.kind, data_size,
+            axis_sizes.get("model", 1), accum, act_seq=ov.act_seq),
+        notes=f"{full_plan.notes}; {method}")
+    coll_by_kind = full["coll_by_kind"]
+    coll_count = full["coll_count"]
+
+    if verbose:
+        print(f"== {arch_id} x {shape.name} on {mesh_name} "
+              f"(3 compiles, {compile_s:.1f}s) ==")
+        print(f"  memory/dev: args={terms.arg_bytes/2**30:.3f}GiB "
+              f"analytic_act={terms.analytic_act_bytes/2**30:.3f}GiB "
+              f"(xla-cpu temp={terms.temp_bytes/2**30:.1f}GiB, pessimistic) "
+              f"HBM {hw.hbm_bytes/2**30:.0f}GiB [{terms.notes}]")
+        print(f"  per-step totals/dev: flops={terms.flops_per_device:.3e} "
+              f"bytes={terms.bytes_per_device:.3e} "
+              f"collective={terms.collective_bytes_per_device:.3e}B")
+        print(f"  schedule (full program, scan bodies once): "
+              f"{coll_count} collective ops "
+              f"{ {k: f'{v:.2e}' for k, v in coll_by_kind.items() if v} }")
+        print(f"  roofline: t_comp={terms.t_compute:.3e}s "
+              f"t_mem={terms.t_memory:.3e}s t_coll={terms.t_collective:.3e}s "
+              f"-> {terms.bottleneck}-bound, "
+              f"useful_flops={terms.useful_flops_ratio:.2f}, "
+              f"frac={terms.roofline_fraction:.2f}")
+    fits = terms.hbm_estimate <= hw.hbm_bytes
+    if verbose and not fits:
+        print("  !! estimated footprint exceeds per-chip HBM")
+    return terms, compile_s, fits
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=cfg_registry.ARCH_IDS)
+    p.add_argument("--shape")
+    p.add_argument("--all", action="store_true", help="all 40 pool cells")
+    p.add_argument("--multi-pod", action="store_true",
+                   help="2x16x16 (512 chips) instead of 16x16")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--mesh", choices=("production", "test"),
+                   default="production")
+    p.add_argument("--json", help="write results JSON here")
+    p.add_argument("--quick", action="store_true",
+                   help="compile-proof only (skip secant unit compiles; "
+                        "totals are scan-undercounted — multi-pod pass)")
+    args = p.parse_args(argv)
+
+    hw = HardwareConfig()
+    meshes = []
+    make = make_production_mesh if args.mesh == "production" else make_test_mesh
+    if args.both_meshes:
+        meshes = [(make(multi_pod=False), "16x16"),
+                  (make(multi_pod=True), "2x16x16")]
+    else:
+        mesh = make(multi_pod=args.multi_pod)
+        meshes = [(mesh, "2x16x16" if args.multi_pod else "16x16")]
+    if args.mesh == "test":
+        meshes = [(m, n + "-test") for m, n in meshes]
+
+    cells = []
+    if args.all:
+        cells = list(cfg_registry.all_cells())
+    elif args.arch:
+        spec = cfg_registry.get(args.arch)
+        cells = [(args.arch, s) for s in spec.shapes
+                 if not args.shape or s.name == args.shape]
+    else:
+        p.error("--arch or --all required")
+
+    results, failures = [], []
+    for mesh, mesh_name in meshes:
+        for arch_id, shape in cells:
+            try:
+                terms, compile_s, fits = run_cell(arch_id, shape, mesh,
+                                                  mesh_name, hw,
+                                                  quick=args.quick)
+                row = terms.row()
+                row.update(compile_s=round(compile_s, 1), fits_hbm=fits,
+                           flops_per_device=terms.flops_per_device,
+                           bytes_per_device=terms.bytes_per_device,
+                           collective_bytes_per_device=
+                           terms.collective_bytes_per_device,
+                           arg_bytes=terms.arg_bytes,
+                           temp_bytes=terms.temp_bytes,
+                           analytic_act_bytes=terms.analytic_act_bytes,
+                           hbm_estimate=terms.hbm_estimate,
+                           model_flops_global=terms.model_flops_global,
+                           chips=terms.chips)
+                results.append(row)
+            except Exception as e:  # a failing cell is a bug in the system
+                traceback.print_exc()
+                failures.append((arch_id, shape.name, mesh_name, repr(e)))
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"results": results,
+                       "failures": failures}, f, indent=1)
+        print(f"wrote {args.json}")
+
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL:", f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,248 @@
+"""Collective-traffic + roofline-term extraction from compiled artifacts.
+
+``cost_analysis()`` has no collective statistics, so we parse the
+post-SPMD per-device HLO text and sum the output bytes of every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, sync or async-start form).  Shapes in the partitioned
+module are per-device, so the sum is bytes-through-ICI per device — the
+quantity the collective roofline term wants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+from repro.config import HardwareConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[2048,1408]{1,0} all-gather(...)
+#        ROOT %tuple ... f32[]  all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        bytes_by[kind] += n * _DTYPE_BYTES[dtype]
+        count_by[kind] += 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ----------------------------------------------------------- while loops ----
+
+_WHILE_TRIP_RE = re.compile(
+    r'while\(.*?\).*?backend_config=.*?"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def scan_trip_counts(hlo_text: str):
+    """Known trip counts of while loops (scan-over-layers multiplies the
+    per-iteration collective bytes).  Best effort: XLA records
+    known_trip_count in the while op's backend_config."""
+    return [int(m.group(1)) for m in _WHILE_TRIP_RE.finditer(hlo_text)]
+
+
+# ----------------------------------------------------------------- terms ----
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    model_flops_global: float = 0.0
+    chips: int = 1
+    arg_bytes: int = 0
+    temp_bytes: int = 0          # XLA-CPU temp (pessimistic, see notes)
+    out_bytes: int = 0
+    analytic_act_bytes: float = 0.0
+    notes: str = ""
+
+    @property
+    def hbm_estimate(self) -> float:
+        """args (exact: params+opt+cache+batch) + analytic activations."""
+        return self.arg_bytes + self.analytic_act_bytes
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (global): remat/dispatch waste detector."""
+        hlo_global = self.flops_per_device * self.chips
+        if hlo_global <= 0:
+            return 0.0
+        return self.model_flops_global / hlo_global
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of compute peak: t_compute / max(all terms),
+        i.e. how close the cell sits to being compute-bound."""
+        t_max = max(self.t_compute, self.t_memory, self.t_collective, 1e-30)
+        return self.t_compute / t_max
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": f"{self.t_compute:.3e}",
+            "t_memory_s": f"{self.t_memory:.3e}",
+            "t_collective_s": f"{self.t_collective:.3e}",
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": f"{self.useful_flops_ratio:.2f}",
+            "roofline_fraction": f"{self.roofline_fraction:.2f}",
+            "hbm_bytes_per_dev": f"{self.arg_bytes + self.temp_bytes:.3e}",
+            "notes": self.notes,
+        }
+
+
+def estimate_activation_bytes(cfg, shape, kind: str, data_size: int,
+                              model_size: int, accum: int = 1,
+                              act_seq: bool = False) -> float:
+    """Coarse analytic per-device activation footprint on the TPU target
+    (remat policy: per-layer dot outputs saved; flash attention — scores
+    never materialize).  XLA-CPU ``memory_analysis`` temp numbers are not
+    representative of the TPU executable (no fusion-aware buffer packing,
+    naive attention transients), so the fits-in-HBM call uses this model;
+    both numbers are reported.
+    """
+    from repro.config import (DetectorConfig, DiTConfig, EfficientNetConfig,
+                              TransformerConfig, ViTConfig)
+    B = max(shape.global_batch // (accum * data_size), 1)
+
+    if isinstance(cfg, TransformerConfig):
+        d = cfg.d_model
+        if cfg.moe:
+            ff_active = (cfg.moe.top_k + cfg.moe.n_shared) * \
+                (cfg.moe.d_ff_expert or cfg.d_ff)
+        else:
+            ff_active = cfg.d_ff
+        ff_dev = ff_active / (1 if cfg.moe else model_size)
+        if kind == "train":
+            tok = B * shape.seq_len
+            seq_shards = model_size if act_seq else 1
+            carry = tok * d * 2 / seq_shards            # layer-boundary x
+            if getattr(cfg, "remat_policy", "dots") == "minimal":
+                per_layer = carry
+            else:
+                heads_div = cfg.n_heads % model_size == 0
+                attn = tok * 2 * (2 * d / (model_size if heads_div else 1)
+                                  + 2 * cfg.n_kv_heads * cfg.head_dim /
+                                  (model_size if cfg.n_kv_heads %
+                                   model_size == 0 else 1))
+                mlp = tok * 2 * 2 * ff_dev
+                per_layer = carry + attn + mlp
+            logits = B * 512 * cfg.vocab / model_size * 4  # loss chunk
+            # attention transient is block-bounded on TPU (flash kernel
+            # VMEM working set), not O(S^2)
+            transient = 64 * 2**20
+            return cfg.n_layers * per_layer + logits + transient
+        if kind == "prefill":
+            tok = B * shape.seq_len
+            return 6 * tok * d * 2 + 64 * 2**20
+        if kind == "decode":
+            return 8 * B * d * 2 * cfg.n_layers
+    if isinstance(cfg, (ViTConfig, DiTConfig, DetectorConfig)):
+        d = cfg.d_model
+        if isinstance(cfg, DiTConfig):
+            tok = B * cfg.n_tokens(shape.img_res)
+        elif isinstance(cfg, ViTConfig):
+            side = (shape.img_res or cfg.img_res) // cfg.patch
+            tok = B * (side * side + 2)
+        else:
+            tok = B * cfg.n_tokens
+        ff_dev = getattr(cfg, "d_ff", 4 * d) / model_size
+        saved = tok * 2 * (4 * d + 2 * ff_dev)
+        n_live = cfg.n_layers if kind in ("train", "cls") else 2
+        return n_live * saved + tok * tok // max(B, 1) * 4  # + scores
+    if isinstance(cfg, EfficientNetConfig):
+        r = shape.img_res or cfg.img_res
+        # dominant early-stage feature maps, ~sum over stages of B*H*W*C
+        total = 0.0
+        res, c = r // 2, cfg.scaled_channels(cfg.stem_channels)
+        for (e, ch, rep, st, k) in cfg.STAGES:
+            res = res // st
+            c = cfg.scaled_channels(ch)
+            total += cfg.scaled_repeats(rep) * res * res * c * e * 2
+        n_live = 1.0 if kind == "serve" else 1.0  # BN saves activations
+        return B * total * n_live
+    return 0.0
+
+
+def model_flops(n_params: int, n_active: int, shape, kind: str,
+                cfg=None) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (fwd-only), N = active params.
+
+    D (tokens processed): LM = batch*seq (train/prefill) or batch (decode);
+    vision/diffusion = batch * tokens; gen multiplies by sampler steps.
+    """
+    if kind in ("train", "cls"):
+        mult = 6.0
+    else:
+        mult = 2.0
+    if shape.seq_len:
+        d = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    elif cfg is not None and callable(getattr(cfg, "n_tokens", None)):
+        d = shape.global_batch * cfg.n_tokens(shape.img_res)   # DiT
+    elif cfg is not None and hasattr(cfg, "patch") and shape.img_res:
+        side = shape.img_res // cfg.patch                       # ViT/DeiT
+        d = shape.global_batch * (side * side + 1)
+    elif shape.img_res:
+        d = shape.global_batch * (shape.img_res // 16) ** 2
+    else:
+        d = shape.global_batch
+    steps = shape.steps if kind == "gen" else 1
+    return mult * n_active * d * steps

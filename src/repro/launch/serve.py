@@ -1,0 +1,130 @@
+"""Serving driver: the full Tangram pipeline against a real jit'd model.
+
+Edge side per frame: GMM background subtraction -> RoI extraction ->
+adaptive frame partitioning (Alg. 1).  Cloud side: SLO-aware invoker
+(Alg. 2) -> stitch kernel assembles canvases -> detector ``serve_step``
+executes the batch.  On CPU this runs a reduced detector; the platform
+billing and SLO accounting are the same objects the simulator uses.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import param as param_lib
+from repro.config import DetectorConfig
+from repro.core import gmm, partitioning, rois
+from repro.core.invoker import SLOAwareInvoker
+from repro.core.latency import measure
+from repro.core.stitching import Canvas
+from repro.data.synthetic import Scene, preset
+from repro.kernels.stitch import ops as stitch_ops
+from repro.models import detector as detector_lib
+from repro.sharding import ShardingConfig
+
+
+def build_detector(canvas: int = 256):
+    cfg = DetectorConfig(name="serve-det", canvas=canvas, patch=32,
+                         n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                         param_dtype="float32", compute_dtype="float32")
+    rules = ShardingConfig.make().rules
+    params = param_lib.init_params(jax.random.PRNGKey(0),
+                                   detector_lib.param_specs(cfg))
+    serve_fn = jax.jit(lambda p, x: detector_lib.serve(cfg, p, x, rules))
+    return cfg, params, serve_fn
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--frames", type=int, default=40)
+    p.add_argument("--slo", type=float, default=1.0)
+    p.add_argument("--canvas", type=int, default=256)
+    p.add_argument("--scene", type=int, default=0)
+    p.add_argument("--use-pallas-stitch", action="store_true",
+                   help="assemble canvases with the Pallas kernel "
+                        "(interpret mode on CPU)")
+    args = p.parse_args(argv)
+
+    cfg, params, serve_fn = build_detector(args.canvas)
+    m = n = args.canvas
+
+    # offline profiling (the paper's 1000-iteration stage, scaled down)
+    def run_batch(b):
+        x = jnp.zeros((b, m, n, 3), jnp.float32)
+        jax.block_until_ready(serve_fn(params, x))
+    table = measure(run_batch, batch_sizes=(1, 2, 4), iters=5, warmup=1)
+    print("latency table:",
+          {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
+
+    scene = Scene(preset(args.scene, width=2 * args.canvas,
+                         height=args.canvas))
+    state = gmm.init_state(scene.cfg.height, scene.cfg.width)
+    invoker = SLOAwareInvoker(m, n, table, max_canvases=4)
+
+    n_patches = n_invocations = n_violations = 0
+    t_start = time.time()
+    frames_store = {}
+    for t, frame, gt in scene.frames(args.frames):
+        state, fg = gmm.update_jit(state, jnp.asarray(frame))
+        if t < 1.0:
+            continue
+        boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
+        boxes_np = np.asarray(boxes)[np.asarray(valid)]
+        patches = partitioning.partition_host(
+            boxes_np, scene.cfg.width, scene.cfg.height, 4, 4,
+            frame_id=scene.t, t_gen=t, slo=args.slo)
+        # enclosing rects can exceed zones; clamp to the canvas tile
+        patches = [partitioning.Patch(
+            p.x0, p.y0, min(p.x1, p.x0 + n), min(p.y1, p.y0 + m),
+            p.frame_id, p.camera_id, p.t_gen, p.slo) for p in patches]
+        frames_store[scene.t] = scene.render_rgb()
+        now = time.time() - t_start
+        for patch in patches:
+            n_patches += 1
+            fired = invoker.on_patch(now, patch)
+            fired += filter(None, [invoker.poll(now)])
+            for inv in fired:
+                n_invocations += 1
+                _execute(inv, frames_store, serve_fn, params, m, n,
+                         args.use_pallas_stitch)
+    last = invoker.flush(time.time() - t_start)
+    if last:
+        n_invocations += 1
+        _execute(last, frames_store, serve_fn, params, m, n,
+                 args.use_pallas_stitch)
+    print(f"served {n_patches} patches in {n_invocations} invocations "
+          f"({time.time()-t_start:.1f}s wall)")
+
+
+def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas):
+    """Assemble canvases (stitch kernel) and run the detector batch."""
+    crops, idx_map = [], {}
+    for i, patch in enumerate(inv.patches):
+        frame = frames_store.get(patch.frame_id)
+        if frame is None:
+            crops.append(np.zeros((patch.h, patch.w, 3), np.float32))
+        else:
+            crops.append(frame[patch.y0:patch.y1, patch.x0:patch.x1])
+    hmax = max((c.shape[0] for c in crops), default=1)
+    wmax = max((c.shape[1] for c in crops), default=1)
+    k = max((len(c.placements) for c in inv.canvases), default=1)
+    slots, records = stitch_ops.pack_host(crops, inv.patches, inv.canvases,
+                                          hmax, wmax, k)
+    impl = "pallas_interpret" if use_pallas else "xla"
+    canvases = stitch_ops.stitch_canvases(
+        jnp.asarray(slots), jnp.asarray(records), m, n, impl=impl)
+    obj, boxes = serve_fn(params, canvases)
+    jax.block_until_ready(obj)
+    return obj, boxes
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX model definitions with logical-axis sharding."""

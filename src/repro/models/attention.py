@@ -1,0 +1,322 @@
+"""Grouped-query attention with RoPE: train/prefill, and KV-cache decode.
+
+The XLA einsum path below is the dry-run/compile path; the Pallas flash
+kernel (``repro.kernels.attention``) is the TPU execution path and is
+numerically validated against this module in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.param import spec
+from repro.sharding import with_logical_constraint
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- specs ----
+
+def _wspec(shape, axes, dtype, quant: bool, scale_axes_from: int = 1):
+    """Weight spec; int8 + per-out-channel scale when quantized."""
+    if quant:
+        return {"q": spec(shape, axes, dtype=jnp.int8, init="zeros"),
+                "scale": spec(shape[scale_axes_from:],
+                              axes[scale_axes_from:], dtype=jnp.float32,
+                              init="ones")}
+    return spec(shape, axes, dtype=dtype, fan_in_axes=tuple(
+        range(scale_axes_from)))
+
+
+def weight(p, compute_dtype):
+    """Materialize a (possibly int8-quantized) weight for compute."""
+    if isinstance(p, dict) and "q" in p:
+        w = p["q"].astype(compute_dtype)
+        scale = p["scale"].astype(compute_dtype)
+        return w * scale[(None,) * (w.ndim - scale.ndim)]
+    return p.astype(compute_dtype)
+
+
+def gqa_specs(d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+              dtype, fused: bool = False, quant: bool = False):
+    wo = _wspec((n_heads, head_dim, d_model), ("heads", "head_dim", "embed"),
+                dtype, quant, scale_axes_from=2)
+    if fused:
+        # single (d, H + 2*Kv, dh) projection: one MXU pass, one HBM read
+        return {
+            "wqkv": _wspec((d_model, n_heads + 2 * n_kv_heads, head_dim),
+                           ("embed", "heads", "head_dim"), dtype, quant),
+            "wo": wo,
+        }
+    return {
+        "wq": _wspec((d_model, n_heads, head_dim),
+                     ("embed", "heads", "head_dim"), dtype, quant),
+        "wk": _wspec((d_model, n_kv_heads, head_dim),
+                     ("embed", "kv_heads", "head_dim"), dtype, quant),
+        "wv": _wspec((d_model, n_kv_heads, head_dim),
+                     ("embed", "kv_heads", "head_dim"), dtype, quant),
+        "wo": wo,
+    }
+
+
+# ------------------------------------------------------------- attention ----
+
+def _qkv(params, x, n_kv_heads: int, compute_dtype):
+    if "wqkv" in params:
+        qkv = jnp.einsum("bsd,dhk->bshk", x,
+                         weight(params["wqkv"], compute_dtype))
+        n_heads = qkv.shape[2] - 2 * n_kv_heads
+        return (qkv[:, :, :n_heads], qkv[:, :, n_heads:n_heads + n_kv_heads],
+                qkv[:, :, n_heads + n_kv_heads:])
+    q = jnp.einsum("bsd,dhk->bshk", x, weight(params["wq"], compute_dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, weight(params["wk"], compute_dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, weight(params["wv"], compute_dtype))
+    return q, k, v
+
+
+def _gqa_scores(q, k, n_kv_heads: int):
+    """q: (B,Sq,H,D) -> grouped (B,Sq,Kv,G,D); scores (B,Kv,G,Sq,Skv) fp32."""
+    B, Sq, H, D = q.shape
+    G = H // n_kv_heads
+    qg = q.reshape(B, Sq, n_kv_heads, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    return scores * (1.0 / jnp.sqrt(D).astype(jnp.float32))
+
+
+def _gqa_out(probs, v, params, compute_dtype):
+    """probs: (B,Kv,G,Sq,Skv); v: (B,Skv,Kv,D) -> (B,Sq,d_model)."""
+    B, Kv, G, Sq, _ = probs.shape
+    D = v.shape[-1]
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(compute_dtype), v)
+    ctx = ctx.reshape(B, Sq, Kv * G, D)
+    return jnp.einsum("bshk,hkd->bsd", ctx, weight(params["wo"], compute_dtype))
+
+
+def attention(params, x, *, n_heads: int, n_kv_heads: int, rope_theta: float,
+              compute_dtype, rules, positions: Optional[jnp.ndarray] = None,
+              impl: str = "xla"):
+    """Causal self-attention for train/prefill.  x: (B, S, d)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(params, x, n_kv_heads, compute_dtype)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    q = with_logical_constraint(q, ("batch", "seq", "heads", "head_dim"), rules)
+    k = with_logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"), rules)
+
+    if impl in ("flash", "flash_interpret"):
+        from repro.kernels.attention import ops as flash_ops
+        ctx = flash_ops.flash_attention(
+            q, k, v, causal=True, interpret=(impl == "flash_interpret"))
+        B_, Sq, H, D = ctx.shape
+        out = jnp.einsum("bshk,hkd->bsd", ctx, weight(params["wo"], compute_dtype))
+        return with_logical_constraint(out, ("batch", "seq", "embed"), rules)
+
+    if impl == "chunked":
+        ctx = _chunked_causal(q, k, v, n_kv_heads)
+        out = jnp.einsum("bshk,hkd->bsd", ctx,
+                         weight(params["wo"], compute_dtype))
+        return with_logical_constraint(out, ("batch", "seq", "embed"), rules)
+
+    scores = _gqa_scores(q, k, n_kv_heads)
+    causal = (jnp.arange(S)[:, None] >= jnp.arange(S)[None, :])
+    scores = jnp.where(causal[None, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, params, compute_dtype)
+    return with_logical_constraint(out, ("batch", "seq", "embed"), rules)
+
+
+def _chunk_size(s: int) -> int:
+    """Tile size for the chunked stand-in: <= 8 chunks per axis, >= 2048."""
+    c = max(2048, s // 8)
+    while s % c:
+        c += 1
+    return min(c, s)
+
+
+def _chunked_causal(q, k, v, n_kv_heads: int):
+    """Online-softmax attention over KV chunks, unrolled python loops so
+    the dry-run HLO carries exact per-chunk flop/traffic accounting.
+    This is the pure-XLA stand-in for the Pallas flash kernel: same
+    O(S) memory asymptotics (scores never materialize at S x S).
+    q: (B,S,H,D); k,v: (B,S,Kv,D) -> ctx (B,S,H,D).  Causal."""
+    B, S, H, D = q.shape
+    G = H // n_kv_heads
+    cq = ckv = _chunk_size(S)
+    scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    out = []
+    for qs in range(0, S, cq):
+        qg = q[:, qs:qs + cq].reshape(B, cq, n_kv_heads, G, D)
+        m = jnp.full((B, n_kv_heads, G, cq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, n_kv_heads, G, cq), jnp.float32)
+        acc = jnp.zeros((B, cq, n_kv_heads, G, D), jnp.float32)
+        for ks in range(0, qs + cq, ckv):
+            ke = min(ks + ckv, S)
+            kc, vc = k[:, ks:ke], v[:, ks:ke]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc).astype(jnp.float32)
+            s = s * scale
+            rows = qs + jnp.arange(cq)[:, None]
+            cols = ks + jnp.arange(ke - ks)[None, :]
+            s = jnp.where((rows >= cols)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + jnp.sum(p, axis=-1)
+            acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bqhgd", p.astype(q.dtype), vc).astype(jnp.float32)
+            m = m_new
+        ctx = acc / l.transpose(0, 3, 1, 2)[..., None]
+        out.append(ctx.reshape(B, cq, H, D).astype(q.dtype))
+    return jnp.concatenate(out, axis=1)
+
+
+def encoder_attention(params, x, *, n_heads: int, compute_dtype, rules,
+                      impl: str = "xla"):
+    """Bidirectional MHA (no RoPE) for ViT/DiT encoders.  x: (B, S, d)."""
+    q, k, v = _qkv(params, x, n_heads, compute_dtype)
+    if impl in ("flash", "flash_interpret"):
+        from repro.kernels.attention import ops as flash_ops
+        ctx = flash_ops.flash_attention(
+            q, k, v, causal=False, interpret=(impl == "flash_interpret"))
+        return jnp.einsum("bshk,hkd->bsd", ctx,
+                          weight(params["wo"], compute_dtype))
+    scores = _gqa_scores(q, k, n_heads)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, params, compute_dtype)
+    return with_logical_constraint(out, ("batch", "seq", "embed"), rules)
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+               dtype, quant_kv: bool = False):
+    shape = (batch, max_seq, n_kv_heads, head_dim)
+    if quant_kv:
+        sshape = (batch, max_seq, n_kv_heads)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.int8),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+                dtype, quant_kv: bool = False):
+    """ShapeDtypeStruct cache stand-ins for the dry-run."""
+    shape = (batch, max_seq, n_kv_heads, head_dim)
+    if quant_kv:
+        sshape = (batch, max_seq, n_kv_heads)
+        return {"k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32)}
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+CACHE_AXES = ("decode_batch", "kv_seq", "kv_heads", "head_dim")
+CACHE_SCALE_AXES = ("decode_batch", "kv_seq", "kv_heads")
+
+
+def _quantize_kv(x):
+    """x: (B, 1, Kv, D) -> (int8 values, (B, 1, Kv) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_attention(params, x, cache, pos, *, n_heads: int, n_kv_heads: int,
+                     rope_theta: float, compute_dtype, rules,
+                     impl: str = "xla", cache_update: str = "auto"):
+    """One-token decode.  x: (B, 1, d); cache k/v: (B, Smax, Kv, D);
+    pos: scalar int32 current position.  Returns (out, new_cache).
+
+    Cost is O(Smax) per step — linear in context, not quadratic (the
+    full-attention ``long_500k`` cells rely on this; see DESIGN.md §5).
+
+    cache_update: "dus" (dynamic_update_slice), "masked" (one-hot blend),
+    or "auto" — masked when the cache seq axis is sharded.  A dynamic
+    slice update at a data-dependent position on a *sharded* axis makes
+    GSPMD regather the whole cache (§Perf iteration 2.1); the masked
+    blend is elementwise and sharding-oblivious.
+    """
+    B, one, _ = x.shape
+    q, k_new, v_new = _qkv(params, x, n_kv_heads, compute_dtype)
+    positions = jnp.full((B, 1), pos)
+    q = apply_rope(q, positions, rope_theta)
+    k_new = apply_rope(k_new, positions, rope_theta)
+
+    quant_kv = "k_scale" in cache
+    if cache_update == "auto":
+        cache_update = "masked" if (rules.get("kv_seq") or quant_kv) else "dus"
+
+    if quant_kv:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None]
+        k = jnp.where(sel[..., None], kq, cache["k"])
+        v = jnp.where(sel[..., None], vq, cache["v"])
+        k_scale = jnp.where(sel, ks, cache["k_scale"])
+        v_scale = jnp.where(sel, vs, cache["v_scale"])
+        k = with_logical_constraint(k, CACHE_AXES, rules)
+        v = with_logical_constraint(v, CACHE_AXES, rules)
+        new_cache = {"k": k, "k_scale": k_scale, "v": v, "v_scale": v_scale}
+        # dequantize for attention (int8 stream, registers-dequant on TPU)
+        k = k.astype(compute_dtype) * k_scale.astype(compute_dtype)[..., None]
+        v = v.astype(compute_dtype) * v_scale.astype(compute_dtype)[..., None]
+    elif cache_update == "masked":
+        sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+        k = jnp.where(sel, k_new.astype(cache["k"].dtype), cache["k"])
+        v = jnp.where(sel, v_new.astype(cache["v"].dtype), cache["v"])
+        k = with_logical_constraint(k, CACHE_AXES, rules)
+        v = with_logical_constraint(v, CACHE_AXES, rules)
+        new_cache = {"k": k, "v": v}
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k = with_logical_constraint(k, CACHE_AXES, rules)
+        v = with_logical_constraint(v, CACHE_AXES, rules)
+        new_cache = {"k": k, "v": v}
+
+    if impl in ("flash_decode", "flash_decode_interpret"):
+        from repro.kernels.attention import ops as flash_ops
+        ctx = flash_ops.flash_decode(
+            q, k.astype(compute_dtype), v.astype(compute_dtype), pos,
+            interpret=(impl == "flash_decode_interpret"))
+        out = jnp.einsum("bshk,hkd->bsd", ctx,
+                         weight(params["wo"], compute_dtype))
+        return out, new_cache
+
+    scores = _gqa_scores(q, k.astype(compute_dtype), n_kv_heads)  # (B,Kv,G,1,Smax)
+    valid = (jnp.arange(k.shape[1]) <= pos)[None, None, None, None, :]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v.astype(compute_dtype), params, compute_dtype)
+    return out, new_cache

@@ -1,0 +1,128 @@
+"""Anchor-free single-stage detector on a ViT trunk — the Tangram "YOLOv8x".
+
+The paper states Tangram is orthogonal to the DNN; we use a ViT backbone
+over the 1024x1024 canvas (patch 32 -> 32x32 grid) with a per-cell head
+predicting (objectness, cx, cy, w, h).  Targets are grid-assigned boxes
+(FCOS-style center assignment).  This is the model the serverless function
+executes on stitched canvases, and the model trained in
+``examples/train_detector.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import DetectorConfig, ViTConfig, dtype_of
+from repro.models import layers, vit
+from repro.param import spec
+from repro.sharding import with_logical_constraint
+
+
+def _trunk_cfg(cfg: DetectorConfig) -> ViTConfig:
+    return ViTConfig(
+        name=f"{cfg.name}-trunk", img_res=cfg.canvas, patch=cfg.patch,
+        n_layers=cfg.n_layers, d_model=cfg.d_model, n_heads=cfg.n_heads,
+        d_ff=cfg.d_ff, n_classes=1, param_dtype=cfg.param_dtype,
+        compute_dtype=cfg.compute_dtype, remat=cfg.remat,
+        scan_layers=cfg.scan_layers)
+
+
+def param_specs(cfg: DetectorConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    t = _trunk_cfg(cfg)
+    trunk = vit.param_specs(t)
+    # replace classification head with a detection head; drop cls machinery
+    del trunk["head"], trunk["cls_token"]
+    side = cfg.canvas // cfg.patch
+    trunk["pos_embed"] = spec((1, side * side, cfg.d_model),
+                              (None, "seq", "embed"), dtype=dtype, init="pos")
+    return {
+        "trunk": trunk,
+        "det_head": layers.dense_specs(cfg.d_model, 5, in_axis="embed",
+                                       out_axis=None, dtype=dtype, bias=True),
+    }
+
+
+def forward(cfg: DetectorConfig, params, canvases, rules):
+    """canvases: (B, M, N, 3) -> (B, side, side, 5) raw head outputs."""
+    cdt = dtype_of(cfg.compute_dtype)
+    t = _trunk_cfg(cfg)
+    tp = params["trunk"]
+    x = layers.dense(tp["patch_embed"], vit.patchify(canvases, cfg.patch), cdt)
+    x = x + tp["pos_embed"].astype(cdt)
+    x = with_logical_constraint(x, ("canvas", "seq", "embed"), rules)
+    x = vit._encoder(t, tp, x, rules, "xla")
+    out = layers.dense(params["det_head"], x, cdt)
+    side = cfg.canvas // cfg.patch
+    return out.reshape(canvases.shape[0], side, side, 5)
+
+
+def decode_boxes(cfg: DetectorConfig, raw: jnp.ndarray,
+                 obj_threshold: float = 0.5):
+    """raw: (B, s, s, 5) -> (obj_prob, boxes_xyxy in canvas pixels)."""
+    side = raw.shape[1]
+    cell = cfg.canvas / side
+    obj = jax.nn.sigmoid(raw[..., 0].astype(jnp.float32))
+    gy, gx = jnp.meshgrid(jnp.arange(side), jnp.arange(side), indexing="ij")
+    cx = (gx + jax.nn.sigmoid(raw[..., 1].astype(jnp.float32))) * cell
+    cy = (gy + jax.nn.sigmoid(raw[..., 2].astype(jnp.float32))) * cell
+    w = jnp.exp(jnp.clip(raw[..., 3].astype(jnp.float32), -6, 6)) * cell
+    h = jnp.exp(jnp.clip(raw[..., 4].astype(jnp.float32), -6, 6)) * cell
+    boxes = jnp.stack([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2], -1)
+    return obj, boxes
+
+
+def targets_from_boxes(cfg: DetectorConfig, boxes: jnp.ndarray,
+                       valid: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Grid-assign ground-truth boxes (B, K, 4) xyxy + valid mask (B, K).
+
+    Returns (obj_target (B,s,s), box_target (B,s,s,4) = [dx, dy, logw, logh]).
+    Later boxes overwrite earlier ones on cell collision (rare for person-
+    scale objects on a 32px grid).
+    """
+    side = cfg.canvas // cfg.patch
+    cell = cfg.canvas / side
+    B, K, _ = boxes.shape
+    cx = (boxes[..., 0] + boxes[..., 2]) / 2
+    cy = (boxes[..., 1] + boxes[..., 3]) / 2
+    w = jnp.maximum(boxes[..., 2] - boxes[..., 0], 1.0)
+    h = jnp.maximum(boxes[..., 3] - boxes[..., 1], 1.0)
+    gx = jnp.clip((cx / cell).astype(jnp.int32), 0, side - 1)
+    gy = jnp.clip((cy / cell).astype(jnp.int32), 0, side - 1)
+
+    obj_t = jnp.zeros((B, side, side), jnp.float32)
+    box_t = jnp.zeros((B, side, side, 4), jnp.float32)
+    bidx = jnp.arange(B)[:, None].repeat(K, 1)
+    vals = jnp.stack([cx / cell - gx, cy / cell - gy,
+                      jnp.log(w / cell), jnp.log(h / cell)], -1)
+    obj_t = obj_t.at[bidx, gy, gx].max(valid.astype(jnp.float32))
+    box_t = box_t.at[bidx, gy, gx].set(
+        vals * valid[..., None].astype(jnp.float32))
+    return obj_t, box_t
+
+
+def detection_loss(cfg: DetectorConfig, params, batch, rules):
+    """batch: {canvases (B,M,N,3), boxes (B,K,4), valid (B,K)} -> scalar."""
+    raw = forward(cfg, params, batch["canvases"], rules).astype(jnp.float32)
+    obj_t, box_t = targets_from_boxes(cfg, batch["boxes"], batch["valid"])
+    # focal-ish BCE on objectness
+    obj_logit = raw[..., 0]
+    p = jax.nn.sigmoid(obj_logit)
+    bce = -(obj_t * jax.nn.log_sigmoid(obj_logit) +
+            (1 - obj_t) * jax.nn.log_sigmoid(-obj_logit))
+    focal = bce * jnp.where(obj_t > 0, (1 - p) ** 2, p ** 2)
+    obj_loss = jnp.mean(focal)
+    # L1 on box params at positive cells
+    pred = jnp.concatenate([jax.nn.sigmoid(raw[..., 1:3]),
+                            raw[..., 3:5]], -1)
+    l1 = jnp.sum(jnp.abs(pred - box_t), -1) * obj_t
+    box_loss = jnp.sum(l1) / jnp.maximum(jnp.sum(obj_t), 1.0)
+    return obj_loss + box_loss
+
+
+def serve(cfg: DetectorConfig, params, canvases, rules):
+    """The serverless function body: canvases -> (obj, boxes)."""
+    raw = forward(cfg, params, canvases, rules)
+    return decode_boxes(cfg, raw)

@@ -1,0 +1,168 @@
+"""EfficientNet (MBConv + SE) with compound scaling — b7: w2.0 d3.1 r600.
+
+Convolutions use NHWC / HWIO layouts.  BatchNorm runs in sync-BN style:
+batch statistics are computed with jnp.mean over the (sharded) batch axis,
+so XLA inserts the cross-replica all-reduce automatically.  Running stats
+are kept as parameters for the serve path.
+
+Sharding: conv weights are replicated (66M params — DP-dominant regime,
+see DESIGN.md); the classifier head shards over "model".
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import EfficientNetConfig, dtype_of
+from repro.param import spec, tree_map_specs, count_params as _count
+from repro.sharding import with_logical_constraint
+
+
+def block_args(cfg: EfficientNetConfig) -> List[dict]:
+    """Expand the B0 stage template with compound scaling."""
+    blocks = []
+    in_c = cfg.scaled_channels(cfg.stem_channels)
+    for (expand, c, repeats, stride, k) in cfg.STAGES:
+        out_c = cfg.scaled_channels(c)
+        for i in range(cfg.scaled_repeats(repeats)):
+            blocks.append(dict(
+                in_c=in_c, out_c=out_c, expand=expand,
+                stride=stride if i == 0 else 1, kernel=k))
+            in_c = out_c
+    return blocks
+
+
+# ----------------------------------------------------------------- specs ----
+
+def _conv_specs(k: int, in_c: int, out_c: int, dtype, groups: int = 1):
+    return {"kernel": spec((k, k, in_c // groups, out_c),
+                           (None, None, "in_channels", None), dtype=dtype,
+                           fan_in_axes=(0, 1, 2))}
+
+
+def _bn_specs(c: int, dtype):
+    return {
+        "scale": spec((c,), (None,), dtype=dtype, init="ones"),
+        "bias": spec((c,), (None,), dtype=dtype, init="zeros"),
+        "mean": spec((c,), (None,), dtype=jnp.float32, init="zeros"),
+        "var": spec((c,), (None,), dtype=jnp.float32, init="ones"),
+    }
+
+
+def _block_specs(b: dict, cfg: EfficientNetConfig, dtype):
+    mid = b["in_c"] * b["expand"]
+    se_c = max(1, int(b["in_c"] * 0.25))
+    p = {}
+    if b["expand"] != 1:
+        p["expand_conv"] = _conv_specs(1, b["in_c"], mid, dtype)
+        p["expand_bn"] = _bn_specs(mid, dtype)
+    p["dw_conv"] = {"kernel": spec((b["kernel"], b["kernel"], 1, mid),
+                                   (None, None, None, None), dtype=dtype,
+                                   fan_in_axes=(0, 1))}
+    p["dw_bn"] = _bn_specs(mid, dtype)
+    p["se_reduce"] = _conv_specs(1, mid, se_c, dtype)
+    p["se_expand"] = _conv_specs(1, se_c, mid, dtype)
+    p["project_conv"] = _conv_specs(1, mid, b["out_c"], dtype)
+    p["project_bn"] = _bn_specs(b["out_c"], dtype)
+    return p
+
+
+def param_specs(cfg: EfficientNetConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    stem_c = cfg.scaled_channels(cfg.stem_channels)
+    head_c = cfg.scaled_channels(cfg.head_channels)
+    blocks = block_args(cfg)
+    return {
+        "stem_conv": _conv_specs(3, 3, stem_c, dtype),
+        "stem_bn": _bn_specs(stem_c, dtype),
+        "blocks": {f"block_{i}": _block_specs(b, cfg, dtype)
+                   for i, b in enumerate(blocks)},
+        "head_conv": _conv_specs(1, blocks[-1]["out_c"], head_c, dtype),
+        "head_bn": _bn_specs(head_c, dtype),
+        "classifier": {
+            "kernel": spec((head_c, cfg.n_classes), ("embed", "vocab"),
+                           dtype=dtype, fan_in_axes=(0,)),
+            "bias": spec((cfg.n_classes,), ("vocab",), dtype=dtype,
+                         init="zeros"),
+        },
+    }
+
+
+def count_params(cfg: EfficientNetConfig) -> int:
+    return _count(param_specs(cfg))
+
+
+# ------------------------------------------------------------------ ops -----
+
+def _conv(p, x, stride: int, cdt, groups: int = 1):
+    return jax.lax.conv_general_dilated(
+        x.astype(cdt), p["kernel"].astype(cdt),
+        window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+
+
+def _bn(p, x, train: bool, cdt, eps: float = 1e-3):
+    x32 = x.astype(jnp.float32)
+    if train:
+        mean = jnp.mean(x32, axis=(0, 1, 2))
+        var = jnp.var(x32, axis=(0, 1, 2))
+    else:
+        mean, var = p["mean"], p["var"]
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(cdt)
+
+
+def _mbconv(p, b: dict, x, train: bool, cdt):
+    mid = b["in_c"] * b["expand"]
+    inp = x
+    if b["expand"] != 1:
+        x = jax.nn.swish(_bn(p["expand_bn"], _conv(p["expand_conv"], x, 1, cdt),
+                             train, cdt))
+    x = jax.nn.swish(_bn(p["dw_bn"],
+                         _conv(p["dw_conv"], x, b["stride"], cdt, groups=mid),
+                         train, cdt))
+    # squeeze-excite
+    se = jnp.mean(x, axis=(1, 2), keepdims=True)
+    se = jax.nn.swish(_conv(p["se_reduce"], se, 1, cdt))
+    se = jax.nn.sigmoid(_conv(p["se_expand"], se, 1, cdt))
+    x = x * se
+    x = _bn(p["project_bn"], _conv(p["project_conv"], x, 1, cdt), train, cdt)
+    if b["stride"] == 1 and b["in_c"] == b["out_c"]:
+        x = x + inp
+    return x
+
+
+def forward(cfg: EfficientNetConfig, params, images, rules, *,
+            train: bool = False):
+    """images: (B, H, W, 3) -> logits (B, n_classes)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = images.astype(cdt)
+    x = with_logical_constraint(x, ("batch", "img_h", "img_w", None), rules)
+    x = jax.nn.swish(_bn(params["stem_bn"],
+                         _conv(params["stem_conv"], x, 2, cdt), train, cdt))
+    for i, b in enumerate(block_args(cfg)):
+        x = _mbconv(params["blocks"][f"block_{i}"], b, x, train, cdt)
+    x = jax.nn.swish(_bn(params["head_bn"],
+                         _conv(params["head_conv"], x, 1, cdt), train, cdt))
+    x = jnp.mean(x, axis=(1, 2))                       # global average pool
+    logits = jnp.dot(x, params["classifier"]["kernel"].astype(cdt)) \
+        + params["classifier"]["bias"].astype(cdt)
+    return logits
+
+
+def cls_loss(cfg: EfficientNetConfig, params, batch, rules):
+    logits = forward(cfg, params, batch["images"], rules, train=True)
+    lg = logits.astype(jnp.float32)
+    labels = jnp.clip(batch["labels"], 0, cfg.n_classes - 1)
+    return jnp.mean(jax.nn.logsumexp(lg, -1) -
+                    jnp.take_along_axis(lg, labels[:, None], 1,
+                                        mode="clip")[:, 0])
+
+
+def serve(cfg: EfficientNetConfig, params, images, rules):
+    return forward(cfg, params, images, rules, train=False)

@@ -1,0 +1,193 @@
+"""Shared primitive layers: dense, norms, embeddings.
+
+Functional style: ``*_specs`` builds ParamSpec subtrees, ``apply`` functions
+take the materialized (or abstract, under tracing) param subtree.
+Norm statistics always accumulate in float32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import spec
+
+
+# ---------------------------------------------------------------- dense ----
+
+def dense_specs(d_in: int, d_out: int, *, in_axis: Optional[str],
+                out_axis: Optional[str], dtype, bias: bool = False,
+                init_scale: float = 1.0, zero_init: bool = False,
+                quant: bool = False):
+    if quant:
+        # int8 weight + per-output-channel fp scale (serving residency)
+        p = {
+            "kernel_q": spec((d_in, d_out), (in_axis, out_axis),
+                             dtype=jnp.int8, init="zeros"),
+            "kernel_scale": spec((d_out,), (out_axis,), dtype=jnp.float32,
+                                 init="ones"),
+        }
+    else:
+        p = {
+            "kernel": spec((d_in, d_out), (in_axis, out_axis), dtype=dtype,
+                           init="zeros" if zero_init else "normal",
+                           scale=init_scale, fan_in_axes=(0,)),
+        }
+    if bias:
+        p["bias"] = spec((d_out,), (out_axis,), dtype=dtype, init="zeros")
+    return p
+
+
+def dense(params, x, compute_dtype):
+    if "kernel_q" in params:
+        w = params["kernel_q"].astype(compute_dtype) \
+            * params["kernel_scale"].astype(compute_dtype)[None, :]
+        y = jnp.dot(x.astype(compute_dtype), w)
+    else:
+        y = jnp.dot(x.astype(compute_dtype),
+                    params["kernel"].astype(compute_dtype))
+    if "bias" in params:
+        y = y + params["bias"].astype(compute_dtype)
+    return y
+
+
+def quantize_dense(kernel) -> dict:
+    """bf16/f32 kernel -> {kernel_q, kernel_scale} (per-out-channel)."""
+    k32 = jnp.asarray(kernel, jnp.float32)
+    scale = jnp.max(jnp.abs(k32), axis=0) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(k32 / scale[None, :]), -127, 127).astype(jnp.int8)
+    return {"kernel_q": q, "kernel_scale": scale}
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_specs(d: int, dtype, axis: Optional[str] = "embed"):
+    return {"scale": spec((d,), (axis,), dtype=dtype, init="ones")}
+
+
+def rmsnorm(params, x, eps: float, compute_dtype):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(compute_dtype)
+
+
+def layernorm_specs(d: int, dtype, axis: Optional[str] = "embed",
+                    elementwise: bool = True):
+    if not elementwise:
+        return {}
+    return {
+        "scale": spec((d,), (axis,), dtype=dtype, init="ones"),
+        "bias": spec((d,), (axis,), dtype=dtype, init="zeros"),
+    }
+
+
+def layernorm(params, x, eps: float, compute_dtype):
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(compute_dtype)
+
+
+def modulated_layernorm(x, shift, scale, eps: float, compute_dtype):
+    """adaLN: parameter-free LN modulated by conditioning (DiT)."""
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale.astype(jnp.float32)[:, None, :]) \
+        + shift.astype(jnp.float32)[:, None, :]
+    return y.astype(compute_dtype)
+
+
+# ----------------------------------------------------------- embeddings ----
+
+def embed_specs(vocab: int, d: int, dtype):
+    return {"embedding": spec((vocab, d), ("vocab", "embed"), dtype=dtype,
+                              init="embed")}
+
+
+def embed_lookup(params, ids, compute_dtype):
+    table = params["embedding"]
+    # one-hot free gather; XLA shards the gather over the vocab axis.
+    # mode="clip": out-of-range ids clamp (jnp.take's default "fill"
+    # poisons the batch with NaNs — wrong failure mode for serving).
+    return jnp.take(table, ids, axis=0, mode="clip").astype(compute_dtype)
+
+
+def embed_logits(params, x, compute_dtype):
+    """Tied read-out: x @ E^T."""
+    table = params["embedding"].astype(compute_dtype)
+    return jnp.dot(x.astype(compute_dtype), table.T)
+
+
+# ------------------------------------------------------------------ misc ----
+
+def swiglu_specs(d: int, d_ff: int, dtype, in_axis="embed", out_axis="mlp",
+                 quant: bool = False):
+    return {
+        "gate": dense_specs(d, d_ff, in_axis=in_axis, out_axis=out_axis,
+                            dtype=dtype, quant=quant),
+        "up": dense_specs(d, d_ff, in_axis=in_axis, out_axis=out_axis,
+                          dtype=dtype, quant=quant),
+        "down": dense_specs(d_ff, d, in_axis=out_axis, out_axis=in_axis,
+                            dtype=dtype, quant=quant),
+    }
+
+
+def swiglu(params, x, compute_dtype):
+    g = jax.nn.silu(dense(params["gate"], x, compute_dtype))
+    u = dense(params["up"], x, compute_dtype)
+    return dense(params["down"], g * u, compute_dtype)
+
+
+def gelu_mlp_specs(d: int, d_ff: int, dtype, in_axis="embed", out_axis="mlp"):
+    return {
+        "fc1": dense_specs(d, d_ff, in_axis=in_axis, out_axis=out_axis,
+                           dtype=dtype, bias=True),
+        "fc2": dense_specs(d_ff, d, in_axis=out_axis, out_axis=in_axis,
+                           dtype=dtype, bias=True),
+    }
+
+
+def gelu_mlp(params, x, compute_dtype):
+    h = jax.nn.gelu(dense(params["fc1"], x, compute_dtype), approximate=True)
+    return dense(params["fc2"], h, compute_dtype)
+
+
+def chunked_softmax_xent(logits_fn, x, labels, vocab: int, chunk: int,
+                         compute_dtype, unroll: bool = False):
+    """Cross-entropy over the sequence in chunks to bound logits memory.
+
+    ``logits_fn(h_chunk) -> (B, c, V)``; x: (B, S, d); labels: (B, S).
+    Returns mean nll over all tokens (float32).  ``unroll`` replaces the
+    scan with a python loop (dry-run: exact HLO flop accounting).
+    """
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    def body(carry, inputs):
+        xc, yc = inputs                     # (B, c, d), (B, c)
+        logits = logits_fn(xc).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1,
+                                   mode="clip")[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(n_chunks):
+            total, _ = body(total, (x[:, i * chunk:(i + 1) * chunk],
+                                    labels[:, i * chunk:(i + 1) * chunk]))
+        return total / (B * S)
+
+    xs = x.reshape(B, n_chunks, chunk, -1).swapaxes(0, 1)
+    ys = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ys))
+    return total / (B * S)

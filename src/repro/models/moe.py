@@ -1,0 +1,148 @@
+"""Mixture-of-Experts block: GShard-style grouped top-k dispatch.
+
+Tokens are reshaped into groups of ``group_size``; per group a capacity-
+bounded one-hot dispatch tensor routes tokens to experts via einsums that
+XLA SPMD partitions cleanly (experts on the "model" mesh axis = expert
+parallelism, groups on the "data" axes).  Top-k routing builds the dispatch
+mask with k unrolled argmax rounds (k <= 8 everywhere in the pool).
+
+Shared experts (DeepSeekMoE) are a dense SwiGLU over all tokens, added to
+the routed output.  Capacity overflow drops tokens (standard GShard
+behaviour); ``capacity_factor`` and ``group_size`` are the knobs, and the
+dispatch-einsum FLOP overhead is part of the §Perf iteration space.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MoEConfig
+from repro.models import layers
+from repro.param import spec
+from repro.sharding import with_logical_constraint
+
+
+def _espec(shape, axes, dtype, quant: bool):
+    if quant:
+        return {"q": spec(shape, axes, dtype=jnp.int8, init="zeros"),
+                "scale": spec((shape[0], shape[2]), (axes[0], axes[2]),
+                              dtype=jnp.float32, init="ones")}
+    return spec(shape, axes, dtype=dtype, fan_in_axes=(1,))
+
+
+def _eweight(p, compute_dtype):
+    if isinstance(p, dict) and "q" in p:
+        return p["q"].astype(compute_dtype) \
+            * p["scale"].astype(compute_dtype)[:, None, :]
+    return p.astype(compute_dtype)
+
+
+def moe_specs(d_model: int, cfg: MoEConfig, dtype, quant: bool = False):
+    ff = cfg.d_ff_expert or d_model * 4
+    p = {
+        "router": spec((d_model, cfg.n_experts), ("embed", "expert"),
+                       dtype=jnp.float32, fan_in_axes=(0,)),
+        "wg": _espec((cfg.n_experts, d_model, ff),
+                     ("expert", "embed", "expert_mlp"), dtype, quant),
+        "wu": _espec((cfg.n_experts, d_model, ff),
+                     ("expert", "embed", "expert_mlp"), dtype, quant),
+        "wd": _espec((cfg.n_experts, ff, d_model),
+                     ("expert", "expert_mlp", "embed"), dtype, quant),
+    }
+    if cfg.n_shared:
+        p["shared"] = layers.swiglu_specs(d_model, cfg.n_shared * ff, dtype,
+                                          quant=quant)
+    return p
+
+
+def capacity(group_size: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(c, 1)
+
+
+def _top_k_dispatch(gates: jnp.ndarray, cfg: MoEConfig, cap: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """gates: (G, S, E) softmax router probs.
+
+    Returns (dispatch, combine, aux_loss):
+      dispatch: (G, S, E, C) 0/1 routing tensor
+      combine:  (G, S, E, C) gate-weighted routing tensor
+      aux_loss: load-balancing loss (scalar, fp32)
+    """
+    G, S, E = gates.shape
+    remaining = gates
+    counts = jnp.zeros((G, E), jnp.float32)
+    dispatch = jnp.zeros((G, S, E, cap), jnp.float32)
+    gate_sum = jnp.zeros((G, S), jnp.float32)
+    combine = jnp.zeros((G, S, E, cap), jnp.float32)
+
+    for _ in range(cfg.top_k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (G,S)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (G,S,E)
+        gate_i = jnp.sum(remaining * onehot, axis=-1)            # (G,S)
+        remaining = remaining * (1.0 - onehot)
+        # position of each token within its chosen expert's buffer
+        pos = jnp.cumsum(onehot, axis=1) - onehot + counts[:, None, :]
+        counts = counts + jnp.sum(onehot, axis=1)
+        pos_i = jnp.sum(pos * onehot, axis=-1)                   # (G,S)
+        keep = (pos_i < cap).astype(jnp.float32)                 # capacity drop
+        slot = jax.nn.one_hot(pos_i.astype(jnp.int32), cap, dtype=jnp.float32)
+        d_i = onehot[..., None] * slot[:, :, None, :] * keep[..., None, None]
+        dispatch = dispatch + d_i
+        combine = combine + gate_i[..., None, None] * d_i
+        gate_sum = gate_sum + gate_i * keep
+
+    # normalize combine weights over the kept top-k gates
+    combine = combine / jnp.maximum(gate_sum, 1e-9)[..., None, None]
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(
+        jnp.sum(dispatch, axis=-1), axis=1)                      # (G,E) f_e
+    frac_probs = jnp.mean(gates, axis=1)                         # (G,E) p_e
+    aux = E * jnp.mean(jnp.sum(frac_tokens * frac_probs, axis=-1))
+    return dispatch, combine, aux
+
+
+def moe_block(params, x, cfg: MoEConfig, *, compute_dtype, rules):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss)."""
+    B, S, d = x.shape
+    tokens = B * S
+    gs = min(cfg.group_size, tokens)
+    n_groups = tokens // gs
+    assert tokens % gs == 0, (tokens, gs)
+    cap = capacity(gs, cfg)
+
+    xt = x.reshape(n_groups, gs, d)
+    xt = with_logical_constraint(xt, ("expert_group", None, "embed"), rules)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine, aux = _top_k_dispatch(gates, cfg, cap)
+    dispatch = dispatch.astype(compute_dtype)
+    combine = combine.astype(compute_dtype)
+
+    # dispatch: (G,S,E,C) x (G,S,d) -> (G,E,C,d)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xt.astype(compute_dtype))
+    expert_in = with_logical_constraint(
+        expert_in, ("expert_group", "expert", "capacity", "embed"), rules)
+
+    wg = _eweight(params["wg"], compute_dtype)
+    wu = _eweight(params["wu"], compute_dtype)
+    wd = _eweight(params["wd"], compute_dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, wg)) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, wu)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wd)
+    expert_out = with_logical_constraint(
+        expert_out, ("expert_group", "expert", "capacity", "embed"), rules)
+
+    # combine: (G,S,E,C) x (G,E,C,d) -> (G,S,d)
+    out = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+    out = out.reshape(B, S, d)
+
+    if cfg.n_shared:
+        out = out + layers.swiglu(params["shared"], x, compute_dtype)
+    return out, aux

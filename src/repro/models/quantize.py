@@ -1,0 +1,56 @@
+"""Post-training weight quantization: fp checkpoint -> int8-resident tree.
+
+``quantize_params(quant_specs, fp_params)`` walks the quantized ParamSpec
+tree (built with ``quant_weights=True``) alongside a trained fp tree and
+emits int8 weights + per-out-channel scales.  Reduction axes are derived
+from the spec's logical axis names: every kernel axis whose name is absent
+from the scale spec is a fan-in axis and gets max-reduced.
+
+Used by the serving path (§Perf iteration 2.3: int8-resident decode) and
+tested for numerics in tests/test_quantize.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.param import ParamSpec
+
+
+def _quantize_kernel(kernel, q_spec: ParamSpec, s_spec: ParamSpec):
+    k32 = jnp.asarray(kernel, jnp.float32)
+    scale_names = set(a for a in s_spec.axes if a is not None)
+    reduce_axes = tuple(i for i, a in enumerate(q_spec.axes)
+                        if a not in scale_names)
+    scale = jnp.max(jnp.abs(k32), axis=reduce_axes) / 127.0 + 1e-12
+    expand = list(k32.shape)
+    for i, a in enumerate(q_spec.axes):
+        if a not in scale_names:
+            expand[i] = 1
+    q = jnp.clip(jnp.round(k32 / scale.reshape(expand)), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_params(quant_specs, fp_params):
+    """Map an fp param tree onto the structure of ``quant_specs``."""
+    def walk(spec_node, fp_node):
+        if isinstance(spec_node, ParamSpec):
+            return jnp.asarray(fp_node, spec_node.dtype)
+        if isinstance(spec_node, dict):
+            if "q" in spec_node and "scale" in spec_node \
+                    and isinstance(spec_node["q"], ParamSpec):
+                q, s = _quantize_kernel(fp_node, spec_node["q"],
+                                        spec_node["scale"])
+                return {"q": q, "scale": s}
+            if "kernel_q" in spec_node:
+                q, s = _quantize_kernel(fp_node["kernel"],
+                                        spec_node["kernel_q"],
+                                        spec_node["kernel_scale"])
+                out = {"kernel_q": q, "kernel_scale": s}
+                if "bias" in spec_node:
+                    out["bias"] = jnp.asarray(fp_node["bias"],
+                                              spec_node["bias"].dtype)
+                return out
+            return {k: walk(v, fp_node[k]) for k, v in spec_node.items()}
+        raise TypeError(type(spec_node))
+    return walk(quant_specs, fp_params)

@@ -1,0 +1,223 @@
+"""Decoder-only LM (dense or MoE) with scan-over-layers and remat.
+
+Exposes:
+  param_specs(cfg)                      -> ParamSpec tree
+  forward(cfg, params, tokens, rules)   -> final hidden states (B,S,d)
+  lm_loss(cfg, params, batch, rules)    -> scalar loss (chunked vocab xent)
+  prefill(cfg, params, tokens, rules)   -> (logits_last, cache)
+  decode_step(cfg, params, tokens, cache, pos, rules) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TransformerConfig, dtype_of
+from repro.models import attention as attn
+from repro.models import layers, moe
+from repro.param import spec
+from repro.sharding import with_logical_constraint
+
+LOSS_CHUNK = 512
+
+
+# ----------------------------------------------------------------- specs ----
+
+def _layer_specs(cfg: TransformerConfig, dtype):
+    quant = getattr(cfg, "quant_weights", False)
+    p = {
+        "ln_attn": layers.rmsnorm_specs(cfg.d_model, dtype),
+        "attn": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype,
+                               fused=getattr(cfg, "fused_qkv", False),
+                               quant=quant),
+        "ln_mlp": layers.rmsnorm_specs(cfg.d_model, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.moe_specs(cfg.d_model, cfg.moe, dtype, quant=quant)
+    else:
+        p["mlp"] = layers.swiglu_specs(cfg.d_model, cfg.d_ff, dtype,
+                                       quant=quant)
+    return p
+
+
+def _stack_layer_specs(layer_tree, n_layers: int):
+    """Prepend a stacked "layers" dimension to every leaf spec."""
+    def stack(s):
+        return spec((n_layers,) + s.shape, ("layers",) + s.axes, dtype=s.dtype,
+                    init=s.init, scale=s.scale,
+                    fan_in_axes=tuple(a + 1 for a in s.fan_in_axes))
+    from repro.param import tree_map_specs
+    return tree_map_specs(stack, layer_tree)
+
+
+def param_specs(cfg: TransformerConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    layer = _layer_specs(cfg, dtype)
+    p = {
+        "embed": layers.embed_specs(cfg.vocab, cfg.d_model, dtype),
+        "layers": _stack_layer_specs(layer, cfg.n_layers) if cfg.scan_layers
+        else {f"layer_{i}": _layer_specs(cfg, dtype) for i in range(cfg.n_layers)},
+        "ln_f": layers.rmsnorm_specs(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_specs(
+            cfg.d_model, cfg.vocab, in_axis="embed", out_axis="vocab",
+            dtype=dtype, quant=getattr(cfg, "quant_weights", False))
+    return p
+
+
+# --------------------------------------------------------------- forward ----
+
+def _layer_body(cfg: TransformerConfig, rules, lp, x, positions, impl):
+    cdt = dtype_of(cfg.compute_dtype)
+    h = layers.rmsnorm(lp["ln_attn"], x, cfg.norm_eps, cdt)
+    h = attn.attention(lp["attn"], h, n_heads=cfg.n_heads,
+                       n_kv_heads=cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+                       compute_dtype=cdt, rules=rules, positions=positions,
+                       impl=impl)
+    x = x + h
+    h = layers.rmsnorm(lp["ln_mlp"], x, cfg.norm_eps, cdt)
+    if cfg.moe is not None:
+        h, aux = moe.moe_block(lp["moe"], h, cfg.moe, compute_dtype=cdt,
+                               rules=rules)
+    else:
+        h = layers.swiglu(lp["mlp"], h, cdt)
+        aux = jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def forward(cfg: TransformerConfig, params, tokens, rules, *,
+            positions: Optional[jnp.ndarray] = None, impl: str = "xla"):
+    """tokens: (B, S) int32 -> hidden (B, S, d)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = layers.embed_lookup(params["embed"], tokens, cdt)
+    x = with_logical_constraint(x, ("batch", "seq", "embed"), rules)
+
+    def body(lp, x):
+        return _layer_body(cfg, rules, lp, x, positions, impl)
+    if cfg.remat:
+        policy = (None if getattr(cfg, "remat_policy", "dots") == "minimal"
+                  else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    if cfg.scan_layers:
+        def scan_fn(carry, lp):
+            x, aux_tot = carry
+            x, aux = body(lp, x)
+            return (x, aux_tot + aux), None
+        (x, aux_total), _ = jax.lax.scan(
+            scan_fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    else:
+        aux_total = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            x, aux = body(params["layers"][f"layer_{i}"], x)
+            aux_total = aux_total + aux
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps, cdt)
+    return x, aux_total
+
+
+def _logits_fn(cfg: TransformerConfig, params, cdt):
+    if cfg.tie_embeddings:
+        return lambda h: layers.embed_logits(params["embed"], h, cdt)
+    return lambda h: layers.dense(params["lm_head"], h, cdt)
+
+
+def lm_loss(cfg: TransformerConfig, params, batch, rules, *,
+            aux_weight: float = 0.01, impl: str = "xla",
+            unroll_loss: bool = False):
+    """batch: {tokens: (B,S), labels: (B,S)} -> scalar fp32 loss."""
+    cdt = dtype_of(cfg.compute_dtype)
+    h, aux = forward(cfg, params, batch["tokens"], rules, impl=impl)
+    nll = layers.chunked_softmax_xent(
+        _logits_fn(cfg, params, cdt), h, batch["labels"], cfg.vocab,
+        LOSS_CHUNK, cdt, unroll=unroll_loss)
+    return nll + aux_weight * aux
+
+
+# ---------------------------------------------------------------- decode ----
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+               abstract: bool = False):
+    dtype = dtype_of(cfg.compute_dtype)
+    quant_kv = getattr(cfg, "quant_kv", False)
+    make = attn.cache_specs if abstract else attn.init_cache
+    one = make(batch, max_seq, cfg.n_kv_heads, cfg.head_dim, dtype,
+               quant_kv=quant_kv)
+    if cfg.scan_layers:
+        def stack(leaf):
+            if abstract:
+                return jax.ShapeDtypeStruct((cfg.n_layers,) + leaf.shape,
+                                            leaf.dtype)
+            return jnp.broadcast_to(leaf[None], (cfg.n_layers,) + leaf.shape)
+        return jax.tree_util.tree_map(stack, one)
+    return {f"layer_{i}": make(batch, max_seq, cfg.n_kv_heads, cfg.head_dim,
+                               dtype, quant_kv=quant_kv)
+            for i in range(cfg.n_layers)}
+
+
+def cache_axes(cfg: TransformerConfig):
+    one = {"k": attn.CACHE_AXES, "v": attn.CACHE_AXES}
+    if getattr(cfg, "quant_kv", False):
+        one["k_scale"] = attn.CACHE_SCALE_AXES
+        one["v_scale"] = attn.CACHE_SCALE_AXES
+    if cfg.scan_layers:
+        return {key: ("layers",) + axes for key, axes in one.items()}
+    return {f"layer_{i}": dict(one) for i in range(cfg.n_layers)}
+
+
+def decode_step(cfg: TransformerConfig, params, tokens, cache, pos, rules, *,
+                impl: str = "xla"):
+    """tokens: (B, 1) -> (logits (B,1,V), new_cache).  pos: scalar int32."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = layers.embed_lookup(params["embed"], tokens, cdt)
+    x = with_logical_constraint(x, ("decode_batch", None, "embed"), rules)
+
+    def body(lp, lc, x):
+        h = layers.rmsnorm(lp["ln_attn"], x, cfg.norm_eps, cdt)
+        h, new_lc = attn.decode_attention(
+            lp["attn"], h, lc, pos, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, rope_theta=cfg.rope_theta,
+            compute_dtype=cdt, rules=rules, impl=impl,
+            cache_update=getattr(cfg, "cache_update", "auto"))
+        x = x + h
+        h = layers.rmsnorm(lp["ln_mlp"], x, cfg.norm_eps, cdt)
+        if cfg.moe is not None:
+            h, _ = moe.moe_block(lp["moe"], h, cfg.moe, compute_dtype=cdt,
+                                 rules=rules)
+        else:
+            h = layers.swiglu(lp["mlp"], h, cdt)
+        return x + h, new_lc
+
+    if cfg.scan_layers:
+        def scan_fn(x, layer_in):
+            lp, lc = layer_in
+            x, new_lc = body(lp, lc, x)
+            return x, new_lc
+        x, new_cache = jax.lax.scan(scan_fn, x, (params["layers"], cache))
+    else:
+        new_cache = {}
+        for i in range(cfg.n_layers):
+            x, new_cache[f"layer_{i}"] = body(
+                params["layers"][f"layer_{i}"], cache[f"layer_{i}"], x)
+
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps, cdt)
+    logits = _logits_fn(cfg, params, cdt)(x)
+    return logits, new_cache
+
+
+def prefill(cfg: TransformerConfig, params, tokens, rules, *, impl: str = "xla"):
+    """Full-sequence prefill: returns last-position logits and hidden states.
+
+    The prefill dry-run cell measures the forward pass at (B=32, S=32k);
+    cache construction from prefill activations is exercised in tests with
+    small configs (the compiled artifact is dominated by the forward).
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    h, _ = forward(cfg, params, tokens, rules, impl=impl)
+    logits = _logits_fn(cfg, params, cdt)(h[:, -1:, :])
+    return logits, h

@@ -1,0 +1,174 @@
+"""ViT / DeiT encoder classifiers.
+
+Patch embedding is part of the model (vision pool semantics).  DeiT adds a
+distillation token and a second head; at serve time the two head outputs
+are averaged (deit inference rule).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ViTConfig, dtype_of
+from repro.models import attention as attn
+from repro.models import layers
+from repro.param import spec, tree_map_specs
+from repro.sharding import with_logical_constraint
+
+
+def _layer_specs(cfg: ViTConfig, dtype):
+    return {
+        "ln1": layers.layernorm_specs(cfg.d_model, dtype),
+        "attn": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_heads,
+                               cfg.d_model // cfg.n_heads, dtype,
+                               fused=getattr(cfg, "fused_qkv", False)),
+        "ln2": layers.layernorm_specs(cfg.d_model, dtype),
+        "mlp": layers.gelu_mlp_specs(cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _stack(layer_tree, n_layers: int):
+    def f(s):
+        return spec((n_layers,) + s.shape, ("layers",) + s.axes, dtype=s.dtype,
+                    init=s.init, scale=s.scale,
+                    fan_in_axes=tuple(a + 1 for a in s.fan_in_axes))
+    return tree_map_specs(f, layer_tree)
+
+
+def param_specs(cfg: ViTConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    patch_dim = cfg.in_channels * cfg.patch * cfg.patch
+    n_extra = 1 + (1 if cfg.distill_token else 0)
+    if getattr(cfg, "patch_embed", "reshape") == "conv":
+        pe = {"kernel": spec((cfg.patch, cfg.patch, cfg.in_channels, d),
+                             (None, None, "in_channels", "embed"),
+                             dtype=dtype, fan_in_axes=(0, 1, 2)),
+              "bias": spec((d,), ("embed",), dtype=dtype, init="zeros")}
+    else:
+        pe = layers.dense_specs(patch_dim, d, in_axis="patch",
+                                out_axis="embed", dtype=dtype, bias=True)
+    p = {
+        "patch_embed": pe,
+        "cls_token": spec((1, 1, d), (None, None, "embed"), dtype=dtype,
+                          init="pos"),
+        "pos_embed": spec((1, cfg.n_tokens, d), (None, "seq", "embed"),
+                          dtype=dtype, init="pos"),
+        "layers": _stack(_layer_specs(cfg, dtype), cfg.n_layers)
+        if cfg.scan_layers else
+        {f"layer_{i}": _layer_specs(cfg, dtype) for i in range(cfg.n_layers)},
+        "ln_f": layers.layernorm_specs(d, dtype),
+        "head": layers.dense_specs(d, cfg.n_classes, in_axis="embed",
+                                   out_axis="vocab", dtype=dtype, bias=True),
+    }
+    if cfg.distill_token:
+        p["dist_token"] = spec((1, 1, d), (None, None, "embed"), dtype=dtype,
+                               init="pos")
+        p["head_dist"] = layers.dense_specs(d, cfg.n_classes, in_axis="embed",
+                                            out_axis="vocab", dtype=dtype,
+                                            bias=True)
+    return p
+
+
+def patchify(images: jnp.ndarray, patch: int) -> jnp.ndarray:
+    """(B, H, W, C) -> (B, h*w, patch*patch*C)."""
+    B, H, W, C = images.shape
+    h, w = H // patch, W // patch
+    x = images.reshape(B, h, patch, w, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, h * w, patch * patch * C)
+
+
+def _encoder(cfg: ViTConfig, params, x, rules, impl):
+    cdt = dtype_of(cfg.compute_dtype)
+
+    def body(lp, x):
+        h = layers.layernorm(lp["ln1"], x, cfg.norm_eps, cdt)
+        h = attn.encoder_attention(lp["attn"], h, n_heads=cfg.n_heads,
+                                   compute_dtype=cdt, rules=rules, impl=impl)
+        x = x + h
+        h = layers.layernorm(lp["ln2"], x, cfg.norm_eps, cdt)
+        return x + layers.gelu_mlp(lp["mlp"], h, cdt)
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.scan_layers:
+        def scan_fn(x, lp):
+            return body(lp, x), None
+        x, _ = jax.lax.scan(scan_fn, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x = body(params["layers"][f"layer_{i}"], x)
+    return layers.layernorm(params["ln_f"], x, cfg.norm_eps, cdt)
+
+
+def forward(cfg: ViTConfig, params, images, rules, *, impl: str = "xla",
+            img_res: Optional[int] = None):
+    """images: (B, H, W, C) -> logits (B, n_classes).
+
+    When ``img_res`` differs from ``cfg.img_res`` (cls_384 finetune cell)
+    the position embedding is bilinearly resized, as in the ViT paper.
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    B = images.shape[0]
+    if getattr(cfg, "patch_embed", "reshape") == "conv":
+        pe = params["patch_embed"]
+        x = jax.lax.conv_general_dilated(
+            images.astype(cdt), pe["kernel"].astype(cdt),
+            window_strides=(cfg.patch, cfg.patch), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x.reshape(B, -1, x.shape[-1]) + pe["bias"].astype(cdt)
+    else:
+        x = layers.dense(params["patch_embed"], patchify(images, cfg.patch),
+                         cdt)
+
+    n_extra = 1 + (1 if cfg.distill_token else 0)
+    pos = params["pos_embed"].astype(cdt)
+    n_patches = x.shape[1]
+    grid_pos = pos[:, n_extra:, :]
+    if n_patches != grid_pos.shape[1]:
+        side_old = int(round(grid_pos.shape[1] ** 0.5))
+        side_new = int(round(n_patches ** 0.5))
+        g = grid_pos.reshape(1, side_old, side_old, -1)
+        g = jax.image.resize(g, (1, side_new, side_new, g.shape[-1]), "bilinear")
+        grid_pos = g.reshape(1, side_new * side_new, -1)
+    x = x + grid_pos
+
+    toks = [jnp.broadcast_to(params["cls_token"].astype(cdt) +
+                             pos[:, :1, :], (B, 1, x.shape[-1]))]
+    if cfg.distill_token:
+        toks.append(jnp.broadcast_to(params["dist_token"].astype(cdt) +
+                                     pos[:, 1:2, :], (B, 1, x.shape[-1])))
+    x = jnp.concatenate(toks + [x], axis=1)
+    x = with_logical_constraint(x, ("batch", "seq", "embed"), rules)
+
+    x = _encoder(cfg, params, x, rules, impl)
+    logits = layers.dense(params["head"], x[:, 0, :], cdt)
+    if cfg.distill_token:
+        logits_d = layers.dense(params["head_dist"], x[:, 1, :], cdt)
+        return (logits + logits_d) / 2.0, (logits, logits_d)
+    return logits, None
+
+
+def cls_loss(cfg: ViTConfig, params, batch, rules, *, impl: str = "xla"):
+    """batch: {images: (B,H,W,C), labels: (B,)} -> scalar fp32."""
+    logits, heads = forward(cfg, params, batch["images"], rules, impl=impl)
+    labels = jnp.clip(batch["labels"], 0, cfg.n_classes - 1)
+
+    def xent(lg):
+        lg = lg.astype(jnp.float32)
+        return jnp.mean(jax.nn.logsumexp(lg, -1) -
+                        jnp.take_along_axis(lg, labels[:, None], 1,
+                                            mode="clip")[:, 0])
+
+    if heads is not None:           # DeiT: average of cls and distill losses
+        return 0.5 * (xent(heads[0]) + xent(heads[1]))
+    return xent(logits)
+
+
+def serve(cfg: ViTConfig, params, images, rules, *, impl: str = "xla"):
+    logits, _ = forward(cfg, params, images, rules, impl=impl)
+    return logits

@@ -1,0 +1,104 @@
+"""Parameter spec trees: single source of truth for shapes/axes/init.
+
+Each model module exposes ``param_specs(cfg) -> nested dict of ParamSpec``.
+From that one tree we derive:
+
+* ``abstract_params``  — ShapeDtypeStruct tree (dry-run lowering, no alloc)
+* ``init_params``      — materialized arrays (tests / real training)
+* ``param_pspecs``     — PartitionSpec tree via the logical-axis rules
+* ``count_params``     — exact parameter count
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import Rules, logical_to_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: object = jnp.float32
+    init: str = "normal"        # normal | zeros | ones | embed | pos
+    scale: float = 1.0          # stddev multiplier for "normal"
+    fan_in_axes: Tuple[int, ...] = ()  # dims to use for fan-in scaling
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable, specs):
+    return jax.tree_util.tree_map(fn, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs)
+
+
+def param_pspecs(specs, rules: Rules, mesh=None):
+    """PartitionSpec tree for the params.
+
+    With ``mesh`` given, mesh axes whose size does not evenly divide the
+    corresponding dim are dropped (jit input shardings must divide evenly;
+    e.g. 40 heads cannot shard over a 16-way "model" axis — the weight
+    stays replicated while activation constraints may still shard unevenly).
+    """
+    if mesh is None:
+        return tree_map_specs(lambda s: logical_to_spec(s.axes, rules), specs)
+    from repro.sharding import divisible_spec
+    return tree_map_specs(
+        lambda s: divisible_spec(s.shape, s.axes, rules, mesh), specs)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(specs, is_leaf=_is_spec)
+    return sum(int(math.prod(s.shape)) for s in leaves)
+
+
+def _init_leaf(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init in ("normal", "embed", "pos"):
+        if spec.fan_in_axes:
+            fan_in = math.prod(spec.shape[a] for a in spec.fan_in_axes)
+        else:
+            # default: all dims but the last are fan-in
+            fan_in = math.prod(spec.shape[:-1]) or 1
+        std = spec.scale / math.sqrt(fan_in) if spec.init == "normal" else 0.02 * spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(key, specs):
+    """Materialize the tree. Deterministic per-leaf keys via fold_in on path."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=_is_spec)
+    paths = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)[0]
+    out = []
+    for i, ((path, spec), _) in enumerate(zip(paths, leaves)):
+        sub = jax.random.fold_in(key, i)
+        out.append(_init_leaf(sub, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def spec(shape: Sequence[int], axes: Sequence[Optional[str]], *,
+         dtype=jnp.float32, init: str = "normal", scale: float = 1.0,
+         fan_in_axes: Tuple[int, ...] = ()) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, scale, fan_in_axes)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree)

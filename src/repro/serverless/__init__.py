@@ -1,0 +1,1 @@
+"""Serverless platform model (instances, autoscaling, billing)."""

@@ -1,0 +1,133 @@
+"""Serverless platform model: instances, cold starts, autoscaling, billing.
+
+Deterministic (seeded) discrete-event model of a GPU/TPU-slice serverless
+platform with the paper's semantics: per-function concurrency = 1, pay per
+execution-second (Eqn. 1), fast scale-up with a cold-start penalty.
+Includes straggler injection and optional backup dispatch (hedged
+requests) for straggler mitigation at pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cost import CostMeter
+from repro.core.latency import LatencyTable
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformConfig:
+    cold_start_s: float = 0.25       # container + weights to accelerator
+    keep_alive_s: float = 60.0
+    max_instances: int = 64
+    concurrency: int = 1             # paper setting
+    pre_warm: int = 1                # provisioned instances (the paper's
+                                     # offline profiling warms the function)
+    straggler_prob: float = 0.0
+    straggler_factor: float = 4.0
+    backup_after_sigma: float = math.inf   # hedged dispatch threshold
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Instance:
+    free_at: float = 0.0
+    warm_until: float = -1.0
+
+
+@dataclasses.dataclass
+class ExecutionRecord:
+    t_submit: float
+    t_start: float
+    t_finish: float
+    exec_s: float
+    batch_size: int
+    cold: bool
+    hedged: bool
+    cost: float
+
+
+class Platform:
+    def __init__(self, latency: LatencyTable, cfg: PlatformConfig = PlatformConfig(),
+                 meter: Optional[CostMeter] = None):
+        self.latency = latency
+        self.cfg = cfg
+        self.meter = meter or CostMeter()
+        self.instances: List[_Instance] = [
+            _Instance(free_at=0.0, warm_until=cfg.keep_alive_s)
+            for _ in range(cfg.pre_warm)]
+        self.records: List[ExecutionRecord] = []
+        self._rng = np.random.default_rng(cfg.seed)
+
+    # ----------------------------------------------------------- sampling ----
+
+    def _sample_exec(self, batch_size: int) -> Tuple[float, bool]:
+        mu, sigma = self.latency.mu_sigma(batch_size)
+        t = mu + abs(float(self._rng.normal())) * sigma  # one-sided jitter
+        straggler = bool(self._rng.random() < self.cfg.straggler_prob)
+        if straggler:
+            t *= self.cfg.straggler_factor
+        return t, straggler
+
+    # ---------------------------------------------------------- placement ----
+
+    def _acquire(self, t: float) -> Tuple[_Instance, float, bool]:
+        """Pick a warm free instance, else scale up (cold start), else
+        queue on the earliest-free instance."""
+        warm_free = [i for i in self.instances
+                     if i.free_at <= t and i.warm_until >= t]
+        if warm_free:
+            return warm_free[0], t, False
+        if len(self.instances) < self.cfg.max_instances:
+            inst = _Instance()
+            self.instances.append(inst)
+            return inst, t + self.cfg.cold_start_s, True
+        inst = min(self.instances, key=lambda i: i.free_at)
+        start = max(t, inst.free_at)
+        cold = inst.warm_until < start
+        if cold:
+            start += self.cfg.cold_start_s
+        return inst, start, cold
+
+    # ------------------------------------------------------------- submit ----
+
+    def submit(self, t_submit: float, batch_size: int) -> ExecutionRecord:
+        inst, t_start, cold = self._acquire(t_submit)
+        exec_s, straggler = self._sample_exec(batch_size)
+
+        hedged = False
+        mu, sigma = self.latency.mu_sigma(batch_size)
+        threshold = mu + self.cfg.backup_after_sigma * sigma
+        t_finish = t_start + exec_s
+        cost = self.meter.charge(exec_s)
+
+        if exec_s > threshold:
+            # hedged backup on a second instance, fired at the threshold
+            hedged = True
+            backup_exec, _ = self._sample_exec(batch_size)
+            inst2, b_start, b_cold = self._acquire(t_start + threshold)
+            t_finish = min(t_finish, b_start + backup_exec)
+            cost += self.meter.charge(backup_exec)
+            inst2.free_at = b_start + backup_exec
+            inst2.warm_until = inst2.free_at + self.cfg.keep_alive_s
+
+        inst.free_at = t_start + exec_s
+        inst.warm_until = inst.free_at + self.cfg.keep_alive_s
+        rec = ExecutionRecord(t_submit, t_start, t_finish, exec_s,
+                              batch_size, cold, hedged, cost)
+        self.records.append(rec)
+        return rec
+
+    # ------------------------------------------------------------ metrics ----
+
+    @property
+    def total_cost(self) -> float:
+        return self.meter.total
+
+    def utilization(self, horizon: float) -> float:
+        if not self.instances or horizon <= 0:
+            return 0.0
+        return self.meter.busy_seconds / (len(self.instances) * horizon)

@@ -1,0 +1,234 @@
+"""Logical-axis sharding machinery (MaxText-style).
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "embed", "mlp", ...).  A per-config rule table resolves logical
+names to physical mesh axes ("pod", "data", "model").  This keeps model
+code mesh-agnostic: the same model runs on the single-pod (data, model)
+mesh, the multi-pod (pod, data, model) mesh, or a 1-device test mesh just
+by swapping the rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A logical axis resolves to: a mesh axis name, a tuple of mesh axis names
+# (product sharding), or None (replicated).
+MeshAxes = Union[str, Tuple[str, ...], None]
+Rules = Mapping[str, MeshAxes]
+
+# Default rule table for the production meshes.  "batch" shards over the
+# pure-DP axes (pod, data); weight matrices shard their wide dimension over
+# "model".  Logical axes absent from the table are replicated.
+DEFAULT_RULES: Rules = {
+    "batch": ("data", "pod"),
+    "decode_batch": ("data", "pod"),
+    "seq": None,
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": None,
+    "head_dim": None,
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,
+    "capacity": None,
+    "layers": None,
+    "img_h": None,
+    "img_w": None,
+    "channels": "model",
+    "in_channels": None,
+    "patch": None,
+    "kv_seq": None,
+    "canvas": ("data", "pod"),
+    "stack": None,
+    "expert_group": ("data", "pod"),
+}
+
+# FSDP rule overlay: additionally shard the parameter "embed" (contraction)
+# dimension over the data axis so optimizer state is fully sharded (ZeRO-3
+# style).  Used for >=100B-param configs (mistral-large-123b).
+FSDP_OVERLAY: Rules = {
+    "embed": "data",
+}
+
+# Sequence-parallel overlay for long-context decode cells: the KV cache
+# shards its sequence dimension over "model".
+SEQUENCE_OVERLAY: Rules = {
+    "kv_seq": "model",
+}
+
+# Activation sequence-sharding (Megatron-SP-style) for big train cells:
+# layer-boundary activations shard "seq" over "model"; GSPMD inserts the
+# all-gather at the attention boundary and the reduce-scatter after —
+# 16x less saved-activation memory for ~one extra collective pair/layer.
+ACT_SEQ_OVERLAY: Rules = {
+    "seq": "model",
+}
+
+
+def merge_rules(*tables: Optional[Rules]) -> Rules:
+    out: dict = {}
+    for t in tables:
+        if t:
+            out.update(t)
+    return out
+
+
+def _mesh_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Optional[Mesh] = None,
+) -> P:
+    """Resolve a tuple of logical axis names to a PartitionSpec.
+
+    Mesh axes that do not exist on the provided mesh are dropped (so the
+    same rules work on a 1-device test mesh with no "model" axis).  A mesh
+    axis may appear at most once in the spec; later duplicates are dropped.
+    """
+    available = set(_mesh_axis_names(mesh)) if mesh is not None else None
+    used: set = set()
+    parts = []
+    for ax in logical_axes:
+        if ax is None:
+            parts.append(None)
+            continue
+        resolved = rules.get(ax, None)
+        if resolved is None:
+            parts.append(None)
+            continue
+        axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+        keep = []
+        for a in axes:
+            if available is not None and a not in available:
+                continue
+            if a in used:
+                continue
+            used.add(a)
+            keep.append(a)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    # Trim trailing Nones for tidier specs.
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(
+    mesh: Mesh, logical_axes: Sequence[Optional[str]], rules: Rules
+) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, rules, mesh))
+
+
+def divisible_spec(
+    shape: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    rules: Rules,
+    mesh: Mesh,
+) -> P:
+    """Like ``logical_to_spec`` but drops mesh axes that do not divide the
+    dim size evenly (required for jit input shardings).  For multi-axis
+    rules like batch -> ("data", "pod") axes are kept greedily in order,
+    skipping any axis whose inclusion would break divisibility.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, logical_axes):
+        if ax is None or rules.get(ax) is None:
+            parts.append(None)
+            continue
+        resolved = rules[ax]
+        axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+        keep, prod = [], 1
+        for a in axes:
+            if a not in sizes or a in used:
+                continue
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        for a in keep:
+            used.add(a)
+        if not keep:
+            parts.append(None)
+        elif len(keep) == 1:
+            parts.append(keep[0])
+        else:
+            parts.append(tuple(keep))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def divisible_sharding(mesh, shape, logical_axes, rules) -> NamedSharding:
+    return NamedSharding(mesh, divisible_spec(shape, logical_axes, rules, mesh))
+
+
+def with_logical_constraint(x, logical_axes: Sequence[Optional[str]], rules: Rules):
+    """Apply a sharding constraint from logical axes, if inside a mesh ctx.
+
+    Outside a mesh context (unit tests on one device) this is a no-op.
+    Mesh axes that do not divide the dim evenly are dropped: GSPMD
+    technically supports uneven sharding via padding, but for e.g. 40
+    heads on a 16-way axis it falls back to "involuntary full
+    rematerialization" (replicate + reshard) which injects massive
+    all-gathers — replicating outright is strictly better.
+    """
+    try:
+        env_mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
+    except Exception:
+        env_mesh = None
+    if env_mesh is None or getattr(env_mesh, "empty", True):
+        return x
+    sizes = dict(zip(env_mesh.axis_names, env_mesh.axis_sizes))
+    used: set = set()
+    parts = []
+    for dim, ax in zip(x.shape, logical_axes):
+        resolved = rules.get(ax) if ax is not None else None
+        if resolved is None:
+            parts.append(None)
+            continue
+        axes = (resolved,) if isinstance(resolved, str) else tuple(resolved)
+        keep, prod = [], 1
+        for a in axes:
+            if a not in sizes or a in used:
+                continue
+            if dim % (prod * sizes[a]) == 0:
+                keep.append(a)
+                prod *= sizes[a]
+        used.update(keep)
+        parts.append(None if not keep
+                     else keep[0] if len(keep) == 1 else tuple(keep))
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Bundle of rule tables selected per arch/shape cell."""
+
+    rules: Rules
+
+    @staticmethod
+    def make(fsdp: bool = False, sequence_parallel: bool = False,
+             act_seq: bool = False,
+             extra: Optional[Rules] = None) -> "ShardingConfig":
+        rules = merge_rules(
+            DEFAULT_RULES,
+            FSDP_OVERLAY if fsdp else None,
+            SEQUENCE_OVERLAY if sequence_parallel else None,
+            ACT_SEQ_OVERLAY if act_seq else None,
+            extra,
+        )
+        return ShardingConfig(rules=rules)

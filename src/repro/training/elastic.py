@@ -1,0 +1,86 @@
+"""Elastic scaling + failure handling for pod-scale training.
+
+Real pods lose chips; the contract here is:
+
+1. detect failure (heartbeat timeout — simulated by ``FailureInjector``),
+2. drop the affected data-parallel replica rows, rebuild a smaller mesh
+   (``shrink_mesh``), keeping the model axis intact,
+3. restore the latest committed checkpoint with the new shardings
+   (``checkpoint.restore_latest`` takes the new sharding tree),
+4. rescale the global batch (tokens-per-replica kept constant) and resume.
+
+Straggler mitigation at the step level reuses the paper's own idea: the
+SLO-aware invoker's mu+3sigma slack is exactly a straggler hedge — the
+serving platform additionally supports backup dispatch
+(``serverless.platform.Platform(backup_after_sigma=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class FailureEvent:
+    step: int
+    kind: str              # "chip" | "host" | "straggler"
+    data_row: int          # which data-parallel row is affected
+    slow_factor: float = 1.0
+
+
+class FailureInjector:
+    """Deterministic failure schedule for integration tests / drills."""
+
+    def __init__(self, events: Sequence[FailureEvent]):
+        self.events = sorted(events, key=lambda e: e.step)
+
+    def poll(self, step: int) -> List[FailureEvent]:
+        fired = [e for e in self.events if e.step == step]
+        self.events = [e for e in self.events if e.step != step]
+        return fired
+
+
+def shrink_mesh(mesh: jax.sharding.Mesh, failed_data_rows: Sequence[int]
+                ) -> jax.sharding.Mesh:
+    """Rebuild the mesh without the failed data-parallel rows.
+
+    Device array layout is (data, model) or (pod, data, model); we drop
+    rows along the *data* axis so every surviving replica keeps a full
+    model shard group.  Raises if no rows survive.
+    """
+    names = tuple(mesh.axis_names)
+    data_idx = names.index("data")
+    devs = np.asarray(mesh.devices)
+    keep = [i for i in range(devs.shape[data_idx])
+            if i not in set(failed_data_rows)]
+    if not keep:
+        raise RuntimeError("all data-parallel rows failed")
+    devs = np.take(devs, keep, axis=data_idx)
+    return jax.sharding.Mesh(devs, names)
+
+
+def rescale_batch(global_batch: int, old_rows: int, new_rows: int) -> int:
+    """Keep per-replica batch constant across a shrink (elastic batch)."""
+    per_row = global_batch // old_rows
+    return per_row * new_rows
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: jax.sharding.Mesh
+    global_batch: int
+    generation: int = 0
+
+    def on_failure(self, failed_rows: Sequence[int]) -> "ElasticState":
+        names = tuple(self.mesh.axis_names)
+        old_rows = np.asarray(self.mesh.devices).shape[names.index("data")]
+        mesh = shrink_mesh(self.mesh, failed_rows)
+        new_rows = np.asarray(mesh.devices).shape[names.index("data")]
+        return ElasticState(
+            mesh=mesh,
+            global_batch=rescale_batch(self.global_batch, old_rows, new_rows),
+            generation=self.generation + 1)

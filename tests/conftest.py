@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real 1-device world.  Multi-device dry-run coverage runs in a subprocess
+# (tests/test_dryrun_multidevice.py) which sets its own flags.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

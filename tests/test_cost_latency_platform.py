@@ -1,0 +1,145 @@
+"""Cost model (Eqn. 1), latency estimator, serverless platform model."""
+import math
+
+import pytest
+
+from repro.core.cost import (CostMeter, P_C, P_G, P_M, P_REQ, alibaba_cost,
+                             TPUCostModel)
+from repro.core.latency import (AnalyticalLatencyModel, LatencyTable,
+                                detector_latency_model)
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+class TestCost:
+    def test_eqn1_hand_computed(self):
+        # paper defaults: 2 vCPU, 4 GB mem, 6 GB GPU for 1 second
+        expect = 1.0 * (2 * P_C + 4 * P_M + 6 * P_G) + P_REQ
+        assert alibaba_cost(1.0) == pytest.approx(expect)
+        assert alibaba_cost(0.0) == pytest.approx(P_REQ)
+
+    def test_linear_in_time(self):
+        c1 = alibaba_cost(1.0) - P_REQ
+        c5 = alibaba_cost(5.0) - P_REQ
+        assert c5 == pytest.approx(5 * c1)
+
+    def test_meter_accumulates(self):
+        m = CostMeter()
+        a = m.charge(0.5)
+        b = m.charge(1.5)
+        assert m.total == pytest.approx(a + b)
+        assert m.invocations == 2
+        assert m.busy_seconds == pytest.approx(2.0)
+
+    def test_tpu_model(self):
+        tm = TPUCostModel(usd_per_chip_hour=3.6, chips=2)
+        assert tm.cost(1.0) == pytest.approx(2 * 3.6 / 3600 + P_REQ)
+
+
+class TestLatencyTable:
+    def test_exact_and_interpolated(self):
+        t = LatencyTable({1: (0.1, 0.01), 3: (0.3, 0.03)})
+        assert t.mu_sigma(1) == (0.1, 0.01)
+        mu, sg = t.mu_sigma(2)
+        assert mu == pytest.approx(0.2)
+        assert sg == pytest.approx(0.02)
+
+    def test_extrapolation_above(self):
+        t = LatencyTable({1: (0.1, 0.01), 2: (0.2, 0.01)})
+        mu, _ = t.mu_sigma(4)
+        assert mu == pytest.approx(0.4)
+
+    def test_t_slack_conservative(self):
+        t = LatencyTable({1: (0.1, 0.02)}, slack_sigmas=3.0)
+        assert t.t_slack(1) == pytest.approx(0.1 + 3 * 0.02)
+        assert t.t_slack(0) == 0.0
+
+    def test_fractional_batch(self):
+        t = LatencyTable({1: (0.1, 0.01), 2: (0.2, 0.02)})
+        mu, _ = t.mu_sigma(1.5)
+        assert mu == pytest.approx(0.15)
+
+
+class TestAnalyticalModel:
+    def test_monotone_in_batch(self):
+        m = detector_latency_model(256, 256)
+        mus = [m.mu_sigma(b)[0] for b in (1, 2, 4, 8)]
+        assert mus == sorted(mus)
+
+    def test_overhead_floor(self):
+        m = detector_latency_model(64, 64, overhead_s=0.004)
+        assert m.mu_sigma(1)[0] >= 0.004
+
+    def test_quadratic_attention_full_frame_penalty(self):
+        """4K-as-one-input costs more than 8x one canvas (Masked Frame)."""
+        canvas = detector_latency_model(1024, 1024)
+        full4k = detector_latency_model(2160, 3840)
+        ratio = full4k.flops_per_canvas / canvas.flops_per_canvas
+        area_ratio = (2160 * 3840) / (1024 * 1024)
+        assert ratio > area_ratio
+
+    def test_build_table(self):
+        t = detector_latency_model(256, 256).build_table(8)
+        assert set(t.table) == set(range(1, 9))
+
+
+class TestPlatform:
+    def table(self):
+        return LatencyTable({b: (0.05 * b, 0.0) for b in range(1, 17)})
+
+    def test_deterministic_with_zero_sigma(self):
+        p = Platform(self.table(), PlatformConfig(cold_start_s=0.1,
+                                                  pre_warm=0))
+        r = p.submit(0.0, 2)
+        assert r.cold
+        assert r.t_start == pytest.approx(0.1)
+        assert r.t_finish == pytest.approx(0.1 + 0.1)
+
+    def test_pre_warm_avoids_first_cold_start(self):
+        p = Platform(self.table(), PlatformConfig(cold_start_s=0.1,
+                                                  pre_warm=1))
+        r = p.submit(0.0, 1)
+        assert not r.cold
+        assert r.t_start == pytest.approx(0.0)
+
+    def test_warm_reuse(self):
+        p = Platform(self.table(), PlatformConfig(cold_start_s=0.1,
+                                                  keep_alive_s=60,
+                                                  pre_warm=0))
+        p.submit(0.0, 1)
+        r2 = p.submit(1.0, 1)
+        assert not r2.cold
+        assert len(p.instances) == 1
+
+    def test_concurrency_one_scales_out(self):
+        p = Platform(self.table(), PlatformConfig(cold_start_s=0.0,
+                                                  pre_warm=0))
+        p.submit(0.0, 16)          # busy until 0.8
+        p.submit(0.1, 16)          # needs a second instance
+        assert len(p.instances) == 2
+
+    def test_queueing_at_max_instances(self):
+        p = Platform(self.table(), PlatformConfig(cold_start_s=0.0,
+                                                  max_instances=1,
+                                                  pre_warm=0))
+        p.submit(0.0, 16)
+        r = p.submit(0.1, 1)
+        assert r.t_start >= 0.8    # waited for the busy instance
+
+    def test_billing_matches_records(self):
+        p = Platform(self.table(), PlatformConfig())
+        for i in range(5):
+            p.submit(i * 0.01, 1 + i % 3)
+        assert p.total_cost == pytest.approx(sum(r.cost for r in p.records))
+
+    def test_straggler_hedging_bounds_tail(self):
+        cfg_nohedge = PlatformConfig(straggler_prob=1.0, straggler_factor=10,
+                                     seed=1)
+        cfg_hedge = PlatformConfig(straggler_prob=1.0, straggler_factor=10,
+                                   backup_after_sigma=1.0, seed=1)
+        t = LatencyTable({1: (0.1, 0.01)})
+        slow = Platform(t, cfg_nohedge).submit(0.0, 1)
+        # hedged backup is also a straggler here, but it starts early and
+        # the min() still bounds the tail vs no hedging at all
+        hedged = Platform(t, cfg_hedge).submit(0.0, 1)
+        assert hedged.hedged
+        assert hedged.t_finish <= slow.t_finish + 1e-9

@@ -1,0 +1,120 @@
+"""Synthetic scenes, byte models, RoI extraction (JAX vs numpy reference)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gmm, rois
+from repro.core.partitioning import Patch
+from repro.data import video
+from repro.data.synthetic import SCENE_PRESETS, Scene, preset
+
+
+class TestScene:
+    def test_deterministic(self):
+        a, b = Scene(preset(0)), Scene(preset(0))
+        for _ in range(3):
+            a.step(), b.step()
+        np.testing.assert_array_equal(a.render(), b.render())
+
+    def test_roi_proportion_in_calibrated_band(self):
+        """Table I: RoIs are a few percent to ~15% of the frame."""
+        props = []
+        for i in range(len(SCENE_PRESETS)):
+            s = Scene(preset(i))
+            s.step()
+            props.append(s.roi_proportion())
+        assert 0.01 < np.mean(props) < 0.30
+        assert max(props) < 0.5
+
+    def test_boxes_within_frame(self):
+        s = Scene(preset(2))
+        for _ in range(5):
+            s.step()
+            b = s.boxes()
+            if len(b):
+                assert (b[:, 0] >= 0).all() and (b[:, 2] <= s.cfg.width).all()
+                assert (b[:, 1] >= 0).all() and (b[:, 3] <= s.cfg.height).all()
+
+    def test_fluctuating_counts(self):
+        """Fig. 3: object counts fluctuate irregularly."""
+        s = Scene(preset(5))
+        counts = []
+        for _ in range(60):
+            s.step()
+            counts.append(len(s.boxes()))
+        assert len(set(counts)) > 1
+
+
+class TestBytesModel:
+    def test_patch_bytes_linear_in_area(self):
+        small = video.patch_bytes(Patch(0, 0, 10, 10))
+        big = video.patch_bytes(Patch(0, 0, 100, 100))
+        # headers aside, bytes scale with area at BPP_FG per pixel
+        assert big - small == pytest.approx((10_000 - 100) * video.BPP_FG)
+
+    def test_4k_frame_about_1mb(self):
+        b = video.frame_bytes(3840, 2160)
+        assert 0.7e6 < b < 1.5e6
+
+    def test_masked_cheaper_than_full(self):
+        full = video.frame_bytes(960, 540)
+        masked = video.masked_frame_bytes(960, 540, fg_area=20000)
+        assert masked < 0.5 * full
+
+    def test_arrival_shaping_fifo(self):
+        patches = [Patch(0, 0, 100, 100, t_gen=0.0),
+                   Patch(0, 0, 100, 100, t_gen=0.0)]
+        arr = video.shape_arrivals(patches, bandwidth_bps=8e5)  # 100 KB/s
+        assert arr[1].t_arrive > arr[0].t_arrive
+        assert arr[0].t_arrive == pytest.approx(
+            video.patch_bytes(patches[0]) / 1e5)
+
+
+class TestRoIExtraction:
+    def test_jax_matches_numpy_reference(self):
+        rng = np.random.default_rng(0)
+        for trial in range(5):
+            mask = np.zeros((96, 128), bool)
+            for _ in range(rng.integers(1, 5)):
+                y, x = rng.integers(0, 64), rng.integers(0, 96)
+                mask[y:y + rng.integers(8, 30), x:x + rng.integers(8, 30)] = 1
+            jb, jv = rois.extract_rois_jit(jnp.asarray(mask))
+            jboxes = {tuple(b) for b in np.asarray(jb)[np.asarray(jv)]}
+            nb, nv = rois.numpy_rois(mask)
+            nboxes = {tuple(b) for b in nb}
+            assert jboxes == nboxes, f"trial {trial}"
+
+    def test_empty_mask(self):
+        boxes, valid = rois.extract_rois_jit(jnp.zeros((64, 64), bool))
+        assert not bool(valid.any())
+
+    def test_detects_small_distant_object(self):
+        """Small objects must survive the downsample (paper motivation)."""
+        mask = np.zeros((128, 128), bool)
+        mask[60:68, 60:68] = True                # ~8px object
+        boxes, valid = rois.extract_rois_jit(jnp.asarray(mask))
+        b = np.asarray(boxes)[np.asarray(valid)]
+        assert len(b) == 1
+        x0, y0, x1, y1 = b[0]
+        assert x0 <= 60 and y0 <= 60 and x1 >= 68 and y1 >= 68
+
+
+class TestGMMPipeline:
+    def test_end_to_end_scene_to_patches(self):
+        scene = Scene(preset(0, width=256, height=128))
+        state = gmm.init_state(128, 256)
+        got_patches = False
+        from repro.core.partitioning import partition_host
+        for t, frame, gt in scene.frames(25):
+            state, fg = gmm.update_jit(state, jnp.asarray(frame))
+            if t < 1.5:
+                continue
+            boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
+            b = np.asarray(boxes)[np.asarray(valid)]
+            patches = partition_host(b, 256, 128, 2, 2, t_gen=t)
+            if patches:
+                got_patches = True
+                for p in patches:
+                    assert 0 <= p.x0 < p.x1 <= 256
+                    assert 0 <= p.y0 < p.y1 <= 128
+        assert got_patches

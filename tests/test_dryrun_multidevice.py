@@ -1,0 +1,55 @@
+"""Multi-device dry-run coverage via subprocess (own XLA_FLAGS world).
+
+Runs launch/dryrun.py on the small test meshes (8 fake host devices) for a
+representative arch of each family, both single- and multi-pod.  The full
+production meshes are exercised by the real dry-run (EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_dryrun(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--mesh", "test",
+         "--quick", *args],
+        capture_output=True, text=True, env=env, timeout=900)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("vit-s16", "serve_b128"),
+    ("dit-s2", "gen_fast"),
+])
+def test_single_pod_test_mesh(arch, shape):
+    r = run_dryrun("--arch", arch, "--shape", shape)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 failed" in r.stdout
+
+
+def test_multi_pod_test_mesh_with_json():
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "r.json")
+        r = run_dryrun("--arch", "vit-s16", "--shape", "serve_b128",
+                       "--multi-pod", "--json", out)
+        assert r.returncode == 0, r.stdout + r.stderr
+        data = json.load(open(out))
+        assert len(data["results"]) == 1
+        assert data["failures"] == []
+        row = data["results"][0]
+        assert row["mesh"].startswith("2x")
+        assert row["flops_per_device"] > 0
+
+
+def test_lm_decode_on_test_mesh():
+    r = run_dryrun("--arch", "minitron-4b", "--shape", "decode_32k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "0 failed" in r.stdout

@@ -1,0 +1,115 @@
+"""SLO-aware batching invoker (Alg. 2 lines 1-23)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.invoker import SLOAwareInvoker
+from repro.core.latency import LatencyTable
+from repro.core.partitioning import Patch
+
+
+def table(mu=0.1, sigma=0.01, n=32):
+    return LatencyTable({b: (mu * b, sigma) for b in range(1, n + 1)},
+                        slack_sigmas=3.0)
+
+
+def patch(t_gen, slo=1.0, w=64, h=64):
+    return Patch(0, 0, w, h, t_gen=t_gen, slo=slo)
+
+
+def test_timer_fires_at_t_remain():
+    inv = SLOAwareInvoker(256, 256, table())
+    assert inv.on_patch(0.0, patch(0.0, slo=1.0)) == []
+    # t_remain = 1.0 - (0.1 + 3*0.01) = 0.87
+    assert inv.next_timer() == pytest.approx(0.87)
+    assert inv.poll(0.5) is None
+    fired = inv.poll(0.87)
+    assert fired is not None and fired.reason == "timer"
+    assert fired.batch_size == 1
+    assert inv.next_timer() == math.inf
+
+
+def test_waits_to_accumulate_under_slack():
+    inv = SLOAwareInvoker(256, 256, table())
+    inv.on_patch(0.0, patch(0.0))
+    assert inv.on_patch(0.1, patch(0.1)) == []   # still meets earliest ddl
+    fired = inv.poll(inv.next_timer())
+    assert fired.batch_size == 1                 # both fit one canvas
+    assert len(fired.patches) == 2
+
+
+def test_slo_pressure_dispatches_old_canvases():
+    # big patches: each fills a canvas; low slack; arrival near deadline
+    inv = SLOAwareInvoker(256, 256, table(mu=0.4), max_canvases=8)
+    inv.on_patch(0.0, patch(0.0, slo=2.0, w=256, h=256))
+    # second patch arrives late: adding it would need 2 canvases ->
+    # t_slack(2) = 0.8+0.03 -> t_remain = 2.0-0.83 = 1.17 < t_now = 1.5
+    fired = inv.on_patch(1.5, patch(1.5, slo=2.0, w=256, h=256))
+    assert len(fired) == 1
+    assert fired[0].reason == "slo_pressure"
+    assert len(fired[0].patches) == 1            # the OLD queue
+    assert len(inv.queue) == 1                   # new patch seeds next queue
+
+
+def test_memory_overflow_dispatches():
+    inv = SLOAwareInvoker(64, 64, table(mu=1e-4, sigma=0.0),
+                          max_canvases=2)
+    fired = []
+    for i in range(4):
+        fired += inv.on_patch(0.0, patch(0.0, slo=100.0, w=64, h=64))
+    reasons = [f.reason for f in fired]
+    assert "memory" in reasons
+
+
+def test_lone_late_patch_fires_immediately():
+    inv = SLOAwareInvoker(256, 256, table(mu=0.5))
+    fired = inv.on_patch(10.0, patch(0.0, slo=0.2))   # deadline long past
+    assert [f.reason for f in fired] == ["late"]
+    assert inv.queue == []
+
+
+def test_flush():
+    inv = SLOAwareInvoker(256, 256, table())
+    inv.on_patch(0.0, patch(0.0))
+    f = inv.flush(0.5)
+    assert f is not None and f.reason == "flush"
+    assert inv.flush(0.6) is None
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.integers(16, 256),
+                          st.integers(16, 256)), min_size=1, max_size=30))
+def test_never_exceeds_max_canvases(arrivals):
+    inv = SLOAwareInvoker(256, 256, table(), max_canvases=3)
+    arrivals = sorted(arrivals)
+    for t, w, h in arrivals:
+        while inv.next_timer() < t:
+            if inv.poll(inv.next_timer()) is None:
+                break
+        for f in inv.on_patch(t, patch(t, slo=1.0, w=w, h=h)):
+            assert f.batch_size <= 3 + 1   # old set may be at the limit
+    # invariant: the live canvas set respects the memory bound
+    assert len(inv.canvases) <= 3 + 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0, 5), min_size=1, max_size=25))
+def test_all_patches_eventually_dispatched(times):
+    inv = SLOAwareInvoker(256, 256, table(), max_canvases=8)
+    times = sorted(times)
+    total = 0
+    for t in times:
+        while inv.next_timer() < t:
+            f = inv.poll(inv.next_timer())
+            if f is None:
+                break
+            total += len(f.patches)
+        for f in inv.on_patch(t, patch(t)):
+            total += len(f.patches)
+    while inv.next_timer() < math.inf:
+        f = inv.poll(inv.next_timer())
+        if f is None:
+            break
+        total += len(f.patches)
+    assert total == len(times)

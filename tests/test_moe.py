@@ -1,0 +1,85 @@
+"""MoE dispatch invariants (GShard grouped top-k routing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import MoEConfig
+from repro.models import moe
+
+
+def _gates(rng, g, s, e):
+    logits = jnp.asarray(rng.normal(size=(g, s, e)), jnp.float32)
+    return jax.nn.softmax(logits, axis=-1)
+
+
+class TestTopKDispatch:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000), st.integers(1, 3), st.sampled_from([4, 8]))
+    def test_capacity_never_exceeded(self, seed, top_k, n_experts):
+        rng = np.random.default_rng(seed)
+        cfg = MoEConfig(n_experts=n_experts, top_k=top_k,
+                        capacity_factor=1.0, group_size=16)
+        cap = moe.capacity(16, cfg)
+        gates = _gates(rng, 2, 16, n_experts)
+        dispatch, combine, aux = moe._top_k_dispatch(gates, cfg, cap)
+        # per (group, expert, slot): at most one token
+        per_slot = jnp.sum(dispatch, axis=1)          # (G, E, C)
+        assert float(per_slot.max()) <= 1.0 + 1e-6
+        # per token: at most top_k assignments
+        per_token = jnp.sum(dispatch, axis=(2, 3))    # (G, S)
+        assert float(per_token.max()) <= top_k + 1e-6
+
+    def test_combine_weights_normalized(self):
+        rng = np.random.default_rng(0)
+        cfg = MoEConfig(n_experts=8, top_k=2, capacity_factor=2.0,
+                        group_size=16)
+        cap = moe.capacity(16, cfg)
+        gates = _gates(rng, 2, 16, 8)
+        dispatch, combine, _ = moe._top_k_dispatch(gates, cfg, cap)
+        # with generous capacity every token keeps its k experts and the
+        # combine weights per token sum to 1
+        sums = jnp.sum(combine, axis=(2, 3))
+        np.testing.assert_allclose(np.asarray(sums), 1.0, atol=1e-5)
+
+    def test_dropping_under_tight_capacity(self):
+        rng = np.random.default_rng(1)
+        cfg = MoEConfig(n_experts=4, top_k=2, capacity_factor=0.25,
+                        group_size=32)
+        cap = moe.capacity(32, cfg)
+        gates = _gates(rng, 1, 32, 4)
+        dispatch, _, _ = moe._top_k_dispatch(gates, cfg, cap)
+        assigned = float(jnp.sum(dispatch))
+        assert assigned < 32 * 2          # some tokens dropped
+        assert assigned > 0
+
+    def test_aux_loss_penalizes_imbalance(self):
+        cfg = MoEConfig(n_experts=4, top_k=1, capacity_factor=4.0,
+                        group_size=16)
+        cap = moe.capacity(16, cfg)
+        uniform = jnp.full((1, 16, 4), 0.25)
+        skewed = jnp.asarray(np.tile([0.97, 0.01, 0.01, 0.01], (1, 16, 1)),
+                             jnp.float32)
+        _, _, aux_u = moe._top_k_dispatch(uniform, cfg, cap)
+        _, _, aux_s = moe._top_k_dispatch(skewed, cfg, cap)
+        assert float(aux_s) > float(aux_u)
+
+    def test_block_output_shape_and_grads(self):
+        rng = np.random.default_rng(2)
+        cfg = MoEConfig(n_experts=4, top_k=2, n_shared=1, d_ff_expert=32,
+                        group_size=32)
+        from repro import param as P
+        specs = moe.moe_specs(64, cfg, jnp.float32)
+        params = P.init_params(jax.random.PRNGKey(0), specs)
+        x = jnp.asarray(rng.normal(size=(2, 32, 64)) * 0.1, jnp.float32)
+        from repro.sharding import DEFAULT_RULES
+        out, aux = moe.moe_block(params, x, cfg, compute_dtype=jnp.float32,
+                                 rules=DEFAULT_RULES)
+        assert out.shape == x.shape
+        g = jax.grad(lambda p: jnp.sum(moe.moe_block(
+            p, x, cfg, compute_dtype=jnp.float32,
+            rules=DEFAULT_RULES)[0] ** 2))(params)
+        total = sum(float(jnp.abs(l).sum())
+                    for l in jax.tree_util.tree_leaves(g))
+        assert np.isfinite(total) and total > 0

@@ -1,0 +1,90 @@
+"""Algorithm 1 (adaptive frame partitioning): JAX + host implementations."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitioning import (coverage, partition, partition_host,
+                                     Patch)
+
+
+def test_single_roi_single_patch():
+    boxes = np.array([[10, 10, 50, 60]])
+    patches = partition_host(boxes, 400, 300, 2, 2, align=1)
+    assert len(patches) == 1
+    p = patches[0]
+    assert (p.x0, p.y0, p.x1, p.y1) == (10, 10, 50, 60)
+
+
+def test_roi_affiliated_with_max_overlap_zone():
+    # box mostly in zone (1,1) of a 2x2 grid on 400x300
+    boxes = np.array([[190, 140, 390, 290]])   # mostly bottom-right
+    patches = partition_host(boxes, 400, 300, 2, 2, align=1)
+    assert len(patches) == 1
+
+
+def test_enclosing_rect_covers_all_rois():
+    boxes = np.array([[10, 10, 30, 30], [50, 50, 90, 90]])  # same zone
+    patches = partition_host(boxes, 400, 300, 2, 2, align=1)
+    assert len(patches) == 1
+    p = patches[0]
+    assert p.x0 <= 10 and p.y0 <= 10 and p.x1 >= 90 and p.y1 >= 90
+
+
+def test_rois_split_across_zones():
+    boxes = np.array([[10, 10, 30, 30], [310, 210, 370, 280]])
+    patches = partition_host(boxes, 400, 300, 2, 2, align=1)
+    assert len(patches) == 2
+
+
+def test_alignment_rounds_up():
+    boxes = np.array([[0, 0, 33, 17]])
+    patches = partition_host(boxes, 400, 300, 2, 2, align=16)
+    p = patches[0]
+    assert p.w % 16 == 0 and p.h % 16 == 0
+    assert p.w >= 33 and p.h >= 17
+
+
+def test_jax_matches_host():
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        n = rng.integers(1, 12)
+        x0 = rng.integers(0, 350, n)
+        y0 = rng.integers(0, 250, n)
+        boxes = np.stack([x0, y0,
+                          x0 + rng.integers(5, 50, n),
+                          y0 + rng.integers(5, 50, n)], -1).astype(np.int32)
+        jp, jv = partition(jnp.asarray(boxes), jnp.ones(n, bool),
+                           400, 300, 4, 4, align=8)
+        jboxes = sorted(map(tuple, np.asarray(jp)[np.asarray(jv)]))
+        hp = partition_host(boxes, 400, 300, 4, 4, align=8)
+        hboxes = sorted((p.x0, p.y0, p.x1, p.y1) for p in hp)
+        assert jboxes == hboxes
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 6), st.integers(1, 6),
+       st.integers(0, 10_000))
+def test_every_roi_covered(n, zx, zy, seed):
+    """Alg. 1 invariant: every RoI is fully inside its zone's patch."""
+    rng = np.random.default_rng(seed)
+    x0 = rng.integers(0, 300, n)
+    y0 = rng.integers(0, 200, n)
+    boxes = np.stack([x0, y0,
+                      x0 + rng.integers(1, 90, n),
+                      y0 + rng.integers(1, 90, n)], -1)
+    boxes[:, 2] = boxes[:, 2].clip(max=400)
+    boxes[:, 3] = boxes[:, 3].clip(max=300)
+    patches = partition_host(boxes, 400, 300, zx, zy, align=1)
+    assert coverage(patches, boxes) == 1.0
+
+
+def test_coverage_proxy_detects_loss():
+    patches = [Patch(0, 0, 50, 50)]
+    boxes = np.array([[10, 10, 40, 40], [100, 100, 150, 150]])
+    assert coverage(patches, boxes) == 0.5
+
+
+def test_patch_metadata_deadline():
+    p = Patch(0, 0, 10, 10, t_gen=2.0, slo=1.5)
+    assert p.deadline == 3.5 and p.area == 100

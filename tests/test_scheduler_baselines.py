@@ -1,0 +1,118 @@
+"""End-to-end scheduler simulation + baseline comparisons (paper claims)."""
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from repro.core.latency import detector_latency_model
+from repro.core.partitioning import Patch
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+CANVAS = 256
+SLO = 1.0
+
+
+def make_streams(n_cams=2, n_frames=20, per_frame=6, seed=0):
+    rng = np.random.default_rng(seed)
+    streams = []
+    for cam in range(n_cams):
+        patches = []
+        for f in range(n_frames):
+            t = f / 10.0
+            for _ in range(rng.integers(1, per_frame + 1)):
+                w = int(rng.integers(16, 160))
+                h = int(rng.integers(16, 160))
+                patches.append(Patch(0, 0, w, h, frame_id=f, camera_id=cam,
+                                     t_gen=t, slo=SLO))
+        streams.append(patches)
+    return streams
+
+
+def table():
+    return detector_latency_model(CANVAS, CANVAS).build_table(16)
+
+
+def run_tangram(streams, bw=20e6):
+    plat = Platform(table(), PlatformConfig())
+    sched = TangramScheduler(CANVAS, CANVAS, table(), plat,
+                             check_invariants=True)
+    return sched.run(streams, bw)
+
+
+class TestTangramEndToEnd:
+    def test_all_patches_served_once(self):
+        streams = make_streams()
+        res = run_tangram(streams)
+        assert res.n_patches == sum(len(s) for s in streams)
+
+    def test_slo_violations_within_5pct(self):
+        """The paper's headline claim at the default setting."""
+        res = run_tangram(make_streams(n_cams=3, n_frames=30))
+        assert res.violation_rate <= 0.05
+
+    def test_batching_amortizes_invocations(self):
+        res = run_tangram(make_streams())
+        assert res.invocations < res.n_patches / 3
+
+    def test_canvas_efficiency_reported(self):
+        res = run_tangram(make_streams())
+        assert res.canvas_efficiencies
+        assert all(0 < e <= 1.0 for e in res.canvas_efficiencies)
+
+    def test_higher_bandwidth_improves_canvas_efficiency(self):
+        """Fig. 13(d): higher bw -> faster arrivals -> fuller canvases."""
+        lo = run_tangram(make_streams(seed=4), bw=10e6)
+        hi = run_tangram(make_streams(seed=4), bw=80e6)
+        assert np.mean(hi.canvas_efficiencies) >= \
+            np.mean(lo.canvas_efficiencies) - 0.05
+
+
+class TestBaselineComparisons:
+    def test_tangram_cheaper_than_elf(self):
+        """Fig. 8/12: per-patch invocation (ELF) costs more."""
+        streams = make_streams(n_cams=3, n_frames=30)
+        tangram = run_tangram(streams)
+        elf = baselines.run_elf(streams, 20e6,
+                                Platform(table(), PlatformConfig()),
+                                CANVAS * CANVAS)
+        assert tangram.total_cost < elf.total_cost
+
+    def test_tangram_cheaper_than_clipper_and_mark(self):
+        streams = make_streams(n_cams=3, n_frames=30)
+        tangram = run_tangram(streams)
+        clip = baselines.run_clipper(streams, 20e6,
+                                     Platform(table(), PlatformConfig()),
+                                     CANVAS * CANVAS, tile_side=128, slo=SLO)
+        mark = baselines.run_mark(streams, 20e6,
+                                  Platform(table(), PlatformConfig()),
+                                  CANVAS * CANVAS, tile_side=128)
+        assert tangram.total_cost < clip.total_cost
+        assert tangram.total_cost < mark.total_cost
+
+    def test_patch_bandwidth_below_full_frame(self):
+        """Fig. 9: RoI patches use less bandwidth than full frames."""
+        streams = make_streams(n_cams=1, n_frames=20)
+        tangram = run_tangram(streams)
+        frames = [baselines.FrameMeta(960, 540, 20000, t_gen=f / 10.0,
+                                      slo=SLO) for f in range(20)]
+        full = baselines.run_frame_baseline(
+            [frames], 20e6, Platform(table(), PlatformConfig()),
+            masked=False)
+        assert tangram.bytes_sent < full.bytes_sent
+
+    def test_masked_frame_saves_bandwidth_not_compute(self):
+        frames = [baselines.FrameMeta(960, 540, 20000, t_gen=f / 10.0,
+                                      slo=SLO) for f in range(10)]
+        full = baselines.run_frame_baseline(
+            [frames], 20e6, Platform(table(), PlatformConfig()), masked=False)
+        masked = baselines.run_frame_baseline(
+            [frames], 20e6, Platform(table(), PlatformConfig()), masked=True)
+        assert masked.bytes_sent < 0.5 * full.bytes_sent
+        assert masked.invocations == full.invocations
+
+    def test_results_summary_keys(self):
+        res = run_tangram(make_streams())
+        s = res.summary()
+        for key in ("violation_rate", "cost_usd", "bytes_mb",
+                    "mean_canvas_eff", "amortized_latency_s"):
+            assert key in s

@@ -1,0 +1,71 @@
+"""Sequence packing — the stitching idea applied to LM serving."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency import LatencyTable
+from repro.core.sequence_packing import (Request, SequencePacker,
+                                         attention_mask_blocks, pack,
+                                         packing_efficiency)
+
+
+def reqs(lengths, slo=1.0):
+    return [Request(n, t_gen=0.0, slo=slo, request_id=i)
+            for i, n in enumerate(lengths)]
+
+
+class TestPack:
+    def test_best_fit_chooses_tightest_row(self):
+        rows = pack(reqs([700, 200, 300]), 1024)
+        # 200 joins the 700 row (free 324); 300 no longer fits -> new row
+        assert len(rows) == 2
+        assert rows[0].used == 900
+        assert rows[1].used == 300
+        # best-fit: a later 100 prefers row0 (free 124) over row1 (free 724)
+        rows = pack(reqs([700, 200, 300, 100]), 1024)
+        assert rows[0].used == 1000
+
+    def test_oversized_raises(self):
+        with pytest.raises(ValueError):
+            pack(reqs([2000]), 1024)
+
+    def test_mask_blocks_align_with_spans(self):
+        rows = pack(reqs([100, 200]), 512)
+        blocks = attention_mask_blocks(rows)
+        assert blocks[0] == [(0, 100), (100, 300)]
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(1, 1024), min_size=1, max_size=50))
+    def test_invariants(self, lengths):
+        rows = pack(reqs(lengths), 1024)
+        # every request placed exactly once, spans within rows, no overlap
+        seen = []
+        for row in rows:
+            pos = 0
+            for (idx, s, e) in row.spans:
+                assert s == pos and e <= 1024
+                pos = e
+                seen.append(idx)
+        assert sorted(seen) == list(range(len(lengths)))
+        assert sum(r.used for r in rows) == sum(lengths)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(1, 1024), min_size=1, max_size=50))
+    def test_row_lower_bound(self, lengths):
+        rows = pack(reqs(lengths), 1024)
+        assert len(rows) >= math.ceil(sum(lengths) / 1024)
+
+
+class TestSequencePackerInvoker:
+    def test_reuses_slo_invoker(self):
+        table = LatencyTable({b: (0.05 * b, 0.005) for b in range(1, 65)})
+        sp = SequencePacker(1024, table)
+        assert sp.on_request(0.0, Request(600, 0.0, 1.0, 0)) == []
+        assert sp.on_request(0.1, Request(300, 0.1, 1.0, 1)) == []
+        t = sp.next_timer()
+        assert 0 < t < 1.0
+        inv = sp.poll(t)
+        assert inv is not None
+        assert len(inv.patches) == 2
+        assert inv.batch_size == 1        # both packed into one row

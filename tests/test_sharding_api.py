@@ -1,0 +1,145 @@
+"""Sharding rules, divisibility fixups, plan_cell metadata."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import api
+from repro import configs as reg
+from repro.config import ShapeConfig, TransformerConfig
+from repro.configs.reduced import reduce_arch
+from repro.sharding import (DEFAULT_RULES, ShardingConfig, divisible_spec,
+                            logical_to_spec, merge_rules)
+
+
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class TestRules:
+    def test_logical_to_spec_basic(self):
+        spec = logical_to_spec(("batch", "seq", "embed"), DEFAULT_RULES)
+        assert spec == P(("data", "pod"))
+
+    def test_duplicate_mesh_axis_dropped(self):
+        # batch takes data; a second data-mapped axis must be dropped
+        rules = merge_rules(DEFAULT_RULES, {"embed": "data"})
+        spec = logical_to_spec(("batch", "embed"), rules)
+        assert spec == P(("data", "pod"))
+
+    def test_fsdp_overlay(self):
+        rules = ShardingConfig.make(fsdp=True).rules
+        assert rules["embed"] == "data"
+        assert ShardingConfig.make().rules["embed"] is None
+
+    def test_sequence_overlay(self):
+        rules = ShardingConfig.make(sequence_parallel=True).rules
+        assert rules["kv_seq"] == "model"
+
+
+class TestDivisibleSpec:
+    class FakeMesh:
+        axis_names = ("data", "model")
+        class devices:
+            shape = (4, 16)
+
+    def test_drops_non_dividing_axis(self):
+        # 40 heads cannot shard over 16
+        spec = divisible_spec((64, 40, 128), ("embed", "heads", "head_dim"),
+                              DEFAULT_RULES, self.FakeMesh)
+        assert spec == P()
+
+    def test_keeps_dividing_axis(self):
+        spec = divisible_spec((64, 32, 128), ("embed", "heads", "head_dim"),
+                              DEFAULT_RULES, self.FakeMesh)
+        assert spec == P(None, "model")
+
+    def test_greedy_prefix_for_tuples(self):
+        # batch 8 over data(4) x pod(absent): keeps data only
+        spec = divisible_spec((8, 10), ("batch", None), DEFAULT_RULES,
+                              self.FakeMesh)
+        assert spec == P("data")
+
+    def test_partial_product(self):
+        # batch 2: data(4) doesn't divide -> dropped entirely
+        spec = divisible_spec((2, 10), ("batch", None), DEFAULT_RULES,
+                              self.FakeMesh)
+        assert spec == P()
+
+
+class TestPlans:
+    def test_plan_kinds(self):
+        spec = reg.get("deepseek-moe-16b")
+        model = reduce_arch(spec.model)
+        mesh = mesh11()
+        rules = ShardingConfig.make().rules
+        kinds = {}
+        for shape in spec.shapes:
+            from repro.configs.reduced import reduce_shape
+            plan = api.plan_cell(model, reduce_shape(model, shape), mesh,
+                                 rules)
+            kinds[shape.name] = plan.kind
+        assert kinds == {"train_4k": "train", "prefill_32k": "prefill",
+                         "decode_32k": "decode", "long_500k": "decode"}
+
+    def test_dryrun_unit_scaling_train(self):
+        spec = reg.get("mistral-large-123b")
+        model = reduce_arch(spec.model)
+        mesh = mesh11()
+        rules = ShardingConfig.make().rules
+        shape = ShapeConfig("t", "train", seq_len=128, global_batch=8)
+        plan = api.plan_cell(model, shape, mesh, rules, accum_steps=4,
+                             dryrun=True)
+        assert plan.scale == 4.0
+        # microbatch: batch dim of tokens = 8 / 4 = 2
+        assert plan.args[2]["tokens"].shape == (2, 128)
+
+    def test_dryrun_unit_scaling_gen(self):
+        spec = reg.get("dit-s2")
+        model = reduce_arch(spec.model)
+        mesh = mesh11()
+        shape = ShapeConfig("g", "gen", img_res=64, global_batch=2, steps=10)
+        plan = api.plan_cell(model, shape, mesh,
+                             ShardingConfig.make().rules, dryrun=True)
+        assert plan.scale == 10.0
+
+    def test_depth_override(self):
+        spec = reg.get("vit-b16")
+        model = reduce_arch(spec.model)
+        mesh = mesh11()
+        shape = ShapeConfig("s", "serve", img_res=64, global_batch=1)
+        plan = api.plan_cell(model, shape, mesh,
+                             ShardingConfig.make().rules, dryrun=True,
+                             depth_override=1)
+        # 1-layer unit has fewer params than the 2-layer reduced model
+        n1 = sum(x.size for x in jax.tree_util.tree_leaves(plan.args[0]))
+        plan2 = api.plan_cell(model, shape, mesh,
+                              ShardingConfig.make().rules, dryrun=True,
+                              depth_override=2)
+        n2 = sum(x.size for x in jax.tree_util.tree_leaves(plan2.args[0]))
+        assert n2 > n1
+
+    def test_all_cells_enumerates_40(self):
+        cells = list(reg.all_cells())
+        assert len(cells) == 40
+
+
+class TestChunkedAttentionParity:
+    def test_chunked_matches_xla(self, rng):
+        from repro.models import transformer as tfm
+        from repro import param as param_lib
+        from repro.sharding import DEFAULT_RULES as R
+        cfg = TransformerConfig(
+            name="t", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+            d_ff=128, vocab=256, head_dim=16, param_dtype="float32",
+            compute_dtype="float32", remat=False)
+        params = param_lib.init_params(jax.random.PRNGKey(0),
+                                       tfm.param_specs(cfg))
+        batch = {"tokens": jnp.asarray(rng.integers(0, 256, (2, 4096)),
+                                       jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, 256, (2, 4096)),
+                                       jnp.int32)}
+        a = tfm.lm_loss(cfg, params, batch, R, impl="xla")
+        b = tfm.lm_loss(cfg, params, batch, R, impl="chunked")
+        assert float(abs(a - b)) < 1e-4

@@ -1,0 +1,122 @@
+"""Patch-stitching solver (Alg. 2 lines 24-39): unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partitioning import Patch
+from repro.core.stitching import (Canvas, FreeRect, _choose, _split, stitch,
+                                  total_efficiency, validate)
+
+
+def P_(w, h, **kw):
+    return Patch(0, 0, w, h, **kw)
+
+
+class TestChoose:
+    def test_best_short_side_fit(self):
+        free = [FreeRect(0, 0, 100, 100), FreeRect(0, 0, 60, 80)]
+        # patch 50x50: rect2 leaves min(10, 30) = 10 < rect1 min(50,50)=50
+        assert _choose(free, 50, 50) == 1
+
+    def test_no_fit(self):
+        assert _choose([FreeRect(0, 0, 10, 10)], 20, 5) is None
+
+    def test_exact_fit_preferred(self):
+        free = [FreeRect(0, 0, 100, 100), FreeRect(0, 0, 50, 50)]
+        assert _choose(free, 50, 50) == 1
+
+
+class TestSplit:
+    def test_split_covers_residual_area(self):
+        c = FreeRect(10, 20, 50, 80)
+        parts = _split(c, 30, 40)
+        residual = c.w * c.h - 30 * 40
+        assert sum(p.w * p.h for p in parts) == residual
+
+    def test_no_empty_rects(self):
+        parts = _split(FreeRect(0, 0, 50, 50), 50, 50)
+        assert parts == []
+
+    def test_shorter_axis_rule(self):
+        # wide rect (w > h): vertical cut -> right part is full height
+        parts = _split(FreeRect(0, 0, 100, 50), 30, 20)
+        right = [p for p in parts if p.x == 30]
+        assert right and right[0].h == 50
+        # tall rect: horizontal cut -> top part is full width
+        parts = _split(FreeRect(0, 0, 50, 100), 30, 20)
+        top = [p for p in parts if p.y == 20]
+        assert top and top[0].w == 50
+
+
+class TestStitch:
+    def test_single_patch_bottom_left(self):
+        cs = stitch([P_(100, 50)], 256, 256)
+        assert len(cs) == 1
+        p = cs[0].placements[0]
+        assert (p.x, p.y) == (0, 0)
+
+    def test_opens_new_canvas_when_full(self):
+        cs = stitch([P_(256, 256), P_(256, 256)], 256, 256)
+        assert len(cs) == 2
+
+    def test_packs_four_quadrants(self):
+        cs = stitch([P_(128, 128)] * 4, 256, 256)
+        assert len(cs) == 1
+        assert cs[0].efficiency == 1.0
+
+    def test_oversized_patch_raises(self):
+        with pytest.raises(ValueError):
+            stitch([P_(300, 10)], 256, 256)
+
+    def test_no_resize_no_padding(self):
+        """Placements keep exact patch dims (the paper's core property)."""
+        patches = [P_(37, 91), P_(200, 13), P_(64, 64)]
+        cs = stitch(patches, 256, 256)
+        placed = {pl.patch_idx: pl for c in cs for pl in c.placements}
+        for i, p in enumerate(patches):
+            assert (placed[i].w, placed[i].h) == (p.w, p.h)
+
+    def test_deterministic(self):
+        patches = [P_(60, 60), P_(100, 40), P_(40, 100), P_(120, 120)]
+        a = stitch(patches, 256, 256)
+        b = stitch(patches, 256, 256)
+        assert [(p.x, p.y) for c in a for p in c.placements] == \
+            [(p.x, p.y) for c in b for p in c.placements]
+
+
+@st.composite
+def patch_lists(draw):
+    n = draw(st.integers(1, 40))
+    return [P_(draw(st.integers(1, 256)), draw(st.integers(1, 256)))
+            for _ in range(n)]
+
+
+class TestStitchProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(patch_lists())
+    def test_invariants(self, patches):
+        cs = stitch(patches, 256, 256)
+        validate(cs)  # in-bounds + pairwise non-overlap
+        # every patch placed exactly once
+        placed = sorted(pl.patch_idx for c in cs for pl in c.placements)
+        assert placed == list(range(len(patches)))
+
+    @settings(max_examples=60, deadline=None)
+    @given(patch_lists())
+    def test_area_conservation(self, patches):
+        cs = stitch(patches, 256, 256)
+        assert sum(c.used_area for c in cs) == sum(p.area for p in patches)
+
+    @settings(max_examples=30, deadline=None)
+    @given(patch_lists())
+    def test_canvas_count_lower_bound(self, patches):
+        cs = stitch(patches, 256, 256)
+        min_canvases = -(-sum(p.area for p in patches) // (256 * 256))
+        assert len(cs) >= min_canvases
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 16))
+    def test_identical_quarters_fill_fully(self, n):
+        cs = stitch([P_(128, 128)] * (4 * n), 256, 256)
+        assert len(cs) == n
+        assert total_efficiency(cs) == 1.0

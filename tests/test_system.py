@@ -1,0 +1,57 @@
+"""End-to-end behaviour tests for the Tangram system.
+
+The full loop: synthetic scene -> GMM -> RoIs -> Algorithm 1 -> bandwidth-
+shaped arrivals -> Algorithm 2 (stitch + SLO-aware invoker) -> serverless
+platform -> per-patch SLO accounting — plus the real-model serving driver
+(stitch kernel in interpret mode + jit'd detector).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gmm, partitioning, rois
+from repro.core.latency import detector_latency_model
+from repro.core.scheduler import TangramScheduler
+from repro.data.synthetic import Scene, preset
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+def build_patch_streams(n_frames=25, slo=1.0):
+    scene = Scene(preset(0, width=320, height=160))
+    state = gmm.init_state(160, 320)
+    stream = []
+    for t, frame, gt in scene.frames(n_frames):
+        state, fg = gmm.update_jit(state, jnp.asarray(frame))
+        if t < 1.0:
+            continue
+        boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
+        b = np.asarray(boxes)[np.asarray(valid)]
+        stream.extend(partitioning.partition_host(
+            b, 320, 160, 4, 4, frame_id=scene.t, t_gen=t, slo=slo))
+    return [stream]
+
+
+def test_full_pipeline_meets_slo_budget():
+    streams = build_patch_streams()
+    assert sum(len(s) for s in streams) > 10
+    model = detector_latency_model(256, 256)
+    table = model.build_table(16)
+    plat = Platform(table, PlatformConfig())
+    sched = TangramScheduler(256, 256, table, plat, check_invariants=True)
+    res = sched.run(streams, bandwidth_bps=20e6)
+    assert res.n_patches == sum(len(s) for s in streams)
+    assert res.violation_rate <= 0.05          # the paper's headline claim
+    assert res.invocations >= 1
+    assert res.total_cost > 0
+
+
+def test_serve_driver_with_real_model_and_pallas_stitch():
+    """launch/serve.py: real jit'd detector + Pallas stitch (interpret)."""
+    from repro.launch import serve
+    serve.main(["--frames", "16", "--canvas", "128", "--slo", "5.0",
+                "--use-pallas-stitch"])
+
+
+def test_train_driver_reduced_detector():
+    from repro.launch import train
+    train.main(["--arch", "tangram-detector", "--steps", "3", "--batch", "2"])
