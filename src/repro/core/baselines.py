@@ -65,7 +65,8 @@ def _collect(name: str, outcomes, bytes_sent, platform, batch_sizes,
         bytes_sent=bytes_sent, total_cost=platform.total_cost,
         invocations=len(platform.records),
         exec_seconds=platform.meter.busy_seconds,
-        transmission_seconds=trans)
+        transmission_seconds=trans,
+        mean_consolidation=platform.mean_consolidation)
 
 
 # ------------------------------------------------------------ full/masked ----
@@ -79,7 +80,7 @@ def run_frame_baseline(frame_streams: Sequence[Sequence[FrameMeta]],
     arrivals = merge_arrivals(per_cam)
     outcomes = []
     for a in arrivals:
-        rec = platform.submit(a.t_arrive, 1)
+        rec = platform.submit(a.t_arrive, 1, n_patches=1)
         outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
                                      rec.t_finish))
     bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
@@ -99,7 +100,7 @@ def run_elf(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
     outcomes = []
     for a in arrivals:
         equiv = max(a.patch.area / canvas_area, 0.05)
-        rec = platform.submit(a.t_arrive, equiv)
+        rec = platform.submit(a.t_arrive, equiv, n_patches=1)
         outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
                                      rec.t_finish))
     bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
@@ -131,7 +132,8 @@ def run_clipper(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
         nonlocal target
         batch = queue[: max(1, int(target))]
         del queue[: len(batch)]
-        rec = platform.submit(t_now, len(batch) * tile_equiv)
+        rec = platform.submit(t_now, len(batch) * tile_equiv,
+                              n_patches=len(batch))
         batch_sizes.append(len(batch))
         ppb.append(len(batch))
         ok = True
@@ -172,7 +174,8 @@ def run_mark(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
     def fire(t_now: float):
         batch = list(queue)
         queue.clear()
-        rec = platform.submit(t_now, len(batch) * tile_equiv)
+        rec = platform.submit(t_now, len(batch) * tile_equiv,
+                              n_patches=len(batch))
         batch_sizes.append(len(batch))
         ppb.append(len(batch))
         for a in batch:

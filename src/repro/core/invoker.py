@@ -23,7 +23,7 @@ from typing import List, Optional, Sequence
 
 from repro.core.latency import LatencyTable
 from repro.core.partitioning import Patch
-from repro.core.stitching import Canvas, stitch
+from repro.core.stitching import BatchPlan, Canvas, build_batch_plan, stitch
 
 
 @dataclasses.dataclass
@@ -33,10 +33,21 @@ class Invocation:
     patches: List[Patch]
     t_slack: float
     reason: str                 # timer | slo_pressure | memory | late | flush
+    plan: Optional[BatchPlan] = None   # built lazily by batch_plan()
 
     @property
     def batch_size(self) -> int:
         return len(self.canvases)
+
+    def batch_plan(self) -> BatchPlan:
+        """The device-ready multi-canvas plan for this invocation.  Built
+        on first use so pure-simulation paths (scheduler sweeps) never pay
+        for record packing; executors that move pixels always need it."""
+        if self.plan is None:
+            m = self.canvases[0].m if self.canvases else 1
+            n = self.canvases[0].n if self.canvases else 1
+            self.plan = build_batch_plan(self.patches, self.canvases, m, n)
+        return self.plan
 
 
 class SLOAwareInvoker:

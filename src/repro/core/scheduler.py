@@ -50,6 +50,7 @@ class Results:
     invocations: int
     exec_seconds: float
     transmission_seconds: float
+    mean_consolidation: float = 0.0   # patches per invocation (platform view)
 
     @property
     def n_patches(self) -> int:
@@ -87,6 +88,7 @@ class Results:
                 sum(self.canvas_efficiencies)
                 / max(len(self.canvas_efficiencies), 1), 4),
             "amortized_latency_s": round(self.amortized_latency, 4),
+            "mean_consolidation": round(self.mean_consolidation, 2),
         }
 
 
@@ -109,7 +111,14 @@ class TangramScheduler:
     def _dispatch(self, inv: Invocation):
         if self.check_invariants:
             validate(inv.canvases)
-        rec = self.platform.submit(inv.t_submit, len(inv.canvases))
+            # every queued patch must be placed exactly once (the unstitch
+            # gather relies on this); checked on the packing itself so the
+            # simulation never pays for device record packing
+            placed = sorted(p.patch_idx for c in inv.canvases
+                            for p in c.placements)
+            assert placed == list(range(len(inv.patches))), placed
+        rec = self.platform.submit(inv.t_submit, len(inv.canvases),
+                                   n_patches=len(inv.patches))
         self.batch_sizes.append(len(inv.canvases))
         self.patches_per_batch.append(len(inv.patches))
         for c in inv.canvases:
@@ -152,4 +161,5 @@ class TangramScheduler:
             total_cost=self.platform.total_cost,
             invocations=len(self.platform.records),
             exec_seconds=self.platform.meter.busy_seconds,
-            transmission_seconds=trans)
+            transmission_seconds=trans,
+            mean_consolidation=self.platform.mean_consolidation)

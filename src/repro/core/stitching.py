@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.partitioning import Patch
 
 
@@ -122,6 +124,84 @@ def stitch(patches: Sequence[Patch], m: int, n: int) -> List[Canvas]:
             canvas.free.extend(_split(c, p.w, p.h))
             canvases.append(canvas)
     return canvases
+
+
+# eq=False: the generated __eq__ would elementwise-compare the records
+# ndarray and raise in truth contexts (e.g. `plan in list`)
+@dataclasses.dataclass(frozen=True, eq=False)
+class BatchPlan:
+    """Device-ready layout for stitching one multi-canvas batch.
+
+    The SLO-aware invoker emits a whole batch of packings per invocation;
+    this plan is the single array handed to the batched Pallas engine
+    (``kernels.stitch``): one kernel launch stitches all ``num_canvases``
+    canvases, and the same records drive the inverse unstitch gather.
+    """
+    canvas_m: int
+    canvas_n: int
+    num_canvases: int
+    num_patches: int
+    slots_per_canvas: int            # K: max placements on any canvas
+    hmax: int                        # patch slot height (pow2-bucketed)
+    wmax: int                        # patch slot width  (pow2-bucketed)
+    records: np.ndarray              # (B, K, 6) int32 (valid, slot, x, y, w, h)
+    slot_capacity: int = 0           # pow2-bucketed slot count (>= num_patches)
+
+    def __post_init__(self):
+        # derive (or repair) the capacity so manually built plans can't
+        # violate the >= num_patches invariant pack_plan_host relies on
+        if self.slot_capacity < max(self.num_patches, 1):
+            object.__setattr__(self, "slot_capacity",
+                               _bucket_pow2(self.num_patches, 1 << 30))
+
+    @property
+    def canvas_batch_shape(self) -> Tuple[int, int, int]:
+        return (self.num_canvases, self.canvas_m, self.canvas_n)
+
+    def placements(self):
+        """Yield (canvas_idx, patch_idx, x, y, w, h) for valid records."""
+        for bi in range(self.records.shape[0]):
+            for rec in self.records[bi]:
+                if rec[0] > 0:
+                    yield (bi, int(rec[1]), int(rec[2]), int(rec[3]),
+                           int(rec[4]), int(rec[5]))
+
+
+def _bucket_pow2(x: int, cap: int) -> int:
+    """Round x up to the next power of two, clamped to cap (min 1)."""
+    x = max(x, 1)
+    return min(1 << (x - 1).bit_length(), cap)
+
+
+def build_batch_plan(patches: Sequence[Patch], canvases: Sequence[Canvas],
+                     m: int, n: int, *, min_slots: int = 1) -> BatchPlan:
+    """Flatten a packing (list of canvases) into one batched plan.
+
+    ``patches`` is the stitched queue the placements index into.  An empty
+    packing yields a plan with zero canvases/patches whose records array
+    still has a well-defined (0, K, 6) shape.
+
+    Slot extents and the slot count are bucketed to powers of two (zero
+    padding is free) so the jit'd stitch/unstitch wrappers, which treat
+    these as static, amortize compiles across invocations with varying
+    queues instead of re-tracing per shape.
+    """
+    hmax = _bucket_pow2(max((p.h for p in patches), default=1), m)
+    wmax = _bucket_pow2(max((p.w for p in patches), default=1), n)
+    # K is bucketed too so the records array's traced shape stays stable;
+    # B is left exact — the detector batch dim retraces per B regardless,
+    # and padding B would run the model on dead canvases
+    k = _bucket_pow2(
+        max(max((len(c.placements) for c in canvases), default=0),
+            min_slots), 1 << 30)
+    b = len(canvases)
+    records = np.zeros((b, k, 6), np.int32)
+    for bi, canvas in enumerate(canvases):
+        for ki, pl_ in enumerate(canvas.placements):
+            records[bi, ki] = (1, pl_.patch_idx, pl_.x, pl_.y, pl_.w, pl_.h)
+    return BatchPlan(canvas_m=m, canvas_n=n, num_canvases=b,
+                     num_patches=len(patches), slots_per_canvas=k,
+                     hmax=hmax, wmax=wmax, records=records)
 
 
 def total_efficiency(canvases: Sequence[Canvas]) -> float:

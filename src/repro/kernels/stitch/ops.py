@@ -1,23 +1,28 @@
-"""Jit'd public entry for canvas stitching + host-side record packing."""
+"""Jit'd public entries for canvas stitch/unstitch + host-side packing.
+
+The device side is batched end-to-end: ``stitch_canvases`` assembles a
+whole multi-canvas batch in one call, ``unstitch_patches`` gathers every
+placement back out, and ``route_detections`` maps canvas-space detector
+outputs to per-frame boxes via the same :class:`BatchPlan` records.
+"""
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partitioning import Patch
-from repro.core.stitching import Canvas
-from repro.kernels.stitch.ref import stitch_reference
-from repro.kernels.stitch.stitch import stitch_pallas
+from repro.core.stitching import BatchPlan
+from repro.kernels.stitch.ref import stitch_reference, unstitch_reference
+from repro.kernels.stitch.stitch import stitch_pallas, unstitch_pallas
 
 
 @functools.partial(jax.jit, static_argnames=("m", "n", "impl"))
 def stitch_canvases(patch_pixels, records, m: int, n: int,
                     impl: str = "xla"):
-    """Assemble canvases from padded patch slots.
+    """Assemble a batch of canvases from padded patch slots.
 
     impl: "xla" (reference), "pallas" (TPU kernel),
           "pallas_interpret" (kernel body on CPU, for tests).
@@ -28,25 +33,74 @@ def stitch_canvases(patch_pixels, records, m: int, n: int,
                          interpret=(impl == "pallas_interpret"))
 
 
-def pack_host(frame_pixels: Sequence[np.ndarray],
-              patches: Sequence[Patch], canvases: Sequence[Canvas],
-              hmax: int, wmax: int, max_per_canvas: int
-              ) -> Tuple[np.ndarray, np.ndarray]:
-    """Host prep: patch crops -> padded slots + placement records.
+@functools.partial(jax.jit,
+                   static_argnames=("num_patches", "hmax", "wmax", "impl"))
+def unstitch_patches(canvases, records, num_patches: int, hmax: int,
+                     wmax: int, impl: str = "xla"):
+    """Inverse of :func:`stitch_canvases`: canvases -> padded patch slots."""
+    if impl == "xla":
+        return unstitch_reference(canvases, records, num_patches, hmax, wmax)
+    return unstitch_pallas(canvases, records, num_patches, hmax, wmax,
+                           interpret=(impl == "pallas_interpret"))
 
-    frame_pixels[i] is the (h, w, C) crop for patches[i].  Returns
-    (patch_pixels (P, hmax, wmax, C), records (B, K, 6) int32).
+
+def pack_plan_host(frame_pixels: Sequence[np.ndarray],
+                   plan: BatchPlan) -> np.ndarray:
+    """Host prep: copy patch crops into the plan's padded slot array.
+
+    frame_pixels[i] is the (h, w, C) crop for queue patch i.  Returns
+    patch_pixels (slot_capacity, hmax, wmax, C) float32, zero-padded —
+    the pow2-bucketed capacity keeps jit shapes stable across invocations.
     """
     c = frame_pixels[0].shape[-1] if frame_pixels else 3
-    p = max(len(patches), 1)
-    slots = np.zeros((p, hmax, wmax, c), np.float32)
+    slots = np.zeros((plan.slot_capacity, plan.hmax, plan.wmax, c),
+                     np.float32)
     for i, px in enumerate(frame_pixels):
         h, w = px.shape[:2]
-        assert h <= hmax and w <= wmax, (h, w, hmax, wmax)
+        assert h <= plan.hmax and w <= plan.wmax, (h, w, plan.hmax, plan.wmax)
         slots[i, :h, :w] = px
-    records = np.zeros((max(len(canvases), 1), max_per_canvas, 6), np.int32)
-    for bi, canvas in enumerate(canvases):
-        assert len(canvas.placements) <= max_per_canvas, "raise K"
-        for ki, pl_ in enumerate(canvas.placements):
-            records[bi, ki] = (1, pl_.patch_idx, pl_.x, pl_.y, pl_.w, pl_.h)
-    return slots, records
+    return slots
+
+
+def route_detections(plan: BatchPlan, patches: Sequence[Patch],
+                     obj: np.ndarray, boxes: np.ndarray,
+                     obj_threshold: float = 0.5
+                     ) -> Dict[int, List[Tuple[float, Tuple[float, ...]]]]:
+    """Route canvas-space detector outputs back to their source frames.
+
+    obj: (B, s, s) objectness, boxes: (B, s, s, 4) xyxy in canvas pixels.
+    A detection belongs to the placement whose rectangle contains its
+    decoded box center (cell centers would drop detections in placements
+    narrower than one detector cell); its box is clipped to the placement
+    and translated from canvas space to the patch's frame coordinates.
+    Returns {frame_id: [(score, box_xyxy), ...]}.
+    """
+    obj = np.asarray(obj, np.float32)
+    boxes = np.asarray(boxes, np.float32)
+    b = obj.shape[0]
+    bcx = (boxes[..., 0] + boxes[..., 2]) / 2     # (B, s, s) box centers
+    bcy = (boxes[..., 1] + boxes[..., 3]) / 2
+
+    out: Dict[int, List[Tuple[float, Tuple[float, ...]]]] = {}
+    for bi, patch_idx, x, y, w, h in plan.placements():
+        if bi >= b:
+            continue
+        patch = patches[patch_idx]
+        hit = ((obj[bi] >= obj_threshold)
+               & (bcx[bi] >= x) & (bcx[bi] < x + w)
+               & (bcy[bi] >= y) & (bcy[bi] < y + h))
+        if not hit.any():
+            continue
+        dx = patch.x0 - x
+        dy = patch.y0 - y
+        dests = out.setdefault(patch.frame_id, [])
+        for score, bx in zip(obj[bi][hit], boxes[bi][hit]):
+            # clip to the placement rect: pixels past it belong to a
+            # neighboring placement (possibly another frame entirely)
+            x0 = min(max(float(bx[0]), x), x + w)
+            y0 = min(max(float(bx[1]), y), y + h)
+            x1 = min(max(float(bx[2]), x), x + w)
+            y1 = min(max(float(bx[3]), y), y + h)
+            dests.append((float(score),
+                          (x0 + dx, y0 + dy, x1 + dx, y1 + dy)))
+    return out

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the canvas stitch kernel.
+"""Pure-jnp oracles for the canvas stitch / unstitch kernels.
 
 Device-side canvas assembly: patches live in padded slots
 ``patch_pixels (P, Hmax, Wmax, C)`` with per-placement records
@@ -45,4 +45,38 @@ def stitch_reference(patch_pixels: jnp.ndarray, records: jnp.ndarray,
             blended = jnp.where(mask[..., None], shifted, window)
             out = out.at[bi].set(
                 jax.lax.dynamic_update_slice(out[bi], blended, (ys, xs, 0)))
+    return out
+
+
+def unstitch_reference(canvases: jnp.ndarray, records: jnp.ndarray,
+                       num_patches: int, hmax: int, wmax: int) -> jnp.ndarray:
+    """Inverse oracle: gather each placement's (h, w) region from its
+    canvas back into a zero-padded (num_patches, hmax, wmax, C) slot array.
+    Invalid records leave the output untouched."""
+    b, m, n, c = canvases.shape
+    _, k, _ = records.shape
+    out = jnp.zeros((num_patches, hmax, wmax, c), canvases.dtype)
+    if num_patches == 0:
+        return out
+
+    rows = jnp.arange(hmax)
+    cols = jnp.arange(wmax)
+
+    for bi in range(b):
+        for ki in range(k):
+            valid, slot, x, y, w, h = (records[bi, ki, i] for i in range(6))
+            ys = jnp.clip(y, 0, m - hmax)
+            xs = jnp.clip(x, 0, n - wmax)
+            window = jax.lax.dynamic_slice(canvases[bi], (ys, xs, 0),
+                                           (hmax, wmax, c))
+            shifted = jnp.roll(jnp.roll(window, -(y - ys), axis=0),
+                               -(x - xs), axis=1)
+            mask = ((rows[:, None] < h) & (cols[None, :] < w) & (valid > 0))
+            patch = jnp.where(mask[..., None], shifted,
+                              jnp.zeros_like(shifted))
+            prev = jax.lax.dynamic_index_in_dim(out, slot, axis=0,
+                                                keepdims=False)
+            upd = jnp.where(valid > 0, patch, prev)
+            out = jax.lax.dynamic_update_slice(
+                out, upd[None], (slot, 0, 0, 0))
     return out

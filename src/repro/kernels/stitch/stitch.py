@@ -1,15 +1,25 @@
-"""Pallas TPU kernel: scatter packed patches into canvases.
+"""Pallas TPU kernels: batched canvas stitch (scatter) and unstitch (gather).
 
 TPU adaptation of Tangram's host-side cv2 canvas assembly (DESIGN.md §2):
 instead of compositing on the host and DMA'ing finished canvases, the
-function instance DMAs compact patch slots HBM->VMEM and assembles the
-canvas entirely in VMEM, one pass, no host round-trip.
+function instance DMAs compact patch slots HBM->VMEM and assembles a whole
+*batch* of canvases in one kernel launch, no host round-trip.  The inverse
+kernel gathers each placement's pixels back out of the canvases so
+per-patch detector outputs can be routed to their source frames.
 
-Grid: (B canvases, K placement slots).  The output BlockSpec maps every k
-step of a canvas to the same (M, N, C) block, so the canvas stays resident
-in VMEM across its K placement steps (accumulation pattern); the patch
-input streams one (Hmax, Wmax, C) slot per step.  Records ride in SMEM via
-scalar prefetch and drive the dynamic in-VMEM stores.
+Grid: (B canvases, K placement slots) — the leading grid dimension batches
+over canvases, so one launch stitches an entire multi-canvas packing plan.
+The canvas BlockSpec maps every k step of a canvas to the same (M, N, C)
+block, so the canvas stays resident in VMEM across its K placement steps
+(accumulation pattern); the patch input streams one (Hmax, Wmax, C) slot
+per step, selected by the record's slot id via scalar prefetch.  Records
+ride in SMEM and drive the dynamic in-VMEM loads/stores (``pl.ds`` — never
+raw integer indices, which the state-discharge pass rejects).
+
+Unstitch inverts the mapping: the canvas block is the streamed input and
+the patch slot is the output block, scattered to ``records[b, k, 1]``.
+Invalid records are parked on a dummy slot appended past the real patches
+so they can never clobber live output; the dummy is sliced off on return.
 
 VMEM budget (defaults): canvas 1024x1024x3 bf16 = 6.0 MiB + one patch slot
 512x512x3 bf16 = 1.5 MiB << 16 MiB/core.
@@ -44,6 +54,8 @@ def _stitch_kernel(records_ref,          # SMEM (B, K, 6) int32
     @pl.when(valid > 0)
     def _place():
         img = patch_ref[0]                            # (Hmax, Wmax, C)
+        # clamp the Hmax x Wmax window inside the canvas; shift the patch
+        # by the clamp offset so its (h, w) region still lands at (y, x)
         ys = jnp.clip(slot_y, 0, m - hmax)
         xs = jnp.clip(slot_x, 0, n - wmax)
         dy = slot_y - ys
@@ -53,11 +65,9 @@ def _stitch_kernel(records_ref,          # SMEM (B, K, 6) int32
         mask = ((rows >= dy) & (rows < dy + h)
                 & (cols >= dx) & (cols < dx + w))
         shifted = jnp.roll(jnp.roll(img, dy, axis=0), dx, axis=1)
-        window = pl.load(out_ref, (0, pl.dslice(ys, hmax),
-                                   pl.dslice(xs, wmax), slice(None)))
-        blended = jnp.where(mask[..., None], shifted, window)
-        pl.store(out_ref, (0, pl.dslice(ys, hmax), pl.dslice(xs, wmax),
-                           slice(None)), blended)
+        window = out_ref[0, pl.ds(ys, hmax), pl.ds(xs, wmax), :]
+        out_ref[0, pl.ds(ys, hmax), pl.ds(xs, wmax), :] = (
+            jnp.where(mask[..., None], shifted, window))
 
 
 def stitch_pallas(patch_pixels: jnp.ndarray, records: jnp.ndarray,
@@ -67,6 +77,9 @@ def stitch_pallas(patch_pixels: jnp.ndarray, records: jnp.ndarray,
     p_, hmax, wmax, c = patch_pixels.shape
     b, k, _ = records.shape
     assert hmax <= m and wmax <= n, "patch slot larger than canvas"
+    if b == 0 or k == 0 or p_ == 0:
+        # empty packing: a zero canvas batch, no degenerate kernel launch
+        return jnp.zeros((b, m, n, c), patch_pixels.dtype)
 
     kernel = functools.partial(_stitch_kernel, m=m, n=n, hmax=hmax, wmax=wmax)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -86,3 +99,76 @@ def stitch_pallas(patch_pixels: jnp.ndarray, records: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, m, n, c), patch_pixels.dtype),
         interpret=interpret,
     )(records, patch_pixels)
+
+
+def _unstitch_kernel(records_ref,        # SMEM (B, K, 6) int32
+                     canvas_ref,         # VMEM (1, M, N, C)
+                     out_ref,            # VMEM (1, Hmax, Wmax, C)
+                     *, m: int, n: int, hmax: int, wmax: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    valid = records_ref[b, k, 0]
+    slot_x = records_ref[b, k, 2]
+    slot_y = records_ref[b, k, 3]
+    w = records_ref[b, k, 4]
+    h = records_ref[b, k, 5]
+
+    ys = jnp.clip(slot_y, 0, m - hmax)
+    xs = jnp.clip(slot_x, 0, n - wmax)
+    dy = slot_y - ys
+    dx = slot_x - xs
+    window = canvas_ref[0, pl.ds(ys, hmax), pl.ds(xs, wmax), :]
+    # the placement starts at (dy, dx) inside the clamped window; shift it
+    # back to the slot origin and zero everything outside the (h, w) region
+    shifted = jnp.roll(jnp.roll(window, -dy, axis=0), -dx, axis=1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 1)
+    mask = (rows < h) & (cols < w) & (valid > 0)
+    out_ref[0] = jnp.where(mask[..., None], shifted,
+                           jnp.zeros_like(shifted))
+
+
+def unstitch_pallas(canvases: jnp.ndarray, records: jnp.ndarray,
+                    num_patches: int, hmax: int, wmax: int,
+                    *, interpret: bool = False) -> jnp.ndarray:
+    """Inverse of :func:`stitch_pallas`: gather each placement back out.
+
+    canvases: (B, M, N, C); records: (B, K, 6) int32 as in stitch.
+    Returns patch slots (num_patches, hmax, wmax, C) with each slot's
+    (h, w) region copied from its placement and the padding zeroed.
+    Slots not referenced by any valid record are undefined — the packer
+    places every queued patch exactly once, so this never happens for
+    real plans.
+    """
+    b, m, n, c = canvases.shape
+    _, k, _ = records.shape
+    assert hmax <= m and wmax <= n, "patch slot larger than canvas"
+    if num_patches == 0 or b == 0 or k == 0:
+        return jnp.zeros((num_patches, hmax, wmax, c), canvases.dtype)
+
+    kernel = functools.partial(_unstitch_kernel, m=m, n=n,
+                               hmax=hmax, wmax=wmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, m, n, c),
+                         lambda bi, ki, recs: (bi, 0, 0, 0)),
+        ],
+        # scatter each placement to its slot; invalid records park on the
+        # dummy slot at index num_patches so they cannot clobber live data
+        out_specs=pl.BlockSpec(
+            (1, hmax, wmax, c),
+            lambda bi, ki, recs: (jnp.where(recs[bi, ki, 0] > 0,
+                                            recs[bi, ki, 1], num_patches),
+                                  0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_patches + 1, hmax, wmax, c),
+                                       canvases.dtype),
+        interpret=interpret,
+    )(records, canvases)
+    return out[:num_patches]

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,6 @@ from repro.config import DetectorConfig
 from repro.core import gmm, partitioning, rois
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import measure
-from repro.core.stitching import Canvas
 from repro.data.synthetic import Scene, preset
 from repro.kernels.stitch import ops as stitch_ops
 from repro.models import detector as detector_lib
@@ -69,7 +67,17 @@ def main(argv=None):
     state = gmm.init_state(scene.cfg.height, scene.cfg.width)
     invoker = SLOAwareInvoker(m, n, table, max_canvases=4)
 
-    n_patches = n_invocations = n_violations = 0
+    n_patches = n_invocations = n_detections = 0
+    evidence_bytes = 0
+
+    def run_invocation(inv):
+        nonlocal n_invocations, n_detections, evidence_bytes
+        n_invocations += 1
+        _, _, per_frame, pixels = _execute(inv, frames_store, serve_fn,
+                                           params, m, n,
+                                           args.use_pallas_stitch)
+        n_detections += sum(len(v) for v in per_frame.values())
+        evidence_bytes += sum(a.nbytes for v in pixels.values() for a in v)
     t_start = time.time()
     frames_store = {}
     for t, frame, gt in scene.frames(args.frames):
@@ -92,38 +100,54 @@ def main(argv=None):
             fired = invoker.on_patch(now, patch)
             fired += filter(None, [invoker.poll(now)])
             for inv in fired:
-                n_invocations += 1
-                _execute(inv, frames_store, serve_fn, params, m, n,
-                         args.use_pallas_stitch)
+                run_invocation(inv)
     last = invoker.flush(time.time() - t_start)
     if last:
-        n_invocations += 1
-        _execute(last, frames_store, serve_fn, params, m, n,
-                 args.use_pallas_stitch)
-    print(f"served {n_patches} patches in {n_invocations} invocations "
+        run_invocation(last)
+    print(f"served {n_patches} patches in {n_invocations} invocations, "
+          f"routed {n_detections} detections + "
+          f"{evidence_bytes / 1e6:.2f} MB patch evidence back to frames "
           f"({time.time()-t_start:.1f}s wall)")
 
 
 def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas):
-    """Assemble canvases (stitch kernel) and run the detector batch."""
-    crops, idx_map = [], {}
-    for i, patch in enumerate(inv.patches):
+    """One serverless invocation: the invoker's multi-canvas plan drives a
+    single batched stitch, the detector batch, and the inverse unstitch
+    that routes per-patch outputs back to their source frames."""
+    plan = inv.batch_plan()
+    crops = []
+    for patch in inv.patches:
         frame = frames_store.get(patch.frame_id)
         if frame is None:
             crops.append(np.zeros((patch.h, patch.w, 3), np.float32))
         else:
             crops.append(frame[patch.y0:patch.y1, patch.x0:patch.x1])
-    hmax = max((c.shape[0] for c in crops), default=1)
-    wmax = max((c.shape[1] for c in crops), default=1)
-    k = max((len(c.placements) for c in inv.canvases), default=1)
-    slots, records = stitch_ops.pack_host(crops, inv.patches, inv.canvases,
-                                          hmax, wmax, k)
+    slots = stitch_ops.pack_plan_host(crops, plan)
+    records = jnp.asarray(plan.records)
     impl = "pallas_interpret" if use_pallas else "xla"
     canvases = stitch_ops.stitch_canvases(
-        jnp.asarray(slots), jnp.asarray(records), m, n, impl=impl)
+        jnp.asarray(slots), records, m, n, impl=impl)
     obj, boxes = serve_fn(params, canvases)
-    jax.block_until_ready(obj)
-    return obj, boxes
+    # inverse gather, grouped by source frame alongside the routed
+    # detections.  The box head has no pixel-space output, so the
+    # canvases stand in for a per-pixel head (e.g. segmentation): the
+    # gathered slots equal the input crops, and the value here is
+    # exercising the unstitch path every invocation.  slot_capacity
+    # (pow2-bucketed) keeps the jit static shapes stable across
+    # invocations; rows past num_patches are never read.
+    patch_out = stitch_ops.unstitch_patches(
+        canvases, records, plan.slot_capacity, plan.hmax, plan.wmax,
+        impl=impl)
+    jax.block_until_ready((obj, patch_out))
+    per_frame = stitch_ops.route_detections(plan, inv.patches,
+                                            np.asarray(obj), np.asarray(boxes))
+    evidence = np.asarray(patch_out)
+    per_frame_pixels = {}
+    for i, patch in enumerate(inv.patches):
+        # copy: a view would pin the whole pow2-padded batch in memory
+        per_frame_pixels.setdefault(patch.frame_id, []).append(
+            np.ascontiguousarray(evidence[i, :patch.h, :patch.w]))
+    return obj, boxes, per_frame, per_frame_pixels
 
 
 if __name__ == "__main__":

@@ -44,10 +44,11 @@ class ExecutionRecord:
     t_start: float
     t_finish: float
     exec_s: float
-    batch_size: int
+    batch_size: int              # canvases in the invocation
     cold: bool
     hedged: bool
     cost: float
+    n_patches: int = 0           # patches consolidated into the batch
 
 
 class Platform:
@@ -94,7 +95,8 @@ class Platform:
 
     # ------------------------------------------------------------- submit ----
 
-    def submit(self, t_submit: float, batch_size: int) -> ExecutionRecord:
+    def submit(self, t_submit: float, batch_size: int,
+               n_patches: int = 0) -> ExecutionRecord:
         inst, t_start, cold = self._acquire(t_submit)
         exec_s, straggler = self._sample_exec(batch_size)
 
@@ -117,7 +119,8 @@ class Platform:
         inst.free_at = t_start + exec_s
         inst.warm_until = inst.free_at + self.cfg.keep_alive_s
         rec = ExecutionRecord(t_submit, t_start, t_finish, exec_s,
-                              batch_size, cold, hedged, cost)
+                              batch_size, cold, hedged, cost,
+                              n_patches=n_patches)
         self.records.append(rec)
         return rec
 
@@ -126,6 +129,15 @@ class Platform:
     @property
     def total_cost(self) -> float:
         return self.meter.total
+
+    @property
+    def mean_consolidation(self) -> float:
+        """Mean patches consolidated per invocation, over records that
+        reported patch counts (0.0 when none did)."""
+        counted = [r.n_patches for r in self.records if r.n_patches > 0]
+        if not counted:
+            return 0.0
+        return sum(counted) / len(counted)
 
     def utilization(self, horizon: float) -> float:
         if not self.instances or horizon <= 0:

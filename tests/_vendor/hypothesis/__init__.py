@@ -1,0 +1,99 @@
+"""Minimal drop-in subset of `hypothesis` for environments without it.
+
+Loaded only as a fallback: ``tests/conftest.py`` appends this directory to
+``sys.path`` when the real package is not installed (see pyproject.toml's
+test extra — CI installs the real thing).  Implements exactly the surface
+this repo's property tests use: ``given``, ``settings``, and the
+strategies in :mod:`hypothesis.strategies`.
+
+Semantics: ``@given`` draws ``settings.max_examples`` pseudo-random
+examples from a PRNG seeded by the test's qualified name, so runs are
+deterministic per test.  No shrinking, no example database, no health
+checks — failures report the drawn arguments and re-raise.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies", "HealthCheck", "assume"]
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class HealthCheck:
+    """Accepted and ignored (API compatibility)."""
+    all = classmethod(lambda cls: [])
+    too_slow = filter_too_much = data_too_large = None
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition):
+    """Abort the current example when the assumption fails."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class settings:
+    """Decorator recording run options; only ``max_examples`` is honored."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def given(*given_strategies, **given_kwargs):
+    """Run the test once per drawn example (deterministic per test name)."""
+    if given_kwargs:
+        raise NotImplementedError("shim supports positional strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            opts = getattr(wrapper, "_shim_settings", None) or settings()
+            seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+            rnd = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < opts.max_examples:
+                attempts += 1
+                if attempts > opts.max_examples * 50:
+                    raise RuntimeError(
+                        f"{fn.__qualname__}: could not satisfy assumptions")
+                drawn = [s.example_from(rnd) for s in given_strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as exc:
+                    # BaseExceptions (KeyboardInterrupt, pytest.skip's
+                    # Skipped, SystemExit) propagate untouched
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example #{ran}: "
+                        f"{drawn!r}") from exc
+                ran += 1
+
+        # hide the strategy-drawn trailing parameters from pytest's
+        # fixture resolution (they are filled by the shim, not fixtures)
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[:len(params) - len(given_strategies)])
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return decorate

@@ -1,0 +1,79 @@
+"""Strategy subset for the vendored hypothesis shim (see __init__.py).
+
+Each strategy is a thin wrapper over a draw function taking a
+``random.Random``; ``composite`` hands the user function a ``draw``
+callable bound to the current PRNG, matching real hypothesis usage.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[Any], Any]):
+        self._draw_fn = draw_fn
+
+    def example_from(self, rnd) -> Any:
+        return self._draw_fn(rnd)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self._draw_fn(rnd)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rnd):
+            for _ in range(1000):
+                v = self._draw_fn(rnd)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rnd: rnd.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rnd):
+        size = rnd.randint(min_size, max_size)
+        return [elements.example_from(rnd) for _ in range(size)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: tuple(s.example_from(rnd) for s in strategies))
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rnd: rnd.choice(strategies).example_from(rnd))
+
+
+def composite(fn: Callable[..., Any]) -> Callable[..., SearchStrategy]:
+    """``@st.composite`` — fn's first argument is the ``draw`` callable."""
+    def build(*args, **kwargs) -> SearchStrategy:
+        def draw_example(rnd):
+            def draw(strategy: SearchStrategy):
+                return strategy.example_from(rnd)
+            return fn(draw, *args, **kwargs)
+        return SearchStrategy(draw_example)
+    return build

@@ -7,13 +7,13 @@ import pytest
 
 from repro.core import gmm
 from repro.core.partitioning import Patch
-from repro.core.stitching import stitch
+from repro.core.stitching import build_batch_plan, stitch
 from repro.kernels.attention import ops as attn_ops
 from repro.kernels.attention.ref import decode_reference, mha_reference
 from repro.kernels.gmm import ops as gmm_ops
 from repro.kernels.stitch import ops as stitch_ops
-from repro.kernels.stitch.ref import stitch_reference
-from repro.kernels.stitch.stitch import stitch_pallas
+from repro.kernels.stitch.ref import stitch_reference, unstitch_reference
+from repro.kernels.stitch.stitch import stitch_pallas, unstitch_pallas
 
 
 # ------------------------------------------------------------ attention ----
@@ -99,12 +99,12 @@ def test_stitch_kernel_random_packings(dtype, m, n, hmax, wmax):
     patches = [Patch(0, 0, int(rng.integers(8, wmax + 1)),
                      int(rng.integers(8, hmax + 1))) for _ in range(9)]
     canvases = stitch(patches, m, n)
+    plan = build_batch_plan(patches, canvases, m, n)
+    assert plan.hmax <= hmax and plan.wmax <= wmax
     crops = [np.asarray(rng.normal(size=(p.h, p.w, 3)), np.float32)
              for p in patches]
-    slots, records = stitch_ops.pack_host(crops, patches, canvases,
-                                          hmax, wmax, max_per_canvas=9)
-    slots = jnp.asarray(slots, dtype)
-    records = jnp.asarray(records)
+    slots = jnp.asarray(stitch_ops.pack_plan_host(crops, plan), dtype)
+    records = jnp.asarray(plan.records)
     ref = stitch_reference(slots, records, m, n)
     out = stitch_pallas(slots, records, m, n, interpret=True)
     np.testing.assert_array_equal(np.asarray(out, np.float32),
@@ -119,6 +119,38 @@ def test_stitch_kernel_empty_canvas():
     assert float(jnp.abs(out).sum()) == 0.0
 
 
+def test_stitch_kernel_zero_patch_packing():
+    """A plan built from an empty queue yields a zero canvas batch without
+    launching a degenerate (zero-extent) kernel grid."""
+    plan = build_batch_plan([], [], 32, 32)
+    assert plan.num_canvases == 0 and plan.num_patches == 0
+    slots = jnp.zeros((1, plan.hmax, plan.wmax, 3), jnp.float32)
+    out = stitch_pallas(slots, jnp.asarray(plan.records), 32, 32,
+                        interpret=True)
+    assert out.shape == (0, 32, 32, 3)
+    # zero-slot records (K = 0) must also short-circuit, not launch
+    out = stitch_pallas(jnp.zeros((1, 8, 8, 3), jnp.float32),
+                        jnp.zeros((2, 0, 6), jnp.int32), 32, 32,
+                        interpret=True)
+    assert out.shape == (2, 32, 32, 3)
+    assert float(jnp.abs(out).sum()) == 0.0
+
+
+def test_stitch_kernel_single_patch_packing():
+    rng = np.random.default_rng(11)
+    patches = [Patch(0, 0, 12, 9)]
+    canvases = stitch(patches, 32, 32)
+    plan = build_batch_plan(patches, canvases, 32, 32)
+    crops = [np.asarray(rng.normal(size=(9, 12, 3)), np.float32)]
+    slots = jnp.asarray(stitch_ops.pack_plan_host(crops, plan))
+    records = jnp.asarray(plan.records)
+    out = stitch_pallas(slots, records, 32, 32, interpret=True)
+    assert out.shape == (1, 32, 32, 3)
+    np.testing.assert_array_equal(np.asarray(out[0, :9, :12]), crops[0])
+    assert float(jnp.abs(out[0, 9:]).sum()) == 0.0
+    assert float(jnp.abs(out[0, :, 12:]).sum()) == 0.0
+
+
 def test_stitch_jit_wrapper_impls_agree():
     rng = np.random.default_rng(5)
     slots = jnp.asarray(rng.normal(size=(3, 16, 16, 3)), jnp.float32)
@@ -128,6 +160,136 @@ def test_stitch_jit_wrapper_impls_agree():
     b = stitch_ops.stitch_canvases(slots, records, 32, 32,
                                    impl="pallas_interpret")
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------- unstitch ----
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_unstitch_round_trip_property(dtype, seed):
+    """stitch -> unstitch is the identity on patch slot contents for any
+    real packer output (placements are non-overlapping by construction)."""
+    m = n = 64
+    rng = np.random.default_rng(seed)
+    n_patches = int(rng.integers(1, 12))
+    patches = [Patch(0, 0, int(rng.integers(4, 33)), int(rng.integers(4, 33)))
+               for _ in range(n_patches)]
+    canvases = stitch(patches, m, n)
+    plan = build_batch_plan(patches, canvases, m, n)
+    crops = [np.asarray(rng.normal(size=(p.h, p.w, 3)), np.float32)
+             for p in patches]
+    slots = jnp.asarray(stitch_ops.pack_plan_host(crops, plan), dtype)
+    records = jnp.asarray(plan.records)
+    stitched = stitch_pallas(slots, records, m, n, interpret=True)
+    back = unstitch_pallas(stitched, records, plan.num_patches,
+                           plan.hmax, plan.wmax, interpret=True)
+    # exact round trip: both directions only move pixels, never blend
+    # (slots rows past num_patches are pow2-bucket padding, all zero)
+    np.testing.assert_array_equal(
+        np.asarray(back, np.float32),
+        np.asarray(slots[:plan.num_patches], np.float32))
+
+
+def test_unstitch_kernel_matches_reference():
+    m, n = 64, 128
+    rng = np.random.default_rng(21)
+    patches = [Patch(0, 0, int(rng.integers(8, 49)), int(rng.integers(8, 49)))
+               for _ in range(7)]
+    canvases = stitch(patches, m, n)
+    plan = build_batch_plan(patches, canvases, m, n)
+    batch = jnp.asarray(rng.normal(size=(plan.num_canvases, m, n, 3)),
+                        jnp.float32)
+    records = jnp.asarray(plan.records)
+    ref = unstitch_reference(batch, records, plan.num_patches,
+                             plan.hmax, plan.wmax)
+    out = unstitch_pallas(batch, records, plan.num_patches,
+                          plan.hmax, plan.wmax, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_unstitch_jit_wrapper_impls_agree():
+    rng = np.random.default_rng(23)
+    batch = jnp.asarray(rng.normal(size=(1, 32, 32, 3)), jnp.float32)
+    records = jnp.asarray([[[1, 0, 0, 0, 16, 16], [1, 1, 16, 16, 8, 8],
+                            [0, 0, 0, 0, 0, 0]]], jnp.int32)
+    a = stitch_ops.unstitch_patches(batch, records, 2, 16, 16, impl="xla")
+    b = stitch_ops.unstitch_patches(batch, records, 2, 16, 16,
+                                    impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _routing_plan():
+    """One 64x64 canvas, two 32x32 placements from different frames."""
+    from repro.core.stitching import BatchPlan
+    records = np.asarray([[(1, 0, 0, 0, 32, 32),
+                           (1, 1, 32, 0, 32, 32)]], np.int32)
+    plan = BatchPlan(canvas_m=64, canvas_n=64, num_canvases=1,
+                     num_patches=2, slots_per_canvas=2, hmax=32, wmax=32,
+                     records=records)
+    patches = [Patch(100, 100, 132, 132, frame_id=1),
+               Patch(200, 50, 232, 82, frame_id=2)]
+    return plan, patches
+
+
+def test_route_detections_frame_assignment_and_translation():
+    plan, patches = _routing_plan()
+    obj = np.zeros((1, 4, 4), np.float32)
+    boxes = np.zeros((1, 4, 4, 4), np.float32)
+    # box center (12, 12) -> placement A -> frame 1 at (100, 100)
+    obj[0, 0, 0] = 0.9
+    boxes[0, 0, 0] = (4, 4, 20, 20)
+    # box center (50, 20) -> placement B -> frame 2 at (200, 50)
+    obj[0, 1, 2] = 0.8
+    boxes[0, 1, 2] = (40, 10, 60, 30)
+    # below threshold: dropped even though it lies inside placement A
+    obj[0, 1, 0] = 0.2
+    boxes[0, 1, 0] = (4, 20, 20, 30)
+    routed = stitch_ops.route_detections(plan, patches, obj, boxes)
+    assert set(routed) == {1, 2}
+    (s1, b1), = routed[1]
+    assert s1 == pytest.approx(0.9)
+    assert b1 == pytest.approx((104, 104, 120, 120))
+    (s2, b2), = routed[2]
+    assert s2 == pytest.approx(0.8)
+    assert b2 == pytest.approx((208, 60, 228, 80))
+
+
+def test_route_detections_clips_spill_and_keeps_subcell_placements():
+    plan, patches = _routing_plan()
+    obj = np.zeros((1, 4, 4), np.float32)
+    boxes = np.zeros((1, 4, 4, 4), np.float32)
+    # box center (32, 12) is on placement B's edge; the box spills 8px
+    # into placement A and must be clipped to B before translation
+    obj[0, 0, 1] = 0.9
+    boxes[0, 0, 1] = (24, 4, 40, 20)
+    routed = stitch_ops.route_detections(plan, patches, obj, boxes)
+    assert set(routed) == {2}
+    (_, b2), = routed[2]
+    assert b2 == pytest.approx((200, 54, 208, 70))
+
+    # a placement narrower than one detector cell (cell = 16px here)
+    # still receives detections: routing is by decoded box center
+    from repro.core.stitching import BatchPlan
+    narrow = BatchPlan(canvas_m=64, canvas_n=64, num_canvases=1,
+                       num_patches=1, slots_per_canvas=1, hmax=10, wmax=10,
+                       records=np.asarray([[(1, 0, 44, 20, 10, 10)]],
+                                          np.int32))
+    npatches = [Patch(300, 400, 310, 410, frame_id=7)]
+    obj = np.zeros((1, 4, 4), np.float32)
+    boxes = np.zeros((1, 4, 4, 4), np.float32)
+    obj[0, 1, 2] = 0.95
+    boxes[0, 1, 2] = (45, 21, 53, 29)     # center (49, 25) inside 10x10 rect
+    routed = stitch_ops.route_detections(narrow, npatches, obj, boxes)
+    assert set(routed) == {7}
+    (_, b7), = routed[7]
+    assert b7 == pytest.approx((301, 401, 309, 409))
+
+
+def test_unstitch_empty():
+    batch = jnp.zeros((1, 32, 32, 3), jnp.float32)
+    out = unstitch_pallas(batch, jnp.zeros((1, 0, 6), jnp.int32), 0, 8, 8,
+                          interpret=True)
+    assert out.shape == (0, 8, 8, 3)
 
 
 # ------------------------------------------------------------------ gmm ----
