@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import param as param_lib
+from repro.compat import shardingx
 from repro.config import (DetectorConfig, DiTConfig, EfficientNetConfig,
                           ShapeConfig, TransformerConfig, ViTConfig, dtype_of)
 from repro.models import detector as detector_lib
@@ -349,7 +350,7 @@ def plan_cell(cfg, shape: ShapeConfig, mesh, rules: Rules, *,
 
 def lower_cell(plan: CellPlan, mesh):
     """Lower (not compile) the planned step on the mesh."""
-    with jax.sharding.set_mesh(mesh):
+    with shardingx.use_mesh(mesh):
         jitted = jax.jit(plan.step_fn, in_shardings=plan.in_shardings,
                          out_shardings=plan.out_shardings)
         return jitted.lower(*plan.args)

@@ -1,0 +1,1 @@
+"""Version-gated compatibility shims for jax API drift."""

@@ -36,9 +36,13 @@ class LatencyTable:
         if not keys:
             raise ValueError("empty latency table")
         if batch <= keys[0]:
-            k = keys[0]
-            mu, sg = self.table[k]
-            return mu * batch / k, sg
+            # clamp, don't extrapolate through the origin: below the
+            # smallest profiled point the fixed per-invocation overhead
+            # dominates, and ``mu * batch / k`` would drop it entirely,
+            # making t_slack over-optimistic (under-reported SLO
+            # violations).  The smallest profiled mu is a conservative
+            # floor for any smaller batch.
+            return self.table[keys[0]]
         if batch >= keys[-1]:
             # extrapolate from the last two points (throughput regime)
             if len(keys) == 1:
@@ -91,17 +95,29 @@ class AnalyticalLatencyModel:
             slack_sigmas=slack_sigmas)
 
 
-def measure(fn: Callable[[int], None], batch_sizes, iters: int = 30,
-            warmup: int = 3, slack_sigmas: float = 3.0) -> LatencyTable:
-    """Offline profiling of a real callable (paper: 1000 iterations)."""
+def measure(fn: Callable[[int], object], batch_sizes, iters: int = 30,
+            warmup: int = 3, slack_sigmas: float = 3.0,
+            sync: Optional[Callable[[object], None]] = None) -> LatencyTable:
+    """Offline profiling of a real callable (paper: 1000 iterations).
+
+    ``fn(batch)`` may dispatch asynchronously (jax jit returns before the
+    computation finishes); pass its result-synchronisation as ``sync``
+    (e.g. ``jax.block_until_ready``) so the wait lands inside the timed
+    region — bare ``perf_counter`` around an async dispatch measures
+    dispatch, not compute.
+    """
     table = {}
     for b in batch_sizes:
         for _ in range(warmup):
-            fn(b)
+            r = fn(b)
+            if sync is not None:
+                sync(r)
         ts = []
         for _ in range(iters):
             t0 = time.perf_counter()
-            fn(b)
+            r = fn(b)
+            if sync is not None:
+                sync(r)
             ts.append(time.perf_counter() - t0)
         table[b] = (float(np.mean(ts)), float(np.std(ts)))
     return LatencyTable(table, slack_sigmas=slack_sigmas)

@@ -25,6 +25,7 @@ import jax
 
 from repro import api
 from repro import configs as cfg_registry
+from repro.compat import shardingx
 from repro.config import HardwareConfig, shapes_for
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh, make_test_mesh, mesh_chips
@@ -51,7 +52,7 @@ def input_specs(arch_id: str, shape_name: str = None):
 
 def _compile_metrics(plan, mesh):
     compiled = api.lower_cell(plan, mesh).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = shardingx.cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     coll = hlo_analysis.parse_collectives(compiled.as_text())
     return {

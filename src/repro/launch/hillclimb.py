@@ -14,6 +14,7 @@ import dataclasses
 import json
 
 from repro import configs as cfg_registry
+from repro.compat import shardingx
 from repro.config import HardwareConfig
 from repro.launch.dryrun import run_cell
 from repro.launch.mesh import make_production_mesh
@@ -201,10 +202,10 @@ def run_detector_stitch(mesh, hw):
     s_sh = divisible_sharding(mesh, slots.shape, ("canvas", None, None, None),
                               rules)
     r_sh = api._replicated(mesh)
-    with jax.sharding.set_mesh(mesh):
+    with shardingx.use_mesh(mesh):
         compiled = jax.jit(step, in_shardings=(p_sh, s_sh, r_sh)).lower(
             ab_params, slots, records).compile()
-    ca = compiled.cost_analysis() or {}
+    ca = shardingx.cost_analysis_dict(compiled)
     v1 = {"flops": float(ca.get("flops", 0)),
           "bytes": float(ca.get("bytes accessed", 0)),
           "args": compiled.memory_analysis().argument_size_in_bytes}

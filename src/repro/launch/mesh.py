@@ -1,27 +1,49 @@
-"""Production mesh construction.
+"""Mesh construction for every launch surface.
 
-A FUNCTION, not a module-level constant: importing this module never
-touches jax device state, so smoke tests keep their 1-device world.
+FUNCTIONS, not module-level constants: importing this module never touches
+jax device state, so smoke tests keep their 1-device world.  All factories
+route through the version-gated compat layer (``repro.compat.shardingx``),
+which papers over the ``jax.make_mesh`` / axis-types API drift.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.compat import shardingx
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return shardingx.make_mesh(shape, axes)
 
 
 def make_test_mesh(*, multi_pod: bool = False):
     """Small stand-in meshes for CI (8 fake host devices)."""
     shape = (2, 2, 2) if multi_pod else (2, 4)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return shardingx.make_mesh(shape, axes)
+
+
+def make_unit_mesh():
+    """1x1 (data, model) mesh for single-device smoke tests: the same
+    rule tables resolve, every axis collapses to size 1."""
+    return shardingx.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serve_mesh(n_devices: int | None = None):
+    """Data-parallel serving mesh over the local device set.
+
+    The canvas batch shards its leading axis over "data"; "model" is kept
+    (size 1) so the standard rule tables resolve unchanged.  On a
+    1-device world this degenerates to the unit mesh and sharding is a
+    no-op — the serve driver runs identically either way.
+    """
+    devices = jax.devices()
+    n = n_devices if n_devices is not None else len(devices)
+    return shardingx.make_mesh((n, 1), ("data", "model"),
+                               devices=devices[:n])
 
 
 def mesh_chips(mesh) -> int:

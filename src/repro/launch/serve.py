@@ -6,8 +6,17 @@ adaptive frame partitioning (Alg. 1).  Cloud side: SLO-aware invoker
 executes the batch.  On CPU this runs a reduced detector; the platform
 billing and SLO accounting are the same objects the simulator uses.
 
+Multi-device: the detector batch runs under a ``NamedSharding``
+data-parallel layout — the stitched canvas batch is padded to the mesh's
+"data"-axis size and split over it, so each device detects its slice of
+the canvases (stitch -> sharded detect -> unstitch -> route, end to end).
+On a 1-device world the mesh degenerates to 1x1 and every step is
+identical to the unsharded path.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --frames 16
 """
 from __future__ import annotations
 
@@ -19,14 +28,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import param as param_lib
+from repro.compat import shardingx
 from repro.config import DetectorConfig
 from repro.core import gmm, partitioning, rois
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import measure
 from repro.data.synthetic import Scene, preset
 from repro.kernels.stitch import ops as stitch_ops
+from repro.launch.mesh import make_serve_mesh
 from repro.models import detector as detector_lib
-from repro.sharding import ShardingConfig
+from repro.sharding import ShardingConfig, divisible_sharding
 
 
 def build_detector(canvas: int = 256):
@@ -37,7 +48,30 @@ def build_detector(canvas: int = 256):
     params = param_lib.init_params(jax.random.PRNGKey(0),
                                    detector_lib.param_specs(cfg))
     serve_fn = jax.jit(lambda p, x: detector_lib.serve(cfg, p, x, rules))
-    return cfg, params, serve_fn
+    # the same table the jit-internal logical constraints use: callers
+    # must lay inputs out with these rules or force a reshard on entry
+    return cfg, params, serve_fn, rules
+
+
+def shard_canvases(canvases, mesh, rules):
+    """Lay the canvas batch out data-parallel over the serve mesh.
+
+    The batch is padded to a multiple of the "data"-axis size (records
+    never reference pad rows, so the detector output for them is simply
+    ignored), then device_put with the batch axis split over "data".
+    Pow2-style padding also stabilises jit static shapes: every batch
+    compiles to a multiple of the axis size.  Returns the sharded batch
+    and whether the data axis actually split it (False on 1 device).
+    """
+    n_data = shardingx.mesh_axis_sizes(mesh).get("data", 1)
+    pad = (-canvases.shape[0]) % n_data
+    if pad:
+        canvases = jnp.concatenate(
+            [canvases,
+             jnp.zeros((pad,) + canvases.shape[1:], canvases.dtype)])
+    sh = divisible_sharding(mesh, canvases.shape,
+                            ("batch", None, None, None), rules)
+    return jax.device_put(canvases, sh), bool(sh.spec) and n_data > 1
 
 
 def main(argv=None):
@@ -51,14 +85,23 @@ def main(argv=None):
                         "(interpret mode on CPU)")
     args = p.parse_args(argv)
 
-    cfg, params, serve_fn = build_detector(args.canvas)
+    cfg, params, serve_fn, rules = build_detector(args.canvas)
     m = n = args.canvas
+    mesh = make_serve_mesh()
+    axis_sizes = shardingx.mesh_axis_sizes(mesh)
+    print(f"serve mesh: data={axis_sizes.get('data', 1)} "
+          f"model={axis_sizes.get('model', 1)} "
+          f"({mesh.devices.size} devices)")
 
     # offline profiling (the paper's 1000-iteration stage, scaled down)
+    # under the same data-parallel layout execution will use; the sync
+    # hook keeps jit's async dispatch inside the timed region
     def run_batch(b):
         x = jnp.zeros((b, m, n, 3), jnp.float32)
-        jax.block_until_ready(serve_fn(params, x))
-    table = measure(run_batch, batch_sizes=(1, 2, 4), iters=5, warmup=1)
+        x, _ = shard_canvases(x, mesh, rules)
+        return serve_fn(params, x)
+    table = measure(run_batch, batch_sizes=(1, 2, 4), iters=5, warmup=1,
+                    sync=jax.block_until_ready)
     print("latency table:",
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
 
@@ -67,15 +110,16 @@ def main(argv=None):
     state = gmm.init_state(scene.cfg.height, scene.cfg.width)
     invoker = SLOAwareInvoker(m, n, table, max_canvases=4)
 
-    n_patches = n_invocations = n_detections = 0
+    n_patches = n_invocations = n_detections = n_sharded = 0
     evidence_bytes = 0
 
     def run_invocation(inv):
-        nonlocal n_invocations, n_detections, evidence_bytes
+        nonlocal n_invocations, n_detections, n_sharded, evidence_bytes
         n_invocations += 1
-        _, _, per_frame, pixels = _execute(inv, frames_store, serve_fn,
-                                           params, m, n,
-                                           args.use_pallas_stitch)
+        _, _, per_frame, pixels, sharded = _execute(
+            inv, frames_store, serve_fn, params, m, n,
+            args.use_pallas_stitch, mesh=mesh, rules=rules)
+        n_sharded += bool(sharded)
         n_detections += sum(len(v) for v in per_frame.values())
         evidence_bytes += sum(a.nbytes for v in pixels.values() for a in v)
     t_start = time.time()
@@ -104,16 +148,19 @@ def main(argv=None):
     last = invoker.flush(time.time() - t_start)
     if last:
         run_invocation(last)
-    print(f"served {n_patches} patches in {n_invocations} invocations, "
+    print(f"served {n_patches} patches in {n_invocations} invocations "
+          f"({n_sharded} data-parallel over data={axis_sizes.get('data', 1)}), "
           f"routed {n_detections} detections + "
           f"{evidence_bytes / 1e6:.2f} MB patch evidence back to frames "
           f"({time.time()-t_start:.1f}s wall)")
 
 
-def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas):
+def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas,
+             mesh=None, rules=None):
     """One serverless invocation: the invoker's multi-canvas plan drives a
-    single batched stitch, the detector batch, and the inverse unstitch
-    that routes per-patch outputs back to their source frames."""
+    single batched stitch, the data-parallel detector batch, and the
+    inverse unstitch that routes per-patch outputs back to their source
+    frames."""
     plan = inv.batch_plan()
     crops = []
     for patch in inv.patches:
@@ -127,6 +174,9 @@ def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas):
     impl = "pallas_interpret" if use_pallas else "xla"
     canvases = stitch_ops.stitch_canvases(
         jnp.asarray(slots), records, m, n, impl=impl)
+    sharded = False
+    if mesh is not None:
+        canvases, sharded = shard_canvases(canvases, mesh, rules)
     obj, boxes = serve_fn(params, canvases)
     # inverse gather, grouped by source frame alongside the routed
     # detections.  The box head has no pixel-space output, so the
@@ -147,7 +197,7 @@ def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas):
         # copy: a view would pin the whole pow2-padded batch in memory
         per_frame_pixels.setdefault(patch.frame_id, []).append(
             np.ascontiguousarray(evidence[i, :patch.h, :patch.w]))
-    return obj, boxes, per_frame, per_frame_pixels
+    return obj, boxes, per_frame, per_frame_pixels, sharded
 
 
 if __name__ == "__main__":

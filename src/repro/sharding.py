@@ -15,6 +15,8 @@ from typing import Mapping, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shardingx
+
 # A logical axis resolves to: a mesh axis name, a tuple of mesh axis names
 # (product sharding), or None (replicated).
 MeshAxes = Union[str, Tuple[str, ...], None]
@@ -186,13 +188,10 @@ def with_logical_constraint(x, logical_axes: Sequence[Optional[str]], rules: Rul
     rematerialization" (replicate + reshard) which injects massive
     all-gathers — replicating outright is strictly better.
     """
-    try:
-        env_mesh = jax.sharding.get_abstract_mesh()  # type: ignore[attr-defined]
-    except Exception:
-        env_mesh = None
-    if env_mesh is None or getattr(env_mesh, "empty", True):
+    env_mesh = shardingx.get_abstract_mesh()
+    if env_mesh is None:
         return x
-    sizes = dict(zip(env_mesh.axis_names, env_mesh.axis_sizes))
+    sizes = shardingx.mesh_axis_sizes(env_mesh)
     used: set = set()
     parts = []
     for dim, ax in zip(x.shape, logical_axes):

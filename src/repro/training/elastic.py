@@ -23,6 +23,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.compat import shardingx
+
 
 @dataclasses.dataclass
 class FailureEvent:
@@ -60,7 +62,7 @@ def shrink_mesh(mesh: jax.sharding.Mesh, failed_data_rows: Sequence[int]
     if not keep:
         raise RuntimeError("all data-parallel rows failed")
     devs = np.take(devs, keep, axis=data_idx)
-    return jax.sharding.Mesh(devs, names)
+    return shardingx.mesh_from_devices(devs, names)
 
 
 def rescale_batch(global_batch: int, old_rows: int, new_rows: int) -> int:

@@ -11,6 +11,7 @@ from repro import configs as reg
 from repro.config import (DiTConfig, EfficientNetConfig, TransformerConfig,
                           ViTConfig)
 from repro.configs.reduced import reduce_arch, reduce_shape
+from repro.launch.mesh import make_unit_mesh
 from repro.sharding import ShardingConfig
 
 RULES = ShardingConfig.make().rules
@@ -43,8 +44,7 @@ def test_reduced_train_or_serve_step(arch_id, rng):
     shapes = [s for s in spec.shapes if s.kind in ("train", "cls")] \
         or list(spec.shapes)
     shape = reduce_shape(model, shapes[0])
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_unit_mesh()
     plan = api.plan_cell(model, shape, mesh, RULES)
 
     params = param_lib.init_params(jax.random.PRNGKey(0),

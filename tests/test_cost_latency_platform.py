@@ -6,7 +6,7 @@ import pytest
 from repro.core.cost import (CostMeter, P_C, P_G, P_M, P_REQ, alibaba_cost,
                              TPUCostModel)
 from repro.core.latency import (AnalyticalLatencyModel, LatencyTable,
-                                detector_latency_model)
+                                detector_latency_model, measure)
 from repro.serverless.platform import Platform, PlatformConfig
 
 
@@ -58,6 +58,18 @@ class TestLatencyTable:
         mu, _ = t.mu_sigma(1.5)
         assert mu == pytest.approx(0.15)
 
+    def test_below_min_clamps_not_extrapolates(self):
+        """Regression: a table starting at batch 4 must not scale mu
+        through the origin for smaller batches — that drops the fixed
+        per-invocation overhead (mu_sigma(1) used to return 0.025s here)
+        and makes t_slack over-optimistic."""
+        t = LatencyTable({4: (0.1, 0.01), 8: (0.18, 0.01)})
+        assert t.mu_sigma(1) == (0.1, 0.01)
+        assert t.mu_sigma(3) == (0.1, 0.01)
+        # the conservative floor also keeps t_slack monotone in batch
+        assert t.t_slack(1) == pytest.approx(t.t_slack(4))
+        assert t.t_slack(0) == 0.0
+
 
 class TestAnalyticalModel:
     def test_monotone_in_batch(self):
@@ -80,6 +92,34 @@ class TestAnalyticalModel:
     def test_build_table(self):
         t = detector_latency_model(256, 256).build_table(8)
         assert set(t.table) == set(range(1, 9))
+
+
+class TestMeasure:
+    def test_sync_hook_times_deferred_work(self):
+        """An async-dispatching callable (jit-style: returns a handle
+        immediately, compute finishes later) must be timed through the
+        sync hook, not bare perf_counter around the dispatch."""
+        import time as _time
+
+        class Handle:
+            def __init__(self, delay):
+                self.delay = delay
+
+        def dispatch(b):           # returns instantly, like jax jit
+            return Handle(0.02 * b)
+
+        def block(h):              # like jax.block_until_ready
+            _time.sleep(h.delay)
+
+        t_nosync = measure(dispatch, (1,), iters=3, warmup=0)
+        t_sync = measure(dispatch, (1,), iters=3, warmup=0, sync=block)
+        assert t_nosync.table[1][0] < 0.01      # dispatch only
+        assert t_sync.table[1][0] >= 0.02       # waits for the "compute"
+
+    def test_sync_hook_applied_during_warmup(self):
+        seen = []
+        measure(lambda b: b, (2,), iters=1, warmup=2, sync=seen.append)
+        assert seen == [2, 2, 2]                # 2 warmups + 1 timed
 
 
 class TestPlatform:

@@ -53,3 +53,40 @@ def test_lm_decode_on_test_mesh():
     r = run_dryrun("--arch", "minitron-4b", "--shape", "decode_32k")
     assert r.returncode == 0, r.stdout + r.stderr
     assert "0 failed" in r.stdout
+
+
+def test_serve_pipeline_data_parallel_end_to_end():
+    """The full serving pipeline on 8 fake devices: stitch -> detector
+    under the data-parallel NamedSharding layout -> unstitch -> route.
+    The routed-detection count must match the 1-device run of the same
+    scene (sharding must not change results)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    # slo far beyond the wall time: batching is then driven only by the
+    # memory bound + the final flush, never by wall-clock timers, so both
+    # runs see identical invocations even on a loaded CI runner
+    argv = [sys.executable, "-m", "repro.launch.serve",
+            "--frames", "16", "--canvas", "128", "--slo", "120"]
+
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r8 = subprocess.run(argv, capture_output=True, text=True, env=env,
+                        timeout=900)
+    assert r8.returncode == 0, r8.stdout + r8.stderr
+    assert "serve mesh: data=8" in r8.stdout
+    served8 = [l for l in r8.stdout.splitlines() if l.startswith("served")]
+    assert served8 and "data-parallel over data=8" in served8[0]
+    # at least one invocation actually split its batch over the 8 devices
+    assert "(0 data-parallel" not in served8[0]
+
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    r1 = subprocess.run(argv, capture_output=True, text=True, env=env,
+                        timeout=900)
+    assert r1.returncode == 0, r1.stdout + r1.stderr
+    served1 = [l for l in r1.stdout.splitlines() if l.startswith("served")]
+
+    def stats(line):   # "served N patches in ... routed D detections"
+        toks = line.split()
+        return int(toks[1]), int(toks[toks.index("routed") + 1])
+    patches8, dets8 = stats(served8[0])
+    assert patches8 > 0
+    assert (patches8, dets8) == stats(served1[0])

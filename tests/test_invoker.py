@@ -93,6 +93,37 @@ def test_never_exceeds_max_canvases(arrivals):
     assert len(inv.canvases) <= 3 + 1
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0.05, 3.0),
+                          st.integers(16, 256), st.integers(16, 256)),
+                min_size=1, max_size=40))
+def test_eviction_invariants_under_pressure(arrivals):
+    """Memory/slo-pressure eviction invariants (Alg. 2 lines 11-17): after
+    ANY sequence of arrivals — mixed SLOs force slo_pressure/late firing,
+    mixed sizes force memory overflow — the live canvas set respects the
+    memory bound and no Invocation ever fires with an empty patch list."""
+    max_canvases = 3
+    inv = SLOAwareInvoker(256, 256, table(), max_canvases=max_canvases)
+    fired = []
+    for t, slo, w, h in sorted(arrivals):
+        while inv.next_timer() < t:
+            f = inv.poll(inv.next_timer())
+            if f is None:
+                break
+            fired.append(f)
+        fired += inv.on_patch(t, patch(t, slo=slo, w=w, h=h))
+        assert len(inv.canvases) <= max_canvases, \
+            "canvas set exceeds the memory bound after an arrival"
+    f = inv.flush(11.0)
+    if f is not None:
+        fired.append(f)
+    for f in fired:
+        assert f.patches, f"empty-patch Invocation fired ({f.reason})"
+        assert f.canvases, f"patch-bearing Invocation with no canvases"
+    assert len(inv.canvases) <= max_canvases
+    assert inv.queue == []
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.floats(0, 5), min_size=1, max_size=25))
 def test_all_patches_eventually_dispatched(times):

@@ -8,13 +8,9 @@ from repro import api
 from repro import configs as reg
 from repro.config import ShapeConfig, TransformerConfig
 from repro.configs.reduced import reduce_arch
+from repro.launch.mesh import make_unit_mesh as mesh11
 from repro.sharding import (DEFAULT_RULES, ShardingConfig, divisible_spec,
                             logical_to_spec, merge_rules)
-
-
-def mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
 
 
 class TestRules:

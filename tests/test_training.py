@@ -118,8 +118,8 @@ class TestCheckpoint:
 
 class TestElastic:
     def test_shrink_mesh_drops_data_rows(self):
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_unit_mesh
+        mesh = make_unit_mesh()
         with pytest.raises(RuntimeError):
             shrink_mesh(mesh, [0])
 
