@@ -1,0 +1,118 @@
+"""Engine perf trajectory: incremental vs from-scratch restitch + e2e sim.
+
+Two measurements, written to ``BENCH_engine.json`` at the repo root:
+
+* (a) invoker arrivals/sec at queue depths {16, 64, 256} for the
+  incremental packer (live ``PackState``, probe-then-append) vs the
+  paper's literal from-scratch restitch of the whole queue per arrival.
+  Arrivals use a huge SLO and an unbounded canvas budget so the queue
+  actually reaches the target depth — this isolates restitch cost.
+* (b) end-to-end simulated serving throughput (patches/sec) through the
+  unified engine: bandwidth-shaped arrivals -> per-class invoker pool ->
+  SimExecutor/platform, on the standard multi-camera synthetic streams.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_engine            # full
+    PYTHONPATH=src python -m benchmarks.bench_engine --smoke    # CI
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.invoker import SLOAwareInvoker
+from repro.core.latency import LatencyTable, detector_latency_model
+from repro.core.partitioning import Patch
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+
+DEPTHS = (16, 64, 256)
+CANVAS = 256
+
+
+def _queue_patches(depth: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Patch(0, 0, int(rng.integers(16, 96)), int(rng.integers(16, 96)),
+                  t_gen=i * 1e-4, slo=1e9) for i in range(depth)]
+
+
+def bench_restitch(depth: int, incremental: bool, budget_s: float) -> float:
+    """Arrivals/sec while filling a queue to ``depth`` (no firing)."""
+    table = LatencyTable({1: (1e-9, 0.0)})
+    patches = _queue_patches(depth)
+    reps = 0
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < budget_s or reps == 0:
+        inv = SLOAwareInvoker(CANVAS, CANVAS, table,
+                              max_canvases=1 << 30,
+                              incremental=incremental)
+        for p in patches:
+            inv.on_patch(0.0, p)
+        assert len(inv.queue) == depth
+        reps += 1
+    return depth * reps / (time.perf_counter() - t0)
+
+
+def bench_e2e(n_cams: int, n_frames: int, per_frame: int = 6) -> dict:
+    rng = np.random.default_rng(0)
+    streams = []
+    for cam in range(n_cams):
+        patches = []
+        for f in range(n_frames):
+            t = f / 10.0
+            for _ in range(rng.integers(1, per_frame + 1)):
+                patches.append(Patch(0, 0, int(rng.integers(16, 160)),
+                                     int(rng.integers(16, 160)),
+                                     frame_id=f, camera_id=cam,
+                                     t_gen=t, slo=1.0))
+        streams.append(patches)
+    table = detector_latency_model(CANVAS, CANVAS).build_table(16)
+    sched = TangramScheduler(CANVAS, CANVAS, table,
+                             Platform(table, PlatformConfig()))
+    t0 = time.perf_counter()
+    res = sched.run(streams, bandwidth_bps=20e6)
+    dt = time.perf_counter() - t0
+    return {"patches": res.n_patches, "seconds": round(dt, 4),
+            "patches_per_s": round(res.n_patches / dt, 1),
+            "violation_rate": round(res.violation_rate, 4),
+            "invocations": res.invocations}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short budgets for CI")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: repo-root BENCH_engine.json)")
+    args = ap.parse_args(argv)
+
+    budget = 0.2 if args.smoke else 1.0
+    report = {"smoke": bool(args.smoke), "queue_restitch": {}}
+    for depth in DEPTHS:
+        inc = bench_restitch(depth, incremental=True, budget_s=budget)
+        scr = bench_restitch(depth, incremental=False, budget_s=budget)
+        report["queue_restitch"][str(depth)] = {
+            "incremental_arrivals_per_s": round(inc, 1),
+            "scratch_arrivals_per_s": round(scr, 1),
+            "speedup": round(inc / scr, 2),
+        }
+        print(f"depth {depth:4d}: incremental {inc:10.0f}/s "
+              f"scratch {scr:10.0f}/s  speedup {inc / scr:6.1f}x")
+
+    report["e2e_sim"] = bench_e2e(n_cams=2 if args.smoke else 4,
+                                  n_frames=15 if args.smoke else 40)
+    print("e2e:", report["e2e_sim"])
+
+    out = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json")
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

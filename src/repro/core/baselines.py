@@ -1,4 +1,4 @@
-"""Baseline serving policies from Section V-A.
+"""Baseline serving policies from Section V-A, as engine batchers.
 
 * Full Frame   — whole 4K frame per request, triggered in sequence.
 * Masked Frame — non-RoIs masked, still full resolution per request [35].
@@ -6,20 +6,23 @@
 * Clipper      — AIMD dynamic batch size over padded fixed-size tiles [23].
 * MArk         — max-batch + timeout over padded fixed-size tiles [24].
 
+Every policy is a batcher over the same :class:`~repro.core.engine.
+ServingEngine` event loop Tangram runs on (arrivals, timers, completions
+— no hand-rolled loops), dispatching to the same ``SimExecutor`` /
+``Platform``, so cost/SLO comparisons isolate the batching policy.
 Clipper and MArk cannot batch variable-size inputs, so patches are padded
 to a fixed tile (``tile_side``); that padding waste vs Tangram's stitching
-is exactly the paper's point.  All policies share the arrival model, the
-platform (cost/billing), and the ``Results`` record.
+is exactly the paper's point.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
-from repro.core.latency import AnalyticalLatencyModel, LatencyTable
+from repro.core.engine import Results, ServingEngine, SimExecutor
+from repro.core.invoker import Invocation
 from repro.core.partitioning import Patch
-from repro.core.scheduler import PatchOutcome, Results
 from repro.data import video
 from repro.data.video import Arrival, merge_arrivals, shape_arrivals
 from repro.serverless.platform import Platform
@@ -57,11 +60,131 @@ def _frame_arrivals(frames: Sequence[FrameMeta], bandwidth_bps: float,
     return out
 
 
-def _collect(name: str, outcomes, bytes_sent, platform, batch_sizes,
-             patches_per_batch, trans) -> Results:
+# --------------------------------------------------------------- batchers ----
+
+class PassthroughBatcher:
+    """Every arrival fires immediately as its own invocation.
+
+    ``cost_for(patch)`` gives the invocation's canvas-equivalent billing
+    size (1.0 for frame-level baselines, fractional for ELF).
+    """
+
+    def __init__(self, cost_for: Callable[[Patch], float] = lambda p: 1.0):
+        self.cost_for = cost_for
+
+    def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
+        return [Invocation(t_now, [], [patch], 0.0, "arrival",
+                           cost_canvases=self.cost_for(patch))]
+
+    def poll(self, t_now: float) -> Optional[Invocation]:
+        return None
+
+    def flush(self, t_now: float) -> Optional[Invocation]:
+        return None
+
+    def next_timer(self) -> float:
+        return math.inf
+
+
+class ClipperBatcher:
+    """AIMD dynamic batch size (Additive-Increase Multiplicative-Decrease).
+
+    Requests are patches padded to a fixed tile; a batch fires when the
+    queue reaches the current target; the target grows +1 when the batch
+    met its SLO budget (executor feedback via ``on_result``) and halves on
+    violation.  A drain timer (slo/2) bounds tail waiting, as in Clipper's
+    adaptive batching.
+    """
+
+    def __init__(self, tile_equiv: float, drain: float):
+        self.tile_equiv = tile_equiv
+        self.drain = drain
+        self.target = 1.0
+        self.items: List[Tuple[float, Patch]] = []
+
+    def _fire(self, t_now: float) -> Invocation:
+        batch = self.items[: max(1, int(self.target))]
+        del self.items[: len(batch)]
+        return Invocation(t_now, [], [p for _, p in batch], 0.0, "clipper",
+                          cost_canvases=len(batch) * self.tile_equiv)
+
+    def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
+        self.items.append((t_now, patch))
+        if len(self.items) >= int(self.target):
+            return [self._fire(t_now)]
+        return []
+
+    def on_result(self, inv: Invocation, t_finish: float):
+        ok = all(t_finish <= p.deadline for p in inv.patches)
+        self.target = self.target + 1.0 if ok else max(1.0, self.target / 2.0)
+
+    def next_timer(self) -> float:
+        return self.items[0][0] + self.drain if self.items else math.inf
+
+    def poll(self, t_now: float) -> Optional[Invocation]:
+        if self.items and t_now >= self.items[0][0] + self.drain:
+            return self._fire(self.items[0][0] + self.drain)
+        return None
+
+    def flush(self, t_now: float) -> Optional[Invocation]:
+        if self.items:
+            return self._fire(self.items[0][0] + self.drain)
+        return None
+
+
+class MArkBatcher:
+    """Max-batch + timeout batching over padded tiles."""
+
+    def __init__(self, tile_equiv: float, max_batch: int, timeout: float):
+        self.tile_equiv = tile_equiv
+        self.max_batch = max_batch
+        self.timeout = timeout
+        self.items: List[Tuple[float, Patch]] = []
+
+    def _fire(self, t_now: float) -> Invocation:
+        batch = list(self.items)
+        self.items.clear()
+        return Invocation(t_now, [], [p for _, p in batch], 0.0, "mark",
+                          cost_canvases=len(batch) * self.tile_equiv)
+
+    def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
+        fired = []
+        # inclusive timeout: an arrival landing exactly on the boundary
+        # still triggers the pending batch first (the engine only fires
+        # timers scheduled strictly before an arrival)
+        if self.items and t_now - self.items[0][0] >= self.timeout:
+            fired.append(self._fire(self.items[0][0] + self.timeout))
+        self.items.append((t_now, patch))
+        if len(self.items) >= self.max_batch:
+            fired.append(self._fire(t_now))
+        return fired
+
+    def next_timer(self) -> float:
+        return self.items[0][0] + self.timeout if self.items else math.inf
+
+    def poll(self, t_now: float) -> Optional[Invocation]:
+        if self.items and t_now >= self.items[0][0] + self.timeout:
+            return self._fire(self.items[0][0] + self.timeout)
+        return None
+
+    def flush(self, t_now: float) -> Optional[Invocation]:
+        if self.items:
+            return self._fire(self.items[0][0] + self.timeout)
+        return None
+
+
+# ---------------------------------------------------------------- runners ----
+
+def _run(name: str, batcher, arrivals, per_cam, platform: Platform
+         ) -> Results:
+    engine = ServingEngine(batcher, SimExecutor(platform))
+    outcomes = engine.run(arrivals)
+    bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
+    trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
     return Results(
         name=name, outcomes=outcomes, canvas_efficiencies=[],
-        batch_sizes=batch_sizes, patches_per_batch=patches_per_batch,
+        batch_sizes=[len(i.patches) for i in engine.invocations],
+        patches_per_batch=[len(i.patches) for i in engine.invocations],
         bytes_sent=bytes_sent, total_cost=platform.total_cost,
         invocations=len(platform.records),
         exec_seconds=platform.meter.busy_seconds,
@@ -69,129 +192,40 @@ def _collect(name: str, outcomes, bytes_sent, platform, batch_sizes,
         mean_consolidation=platform.mean_consolidation)
 
 
-# ------------------------------------------------------------ full/masked ----
-
 def run_frame_baseline(frame_streams: Sequence[Sequence[FrameMeta]],
                        bandwidth_bps: float, platform: Platform,
                        masked: bool, name: Optional[str] = None) -> Results:
     """Full Frame / Masked Frame: one request per frame, in sequence."""
     per_cam = [_frame_arrivals(s, bandwidth_bps, masked)
                for s in frame_streams]
-    arrivals = merge_arrivals(per_cam)
-    outcomes = []
-    for a in arrivals:
-        rec = platform.submit(a.t_arrive, 1, n_patches=1)
-        outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
-                                     rec.t_finish))
-    bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
-    trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
-    return _collect(name or ("masked_frame" if masked else "full_frame"),
-                    outcomes, bytes_sent, platform,
-                    [1] * len(arrivals), [1] * len(arrivals), trans)
+    return _run(name or ("masked_frame" if masked else "full_frame"),
+                PassthroughBatcher(), merge_arrivals(per_cam), per_cam,
+                platform)
 
-
-# -------------------------------------------------------------------- ELF ----
 
 def run_elf(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
             platform: Platform, canvas_area: int) -> Results:
     """Every patch is its own request (fractional canvas-equivalents)."""
     per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
-    arrivals = merge_arrivals(per_cam)
-    outcomes = []
-    for a in arrivals:
-        equiv = max(a.patch.area / canvas_area, 0.05)
-        rec = platform.submit(a.t_arrive, equiv, n_patches=1)
-        outcomes.append(PatchOutcome(a.patch, a.t_arrive, a.t_arrive,
-                                     rec.t_finish))
-    bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
-    trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
-    return _collect("elf", outcomes, bytes_sent, platform,
-                    [1] * len(arrivals), [1] * len(arrivals), trans)
+    batcher = PassthroughBatcher(
+        lambda p: max(p.area / canvas_area, 0.05))
+    return _run("elf", batcher, merge_arrivals(per_cam), per_cam, platform)
 
-
-# ---------------------------------------------------------------- Clipper ----
 
 def run_clipper(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
                 platform: Platform, canvas_area: int, tile_side: int = 512,
                 slo: float = 1.0) -> Results:
-    """AIMD dynamic batch size (Additive-Increase Multiplicative-Decrease).
-
-    Requests are patches padded to tile_side^2; a batch fires when the
-    queue reaches the current target; the target grows +1 when the batch
-    met its SLO budget and halves on violation.  A drain timer (slo/2)
-    bounds tail waiting, as in Clipper's adaptive batching.
-    """
     per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
-    arrivals = merge_arrivals(per_cam)
-    tile_equiv = tile_side * tile_side / canvas_area
-    target = 1.0
-    queue: List[Arrival] = []
-    outcomes, batch_sizes, ppb = [], [], []
+    batcher = ClipperBatcher(tile_side * tile_side / canvas_area,
+                             drain=slo / 2.0)
+    return _run("clipper", batcher, merge_arrivals(per_cam), per_cam,
+                platform)
 
-    def fire(t_now: float):
-        nonlocal target
-        batch = queue[: max(1, int(target))]
-        del queue[: len(batch)]
-        rec = platform.submit(t_now, len(batch) * tile_equiv,
-                              n_patches=len(batch))
-        batch_sizes.append(len(batch))
-        ppb.append(len(batch))
-        ok = True
-        for a in batch:
-            outcomes.append(PatchOutcome(a.patch, a.t_arrive, t_now,
-                                         rec.t_finish))
-            ok &= rec.t_finish <= a.patch.deadline
-        target = target + 1.0 if ok else max(1.0, target / 2.0)
-
-    drain = slo / 2.0
-    for a in arrivals:
-        while queue and a.t_arrive - queue[0].t_arrive > drain:
-            fire(queue[0].t_arrive + drain)
-        queue.append(a)
-        if len(queue) >= int(target):
-            fire(a.t_arrive)
-    while queue:
-        fire(queue[0].t_arrive + drain)
-
-    bytes_sent = sum(x.n_bytes for cam in per_cam for x in cam)
-    trans = sum(x.t_arrive - x.patch.t_gen for cam in per_cam for x in cam)
-    return _collect("clipper", outcomes, bytes_sent, platform, batch_sizes,
-                    ppb, trans)
-
-
-# ------------------------------------------------------------------- MArk ----
 
 def run_mark(streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
              platform: Platform, canvas_area: int, tile_side: int = 512,
              max_batch: int = 8, timeout: float = 0.25) -> Results:
-    """Max-batch + timeout batching over padded tiles."""
     per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
-    arrivals = merge_arrivals(per_cam)
-    tile_equiv = tile_side * tile_side / canvas_area
-    queue: List[Arrival] = []
-    outcomes, batch_sizes, ppb = [], [], []
-
-    def fire(t_now: float):
-        batch = list(queue)
-        queue.clear()
-        rec = platform.submit(t_now, len(batch) * tile_equiv,
-                              n_patches=len(batch))
-        batch_sizes.append(len(batch))
-        ppb.append(len(batch))
-        for a in batch:
-            outcomes.append(PatchOutcome(a.patch, a.t_arrive, t_now,
-                                         rec.t_finish))
-
-    for a in arrivals:
-        while queue and a.t_arrive - queue[0].t_arrive >= timeout:
-            fire(queue[0].t_arrive + timeout)
-        queue.append(a)
-        if len(queue) >= max_batch:
-            fire(a.t_arrive)
-    while queue:
-        fire(queue[0].t_arrive + timeout)
-
-    bytes_sent = sum(x.n_bytes for cam in per_cam for x in cam)
-    trans = sum(x.t_arrive - x.patch.t_gen for cam in per_cam for x in cam)
-    return _collect("mark", outcomes, bytes_sent, platform, batch_sizes,
-                    ppb, trans)
+    batcher = MArkBatcher(tile_side * tile_side / canvas_area,
+                          max_batch=max_batch, timeout=timeout)
+    return _run("mark", batcher, merge_arrivals(per_cam), per_cam, platform)

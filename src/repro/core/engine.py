@@ -1,0 +1,496 @@
+"""Unified event-driven serving engine: one control plane for the
+simulated platform and the real jit'd detector.
+
+The engine owns the virtual-clock event loop every serving scenario runs
+on.  Three event kinds, always processed in virtual-time order:
+
+* **arrivals** — bandwidth-shaped ``data.video.Arrival`` records fed via
+  :meth:`ServingEngine.run` (a whole trace) or :meth:`ServingEngine.offer`
+  (streaming);
+* **invoker timers** — each batching policy exposes ``next_timer()``; the
+  engine fires the policy *at the timer's scheduled virtual time*, never
+  deferring to the next arrival (a gap between arrivals that straddles
+  ``t_remain`` no longer inflates ``t_submit``);
+* **completions** — every dispatched invocation's finish event, delivered
+  back to the executor (``on_complete``) so device-side bookkeeping such
+  as frame-store eviction happens on the same clock.
+
+Scheduling policy and execution substrate are independent axes:
+
+* a **batcher** turns arrivals into :class:`~repro.core.invoker.Invocation`
+  batches.  :class:`~repro.core.invoker.SLOAwareInvoker` is the paper's
+  Algorithm 2; :class:`InvokerPool` keys one invoker per SLO class (or any
+  user classification) so tight-deadline patches never queue behind
+  loose-deadline ones; the baselines in ``core.baselines`` are alternative
+  batchers over the same loop.
+* an **executor** runs a fired invocation: :class:`SimExecutor` submits to
+  the serverless ``Platform`` model, :class:`DeviceExecutor` runs the real
+  stitch -> (sharded) detect -> unstitch -> route pipeline.  Invocation
+  boundaries depend only on arrivals and the batcher, so the same trace
+  produces identical patch->invocation groupings on both.
+
+Batcher protocol (duck-typed; ``SLOAwareInvoker`` already conforms):
+
+    on_patch(t, patch) -> List[Invocation]   # may fire immediately
+    poll(t)            -> Optional[Invocation]
+    flush(t)           -> Optional[Invocation]  # engine loops until None
+    next_timer()       -> float                 # inf when idle
+    on_result(inv, t_finish)                    # optional feedback (AIMD)
+
+Executor protocol:
+
+    execute(inv) -> Completion                  # runs the invocation
+    on_complete(comp)                           # optional, at t_finish
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.invoker import Invocation, SLOAwareInvoker
+from repro.core.partitioning import Patch
+from repro.core.stitching import validate
+from repro.data.video import Arrival
+from repro.serverless.platform import Platform
+
+
+# ------------------------------------------------------------- outcomes ----
+
+@dataclasses.dataclass
+class PatchOutcome:
+    patch: Patch
+    t_arrive: float
+    t_submit: float
+    t_finish: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.patch.t_gen
+
+    @property
+    def violated(self) -> bool:
+        return self.t_finish > self.patch.deadline
+
+    @property
+    def wait(self) -> float:
+        return self.t_submit - self.t_arrive
+
+
+@dataclasses.dataclass
+class Results:
+    name: str
+    outcomes: List[PatchOutcome]
+    canvas_efficiencies: List[float]
+    batch_sizes: List[int]
+    patches_per_batch: List[int]
+    bytes_sent: float
+    total_cost: float
+    invocations: int
+    exec_seconds: float
+    transmission_seconds: float
+    mean_consolidation: float = 0.0   # patches per invocation (platform view)
+
+    @property
+    def n_patches(self) -> int:
+        return len(self.outcomes)
+
+    @property
+    def violation_rate(self) -> float:
+        if not self.outcomes:
+            return 0.0
+        return sum(o.violated for o in self.outcomes) / len(self.outcomes)
+
+    def class_violation_rate(self, classify: Callable[[Patch], object],
+                             key: object) -> float:
+        """Violation rate restricted to one SLO class (mixed-SLO studies)."""
+        mine = [o for o in self.outcomes if classify(o.patch) == key]
+        if not mine:
+            return 0.0
+        return sum(o.violated for o in mine) / len(mine)
+
+    @property
+    def mean_latency(self) -> float:
+        if not self.outcomes:
+            return 0.0
+        return sum(o.latency for o in self.outcomes) / len(self.outcomes)
+
+    @property
+    def amortized_latency(self) -> float:
+        """Total function execution time amortized per patch (Fig. 14)."""
+        if not self.outcomes:
+            return 0.0
+        return self.exec_seconds / len(self.outcomes)
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "patches": self.n_patches,
+            "violation_rate": round(self.violation_rate, 4),
+            "mean_latency_s": round(self.mean_latency, 4),
+            "cost_usd": round(self.total_cost, 6),
+            "invocations": self.invocations,
+            "bytes_mb": round(self.bytes_sent / 1e6, 3),
+            "mean_canvas_eff": round(
+                sum(self.canvas_efficiencies)
+                / max(len(self.canvas_efficiencies), 1), 4),
+            "amortized_latency_s": round(self.amortized_latency, 4),
+            "mean_consolidation": round(self.mean_consolidation, 2),
+        }
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished invocation, delivered at ``t_finish`` virtual time."""
+    invocation: Invocation
+    t_finish: float
+    record: object = None     # platform ExecutionRecord (SimExecutor)
+    outputs: object = None    # routed device outputs (DeviceExecutor)
+
+
+# ----------------------------------------------------------- invoker pool ----
+
+def slo_class(patch: Patch) -> float:
+    """Default classification: one invoker per distinct SLO value."""
+    return patch.slo
+
+
+class InvokerPool:
+    """Per-class SLO-aware invokers behind one batcher interface.
+
+    ``classify`` maps a patch to its class key (default: its SLO value;
+    pass e.g. ``lambda p: (p.slo, p.camera_id // 4)`` to also group
+    cameras).  ``make_invoker(key)`` builds the class's invoker on first
+    use, so each class can have its own canvas geometry and latency
+    table.  Every fired ``Invocation`` is tagged with its class ``key``.
+    """
+
+    def __init__(self, make_invoker: Callable[[object], SLOAwareInvoker],
+                 classify: Callable[[Patch], object] = slo_class):
+        self.make_invoker = make_invoker
+        self.classify = classify
+        self.invokers: Dict[object, SLOAwareInvoker] = {}
+
+    def _invoker(self, key: object) -> SLOAwareInvoker:
+        inv = self.invokers.get(key)
+        if inv is None:
+            inv = self.invokers[key] = self.make_invoker(key)
+        return inv
+
+    @staticmethod
+    def _tag(fired, key):
+        for f in fired:
+            f.key = key
+        return fired
+
+    def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
+        key = self.classify(patch)
+        return self._tag(self._invoker(key).on_patch(t_now, patch), key)
+
+    def next_timer(self) -> float:
+        return min((inv.next_timer() for inv in self.invokers.values()),
+                   default=math.inf)
+
+    def poll(self, t_now: float) -> Optional[Invocation]:
+        """Fire the due invoker with the earliest timer (ties: insertion)."""
+        due = [(inv.next_timer(), key) for key, inv in self.invokers.items()
+               if inv.next_timer() <= t_now]
+        if not due:
+            return None
+        _, key = min(due, key=lambda x: x[0])
+        fired = self.invokers[key].poll(t_now)
+        if fired is not None:
+            fired.key = key
+        return fired
+
+    def flush(self, t_now: float) -> Optional[Invocation]:
+        for key, inv in self.invokers.items():
+            fired = inv.flush(t_now)
+            if fired is not None:
+                fired.key = key
+                return fired
+        return None
+
+
+def uniform_pool(canvas_m: int, canvas_n: int, latency, max_canvases: int = 8,
+                 incremental: bool = True,
+                 classify: Optional[Callable[[Patch], object]] = None
+                 ) -> InvokerPool:
+    """Pool where every class shares one geometry/latency spec.
+
+    ``classify=None`` gives the paper's single shared queue (every patch
+    maps to one class); pass :func:`slo_class` for per-SLO pools.
+    """
+    return InvokerPool(
+        lambda key: SLOAwareInvoker(canvas_m, canvas_n, latency,
+                                    max_canvases, incremental=incremental),
+        classify=classify or (lambda p: None))
+
+
+# -------------------------------------------------------------- executors ----
+
+class SimExecutor:
+    """Executor over the discrete-event serverless ``Platform`` model."""
+
+    def __init__(self, platform: Platform):
+        self.platform = platform
+
+    def execute(self, inv: Invocation) -> Completion:
+        size = (inv.cost_canvases if inv.cost_canvases is not None
+                else len(inv.canvases))
+        rec = self.platform.submit(inv.t_submit, size,
+                                   n_patches=len(inv.patches))
+        return Completion(inv, rec.t_finish, record=rec)
+
+
+class DeviceExecutor:
+    """Executor over the real pipeline: batched stitch -> (data-parallel)
+    detect -> inverse unstitch -> per-frame routing.
+
+    Owns the frame store: ``add_frame`` registers a frame's pixels with a
+    reference count (how many patches were cut from it); the engine's
+    completion event decrements the counts and evicts a frame once every
+    patch cut from it has been routed, so long serving runs no longer
+    leak every frame ever seen.
+
+    Virtual ``t_finish`` is ``t_submit`` plus the measured wall execution
+    time — the same quantity the offline profiling table estimates, so
+    SLO accounting stays consistent between simulation and device.
+    """
+
+    def __init__(self, serve_fn, params, canvas_m: int, canvas_n: int, *,
+                 use_pallas: bool = False, mesh=None, rules=None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.serve_fn = serve_fn
+        self.params = params
+        self.m, self.n = canvas_m, canvas_n
+        self.use_pallas = use_pallas
+        self.mesh = mesh
+        self.rules = rules
+        self.clock = clock
+        self.frames: Dict[object, np.ndarray] = {}
+        self._refs: Dict[object, int] = {}
+        self.n_invocations = 0
+        self.n_detections = 0
+        self.n_sharded = 0
+        self.evidence_bytes = 0
+
+    # ------------------------------------------------------- frame store ----
+
+    def add_frame(self, frame_id, pixels: np.ndarray, n_patches: int):
+        """Register a frame the edge cut ``n_patches`` patches from.
+
+        Frames that produced no patches are never referenced again and
+        are not stored at all.
+        """
+        if n_patches <= 0:
+            return
+        self.frames[frame_id] = pixels
+        self._refs[frame_id] = self._refs.get(frame_id, 0) + n_patches
+
+    def on_complete(self, comp: Completion):
+        """Completion event: release every routed patch's frame ref."""
+        for p in comp.invocation.patches:
+            left = self._refs.get(p.frame_id)
+            if left is None:
+                continue
+            if left <= 1:
+                del self._refs[p.frame_id]
+                self.frames.pop(p.frame_id, None)
+            else:
+                self._refs[p.frame_id] = left - 1
+
+    # --------------------------------------------------------- execution ----
+
+    def execute(self, inv: Invocation) -> Completion:
+        # imported here so the pure-simulation control plane never touches
+        # the kernel/jit stack
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.stitch import ops as stitch_ops
+
+        t0 = self.clock()
+        plan = inv.batch_plan()
+        crops = []
+        for patch in inv.patches:
+            frame = self.frames.get(patch.frame_id)
+            if frame is None:
+                crops.append(np.zeros((patch.h, patch.w, 3), np.float32))
+            else:
+                crops.append(frame[patch.y0:patch.y1, patch.x0:patch.x1])
+        slots = stitch_ops.pack_plan_host(crops, plan)
+        records = jnp.asarray(plan.records)
+        impl = "pallas_interpret" if self.use_pallas else "xla"
+        canvases = stitch_ops.stitch_canvases(
+            jnp.asarray(slots), records, self.m, self.n, impl=impl)
+        sharded = False
+        if self.mesh is not None:
+            canvases, sharded = shard_canvases(canvases, self.mesh,
+                                               self.rules)
+        obj, boxes = self.serve_fn(self.params, canvases)
+        # inverse gather, grouped by source frame alongside the routed
+        # detections.  The box head has no pixel-space output, so the
+        # canvases stand in for a per-pixel head (e.g. segmentation): the
+        # gathered slots equal the input crops, and the value here is
+        # exercising the unstitch path every invocation.  slot_capacity
+        # (pow2-bucketed) keeps the jit static shapes stable across
+        # invocations; rows past num_patches are never read.
+        patch_out = stitch_ops.unstitch_patches(
+            canvases, records, plan.slot_capacity, plan.hmax, plan.wmax,
+            impl=impl)
+        jax.block_until_ready((obj, patch_out))
+        per_frame = stitch_ops.route_detections(
+            plan, inv.patches, np.asarray(obj), np.asarray(boxes))
+        evidence = np.asarray(patch_out)
+        per_frame_pixels: Dict[object, List[np.ndarray]] = {}
+        for i, patch in enumerate(inv.patches):
+            # copy: a view would pin the whole pow2-padded batch in memory
+            per_frame_pixels.setdefault(patch.frame_id, []).append(
+                np.ascontiguousarray(evidence[i, :patch.h, :patch.w]))
+        wall = self.clock() - t0
+
+        self.n_invocations += 1
+        self.n_sharded += bool(sharded)
+        self.n_detections += sum(len(v) for v in per_frame.values())
+        self.evidence_bytes += sum(
+            a.nbytes for v in per_frame_pixels.values() for a in v)
+        return Completion(inv, inv.t_submit + wall,
+                          outputs=(per_frame, per_frame_pixels))
+
+
+def shard_canvases(canvases, mesh, rules):
+    """Lay the canvas batch out data-parallel over the serve mesh.
+
+    The batch is padded to a multiple of the "data"-axis size (records
+    never reference pad rows, so the detector output for them is simply
+    ignored), then device_put with the batch axis split over "data".
+    Pow2-style padding also stabilises jit static shapes: every batch
+    compiles to a multiple of the axis size.  Returns the sharded batch
+    and whether the data axis actually split it (False on 1 device).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import shardingx
+    from repro.sharding import divisible_sharding
+
+    n_data = shardingx.mesh_axis_sizes(mesh).get("data", 1)
+    pad = (-canvases.shape[0]) % n_data
+    if pad:
+        canvases = jnp.concatenate(
+            [canvases,
+             jnp.zeros((pad,) + canvases.shape[1:], canvases.dtype)])
+    sh = divisible_sharding(mesh, canvases.shape,
+                            ("batch", None, None, None), rules)
+    return jax.device_put(canvases, sh), bool(sh.spec) and n_data > 1
+
+
+# ------------------------------------------------------------ event loop ----
+
+class ServingEngine:
+    """The one event loop.  Feed arrivals; timers and completions fire at
+    their scheduled virtual times; fired invocations run on the executor.
+    """
+
+    def __init__(self, pool, executor, check_invariants: bool = False):
+        self.pool = pool
+        self.executor = executor
+        self.check_invariants = check_invariants
+        self.outcomes: List[PatchOutcome] = []
+        self.invocations: List[Invocation] = []
+        self.completions: List[Completion] = []
+        self._arrive_at: Dict[int, float] = {}
+        self._pending: List = []          # heap of (t_finish, seq, Completion)
+        self._seq = 0
+        self.now = 0.0                    # last event time processed
+
+    # ----------------------------------------------------------- feeding ----
+
+    def run(self, arrivals: Sequence[Arrival]) -> List[PatchOutcome]:
+        """Drive a whole (sorted-by-``t_arrive``) arrival trace to empty."""
+        for arr in arrivals:
+            self.offer(arr)
+        self.finish()
+        return self.outcomes
+
+    def offer(self, arrival: Arrival):
+        """One arrival: first fire everything due strictly before it."""
+        self.advance(arrival.t_arrive)
+        self.now = max(self.now, arrival.t_arrive)
+        self._arrive_at[id(arrival.patch)] = arrival.t_arrive
+        for inv in self.pool.on_patch(arrival.t_arrive, arrival.patch):
+            self._dispatch(inv)
+
+    def advance(self, t: float):
+        """Process every timer/completion event scheduled before ``t``."""
+        while True:
+            t_timer = self.pool.next_timer()
+            t_comp = self._pending[0][0] if self._pending else math.inf
+            t_next = min(t_timer, t_comp)
+            if t_next >= t:
+                return
+            self.now = max(self.now, t_next)
+            if t_comp <= t_timer:
+                self._deliver_completion()
+            else:
+                fired = self.pool.poll(t_timer)
+                if fired is None:       # defensive: a policy may decline
+                    return
+                self._dispatch(fired)
+
+    def finish(self, t_end: Optional[float] = None):
+        """Drain timers at their scheduled times, flush stragglers, and
+        deliver every remaining completion."""
+        self.advance(math.inf)
+        t = self.now if t_end is None else t_end
+        while True:
+            fired = self.pool.flush(t)
+            if fired is None:
+                break
+            self._dispatch(fired)
+        while self._pending:
+            self.now = max(self.now, self._pending[0][0])
+            self._deliver_completion()
+
+    # --------------------------------------------------------- internals ----
+
+    def _dispatch(self, inv: Invocation):
+        # canvas-less invocations are legitimate only for batchers that
+        # bill via cost_canvases (the padded-tile baselines); a canvas-
+        # packing batcher emitting patches without canvases is a bug
+        if self.check_invariants and inv.cost_canvases is None:
+            validate(inv.canvases)
+            # every queued patch must be placed exactly once (the unstitch
+            # gather relies on this); checked on the packing itself so the
+            # simulation never pays for device record packing
+            placed = sorted(p.patch_idx for c in inv.canvases
+                            for p in c.placements)
+            assert placed == list(range(len(inv.patches))), placed
+        self.invocations.append(inv)
+        comp = self.executor.execute(inv)
+        on_result = getattr(self.pool, "on_result", None)
+        if on_result is not None:
+            on_result(inv, comp.t_finish)
+        for p in inv.patches:
+            self.outcomes.append(PatchOutcome(
+                p, self._arrive_at.get(id(p), inv.t_submit), inv.t_submit,
+                comp.t_finish))
+        self._seq += 1
+        heapq.heappush(self._pending, (comp.t_finish, self._seq, comp))
+
+    def _deliver_completion(self):
+        _, _, comp = heapq.heappop(self._pending)
+        on_complete = getattr(self.executor, "on_complete", None)
+        if on_complete is not None:
+            on_complete(comp)
+        # the executor's on_complete is the delivery point for outputs;
+        # dropping the payload here keeps the retained completion log
+        # light — otherwise a long device run would pin every routed
+        # pixel batch for the engine's lifetime
+        comp.outputs = None
+        self.completions.append(comp)

@@ -23,7 +23,8 @@ from typing import List, Optional, Sequence
 
 from repro.core.latency import LatencyTable
 from repro.core.partitioning import Patch
-from repro.core.stitching import BatchPlan, Canvas, build_batch_plan, stitch
+from repro.core.stitching import (BatchPlan, Canvas, PackState,
+                                  build_batch_plan, stitch)
 
 
 @dataclasses.dataclass
@@ -34,6 +35,8 @@ class Invocation:
     t_slack: float
     reason: str                 # timer | slo_pressure | memory | late | flush
     plan: Optional[BatchPlan] = None   # built lazily by batch_plan()
+    key: object = None          # SLO class, when fired via an InvokerPool
+    cost_canvases: Optional[float] = None  # billing override (baselines)
 
     @property
     def batch_size(self) -> int:
@@ -51,39 +54,58 @@ class Invocation:
 
 
 class SLOAwareInvoker:
+    """One SLO class's batching queue.
+
+    ``incremental=True`` (default) keeps the guillotine free-rect state
+    live across arrivals (``PackState``): each arrival is a read-only fit
+    probe plus one placement, and the full repack only happens when the
+    queue is rebuilt after a fire — the paper's from-scratch semantics at
+    O(canvases) instead of O(queue * canvases) per arrival.
+    ``incremental=False`` keeps the literal restitch-everything behaviour
+    for equivalence tests and the perf benchmark's baseline arm.
+    """
+
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
-                 max_canvases: int = 8):
+                 max_canvases: int = 8, incremental: bool = True):
         self.m, self.n = canvas_m, canvas_n
         self.latency = latency
         self.max_canvases = max_canvases
+        self.incremental = incremental
         self.queue: List[Patch] = []
         self.canvases: List[Canvas] = []
         self.t_remain: float = math.inf
+        self._pack = PackState(canvas_m, canvas_n)
+        self._t_ddl: float = math.inf      # running min deadline over queue
 
     # ------------------------------------------------------------ events ----
 
     def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
         """Lines 4-18.  Returns invocations fired by this arrival."""
         fired: List[Invocation] = []
-        old_queue = list(self.queue)
-        old_canvases = self.canvases
 
-        self.queue.append(patch)
-        self._restitch()
+        n_after, packed = self._probe_canvases(patch)
+        t_remain_after = (min(self._t_ddl, patch.deadline)
+                          - self.latency.t_slack(n_after))
 
-        if self.t_remain < t_now or len(self.canvases) > self.max_canvases:
-            reason = ("memory" if len(self.canvases) > self.max_canvases
+        if t_remain_after < t_now or n_after > self.max_canvases:
+            reason = ("memory" if n_after > self.max_canvases
                       else "slo_pressure")
-            if old_queue:
+            if self.queue:
+                # dispatch the live packing untouched; the new patch seeds
+                # the next queue (the fire closes these canvases, so this
+                # is the sanctioned full-repack boundary; the probe's
+                # packing is for the abandoned queue+patch, so drop it)
                 fired.append(Invocation(
-                    t_now, old_canvases, old_queue,
-                    self.latency.t_slack(len(old_canvases)), reason))
-            self.queue = [patch]
-            self._restitch()
+                    t_now, self.canvases, self.queue,
+                    self.latency.t_slack(len(self.canvases)), reason))
+                self._clear()
+            self._append(patch)
             if self.t_remain < t_now:
                 # a lone patch that still cannot meet its SLO: fire ASAP to
                 # minimise lateness (not covered by the paper's pseudo-code)
                 fired.append(self._fire(t_now, "late"))
+        else:
+            self._append(patch, packed)
         return fired
 
     def poll(self, t_now: float) -> Optional[Invocation]:
@@ -102,16 +124,47 @@ class SLOAwareInvoker:
 
     # ---------------------------------------------------------- internals ----
 
-    def _restitch(self):
-        self.canvases = stitch(self.queue, self.m, self.n)
-        t_ddl = min(p.deadline for p in self.queue)
-        t_slack = self.latency.t_slack(len(self.canvases))
-        self.t_remain = t_ddl - t_slack
+    def _probe_canvases(self, patch: Patch):
+        """Canvas count of ``stitch(queue + [patch])`` without committing.
 
-    def _fire(self, t_now: float, reason: str) -> Invocation:
-        inv = Invocation(t_now, self.canvases, list(self.queue),
-                         self.latency.t_slack(len(self.canvases)), reason)
+        Returns ``(count, packed)``: in from-scratch mode ``packed`` is
+        the full restitch (handed to ``_append`` so the literal paper
+        semantics still stitch exactly once per arrival); incrementally
+        it is None — the read-only fit probe suffices.
+        """
+        if not self.incremental:
+            packed = stitch(self.queue + [patch], self.m, self.n)
+            return len(packed), packed
+        if patch.w > self.n or patch.h > self.m:
+            raise ValueError(
+                f"patch ({patch.w}x{patch.h}) exceeds canvas "
+                f"({self.n}x{self.m})")
+        return (len(self.canvases)
+                + (0 if self._pack.fits(patch.w, patch.h) else 1)), None
+
+    def _append(self, patch: Patch, packed: Optional[List[Canvas]] = None):
+        """Commit one arrival into the queue and the packing state."""
+        self.queue.append(patch)
+        if self.incremental:
+            self._pack.append(patch)
+            self.canvases = self._pack.canvases
+        elif packed is not None:
+            self.canvases = packed
+        else:
+            self.canvases = stitch(self.queue, self.m, self.n)
+        self._t_ddl = min(self._t_ddl, patch.deadline)
+        self.t_remain = (self._t_ddl
+                         - self.latency.t_slack(len(self.canvases)))
+
+    def _clear(self):
         self.queue = []
         self.canvases = []
         self.t_remain = math.inf
+        self._pack = PackState(self.m, self.n)
+        self._t_ddl = math.inf
+
+    def _fire(self, t_now: float, reason: str) -> Invocation:
+        inv = Invocation(t_now, self.canvases, self.queue,
+                         self.latency.t_slack(len(self.canvases)), reason)
+        self._clear()
         return inv

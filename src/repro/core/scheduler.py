@@ -1,162 +1,61 @@
-"""End-to-end Tangram scheduler: arrivals -> invoker -> platform -> metrics.
+"""Tangram scheduler: a thin adapter over the unified serving engine.
 
-Drives the SLO-aware invoker with bandwidth-shaped patch arrivals over a
-virtual clock and dispatches invocations to the serverless platform model.
-Produces the ``Results`` record that every benchmark (Figs. 8-14) reads.
+The event loop, the per-class invoker pool, and the executor abstraction
+live in :mod:`repro.core.engine`; this module wires them to the paper's
+scenario (bandwidth-shaped arrivals -> SLO-aware batching -> serverless
+platform) and assembles the ``Results`` record that every benchmark
+(Figs. 8-14) reads.  ``PatchOutcome``/``Results`` are re-exported here
+for backwards compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence
 
-from repro.core.invoker import Invocation, SLOAwareInvoker
+from repro.core.engine import (PatchOutcome, Results, ServingEngine,
+                               SimExecutor, uniform_pool)
 from repro.core.latency import LatencyTable
 from repro.core.partitioning import Patch
-from repro.core.stitching import total_efficiency, validate
-from repro.data.video import Arrival, merge_arrivals, shape_arrivals
+from repro.data.video import merge_arrivals, shape_arrivals
 from repro.serverless.platform import Platform
 
-
-@dataclasses.dataclass
-class PatchOutcome:
-    patch: Patch
-    t_arrive: float
-    t_submit: float
-    t_finish: float
-
-    @property
-    def latency(self) -> float:
-        return self.t_finish - self.patch.t_gen
-
-    @property
-    def violated(self) -> bool:
-        return self.t_finish > self.patch.deadline
-
-    @property
-    def wait(self) -> float:
-        return self.t_submit - self.t_arrive
-
-
-@dataclasses.dataclass
-class Results:
-    name: str
-    outcomes: List[PatchOutcome]
-    canvas_efficiencies: List[float]
-    batch_sizes: List[int]
-    patches_per_batch: List[int]
-    bytes_sent: float
-    total_cost: float
-    invocations: int
-    exec_seconds: float
-    transmission_seconds: float
-    mean_consolidation: float = 0.0   # patches per invocation (platform view)
-
-    @property
-    def n_patches(self) -> int:
-        return len(self.outcomes)
-
-    @property
-    def violation_rate(self) -> float:
-        if not self.outcomes:
-            return 0.0
-        return sum(o.violated for o in self.outcomes) / len(self.outcomes)
-
-    @property
-    def mean_latency(self) -> float:
-        if not self.outcomes:
-            return 0.0
-        return sum(o.latency for o in self.outcomes) / len(self.outcomes)
-
-    @property
-    def amortized_latency(self) -> float:
-        """Total function execution time amortized per patch (Fig. 14)."""
-        if not self.outcomes:
-            return 0.0
-        return self.exec_seconds / len(self.outcomes)
-
-    def summary(self) -> dict:
-        return {
-            "name": self.name,
-            "patches": self.n_patches,
-            "violation_rate": round(self.violation_rate, 4),
-            "mean_latency_s": round(self.mean_latency, 4),
-            "cost_usd": round(self.total_cost, 6),
-            "invocations": self.invocations,
-            "bytes_mb": round(self.bytes_sent / 1e6, 3),
-            "mean_canvas_eff": round(
-                sum(self.canvas_efficiencies)
-                / max(len(self.canvas_efficiencies), 1), 4),
-            "amortized_latency_s": round(self.amortized_latency, 4),
-            "mean_consolidation": round(self.mean_consolidation, 2),
-        }
+__all__ = ["PatchOutcome", "Results", "TangramScheduler"]
 
 
 class TangramScheduler:
-    """The cloud-side scheduler of Fig. 5."""
+    """The cloud-side scheduler of Fig. 5.
+
+    ``classify=None`` keeps the paper's single shared queue; pass
+    ``engine.slo_class`` (or any ``Patch -> key`` function) to shard the
+    invoker per SLO class so tight deadlines never wait behind loose ones.
+    """
 
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
                  platform: Platform, max_canvases: int = 8,
-                 check_invariants: bool = False):
-        self.invoker = SLOAwareInvoker(canvas_m, canvas_n, latency,
-                                       max_canvases)
+                 check_invariants: bool = False,
+                 classify: Optional[Callable[[Patch], object]] = None,
+                 incremental: bool = True):
+        self.pool = uniform_pool(canvas_m, canvas_n, latency, max_canvases,
+                                 incremental=incremental, classify=classify)
         self.platform = platform
         self.check_invariants = check_invariants
-        self.outcomes: List[PatchOutcome] = []
-        self.canvas_effs: List[float] = []
-        self.batch_sizes: List[int] = []
-        self.patches_per_batch: List[int] = []
-        self._arrive_at = {}
-
-    def _dispatch(self, inv: Invocation):
-        if self.check_invariants:
-            validate(inv.canvases)
-            # every queued patch must be placed exactly once (the unstitch
-            # gather relies on this); checked on the packing itself so the
-            # simulation never pays for device record packing
-            placed = sorted(p.patch_idx for c in inv.canvases
-                            for p in c.placements)
-            assert placed == list(range(len(inv.patches))), placed
-        rec = self.platform.submit(inv.t_submit, len(inv.canvases),
-                                   n_patches=len(inv.patches))
-        self.batch_sizes.append(len(inv.canvases))
-        self.patches_per_batch.append(len(inv.patches))
-        for c in inv.canvases:
-            self.canvas_effs.append(c.efficiency)
-        for p in inv.patches:
-            self.outcomes.append(PatchOutcome(
-                p, self._arrive_at.get(id(p), inv.t_submit), inv.t_submit,
-                rec.t_finish))
 
     def run(self, streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
             name: str = "tangram") -> Results:
         per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
         arrivals = merge_arrivals(per_cam)
-        inv = self.invoker
-
-        for arr in arrivals:
-            while inv.next_timer() < arr.t_arrive:
-                fired = inv.poll(inv.next_timer())
-                if fired is None:
-                    break
-                self._dispatch(fired)
-            self._arrive_at[id(arr.patch)] = arr.t_arrive
-            for fired in inv.on_patch(arr.t_arrive, arr.patch):
-                self._dispatch(fired)
-
-        while inv.next_timer() < math.inf:
-            fired = inv.poll(inv.next_timer())
-            if fired is None:
-                break
-            self._dispatch(fired)
+        engine = ServingEngine(self.pool, SimExecutor(self.platform),
+                               check_invariants=self.check_invariants)
+        outcomes = engine.run(arrivals)
 
         bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
         trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
         return Results(
-            name=name, outcomes=self.outcomes,
-            canvas_efficiencies=self.canvas_effs,
-            batch_sizes=self.batch_sizes,
-            patches_per_batch=self.patches_per_batch,
+            name=name, outcomes=outcomes,
+            canvas_efficiencies=[c.efficiency for inv in engine.invocations
+                                 for c in inv.canvases],
+            batch_sizes=[len(inv.canvases) for inv in engine.invocations],
+            patches_per_batch=[len(inv.patches)
+                               for inv in engine.invocations],
             bytes_sent=bytes_sent,
             total_cost=self.platform.total_cost,
             invocations=len(self.platform.records),

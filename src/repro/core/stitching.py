@@ -8,9 +8,16 @@ rectangles along the *shorter axis* of the free rectangle.  Patches are
 never overlapped, rotated, resized, or padded.  When no free rectangle
 fits, a new canvas is opened.
 
-The solver is restitched from scratch on every arrival (paper semantics:
-``C <- Patch_stitching_solver(Q, M, N)``), so placements are a pure
-function of the queue.
+The paper restitches from scratch on every arrival (``C <-
+Patch_stitching_solver(Q, M, N)``), so placements are a pure function of
+the queue.  Because the solver consumes the queue *in order* and never
+moves a placed patch, packing ``Q + [p]`` equals packing ``Q`` and then
+placing ``p`` into the resulting free-rectangle state — :class:`PackState`
+exploits this to append each arrival in O(canvases * free rects) instead
+of repacking the whole queue, falling back to a full repack only when the
+queue is rebuilt (canvas closed / patch evicted).  ``stitch`` and
+``PackState.append`` share one placement routine, so the equivalence holds
+by construction (and is pinned by a property test).
 """
 from __future__ import annotations
 
@@ -94,6 +101,57 @@ def _split(c: FreeRect, w: int, h: int) -> List[FreeRect]:
     return out
 
 
+class PackState:
+    """Mutable guillotine packing state with O(1)-per-patch appends.
+
+    Holds the canvases and their live free-rectangle lists for the queue
+    packed so far.  ``append`` places one more patch with exactly the rule
+    ``stitch`` applies to each queue element, so after appending patches
+    p_0..p_k in order the state is identical to ``stitch([p_0..p_k])`` —
+    no quadratic repack per arrival.
+    """
+
+    def __init__(self, m: int, n: int):
+        self.m, self.n = m, n
+        self.canvases: List[Canvas] = []
+        self.count = 0              # patches packed (next patch_idx)
+
+    def append(self, patch: Patch) -> None:
+        """Place one patch (queue index ``self.count``) into the state."""
+        i = self.count
+        p = patch
+        if p.w > self.n or p.h > self.m:
+            raise ValueError(
+                f"patch {i} ({p.w}x{p.h}) exceeds canvas ({self.n}x{self.m})")
+        for ci, canvas in enumerate(self.canvases):
+            j = _choose(canvas.free, p.w, p.h)
+            if j is not None:
+                c = canvas.free.pop(j)
+                canvas.placements.append(
+                    Placement(i, ci, c.x, c.y, p.w, p.h))
+                canvas.free.extend(_split(c, p.w, p.h))
+                self.count = i + 1
+                return
+        canvas = Canvas(self.m, self.n)
+        c = canvas.free.pop(0)
+        canvas.placements.append(
+            Placement(i, len(self.canvases), c.x, c.y, p.w, p.h))
+        canvas.free.extend(_split(c, p.w, p.h))
+        self.canvases.append(canvas)
+        self.count = i + 1
+
+    def fits(self, w: int, h: int) -> bool:
+        """Read-only probe: would a (w, h) patch fit an open canvas?"""
+        return any(_choose(c.free, w, h) is not None for c in self.canvases)
+
+    def reset(self, patches: Sequence[Patch] = ()) -> None:
+        """Full repack: rebuild the state from an explicit queue."""
+        self.canvases = []
+        self.count = 0
+        for p in patches:
+            self.append(p)
+
+
 def stitch(patches: Sequence[Patch], m: int, n: int) -> List[Canvas]:
     """Pack patches (in queue order) onto canvases of size m x n.
 
@@ -101,29 +159,10 @@ def stitch(patches: Sequence[Patch], m: int, n: int) -> List[Canvas]:
     configured so zones never exceed the canvas (zone grid vs canvas size
     is validated in ``scheduler.Scheduler``).
     """
-    canvases: List[Canvas] = []
-    for i, p in enumerate(patches):
-        if p.w > n or p.h > m:
-            raise ValueError(
-                f"patch {i} ({p.w}x{p.h}) exceeds canvas ({n}x{m})")
-        placed = False
-        for ci, canvas in enumerate(canvases):
-            j = _choose(canvas.free, p.w, p.h)
-            if j is not None:
-                c = canvas.free.pop(j)
-                canvas.placements.append(
-                    Placement(i, ci, c.x, c.y, p.w, p.h))
-                canvas.free.extend(_split(c, p.w, p.h))
-                placed = True
-                break
-        if not placed:
-            canvas = Canvas(m, n)
-            c = canvas.free.pop(0)
-            canvas.placements.append(
-                Placement(i, len(canvases), c.x, c.y, p.w, p.h))
-            canvas.free.extend(_split(c, p.w, p.h))
-            canvases.append(canvas)
-    return canvases
+    state = PackState(m, n)
+    for p in patches:
+        state.append(p)
+    return state.canvases
 
 
 # eq=False: the generated __eq__ would elementwise-compare the records

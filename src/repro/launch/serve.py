@@ -1,17 +1,20 @@
 """Serving driver: the full Tangram pipeline against a real jit'd model.
 
 Edge side per frame: GMM background subtraction -> RoI extraction ->
-adaptive frame partitioning (Alg. 1).  Cloud side: SLO-aware invoker
-(Alg. 2) -> stitch kernel assembles canvases -> detector ``serve_step``
-executes the batch.  On CPU this runs a reduced detector; the platform
-billing and SLO accounting are the same objects the simulator uses.
+adaptive frame partitioning (Alg. 1).  Cloud side: the unified serving
+engine (``core.engine``) drives the per-SLO-class invoker pool over
+bandwidth-shaped virtual arrivals and executes every fired invocation on
+the :class:`~repro.core.engine.DeviceExecutor` — batched stitch ->
+(data-parallel) detect -> inverse unstitch -> per-frame routing.  Timers
+fire at their scheduled virtual times (not at the next arrival), and the
+executor's frame store is refcounted: a frame is evicted the moment every
+patch cut from it has been routed.
 
 Multi-device: the detector batch runs under a ``NamedSharding``
 data-parallel layout — the stitched canvas batch is padded to the mesh's
 "data"-axis size and split over it, so each device detects its slice of
-the canvases (stitch -> sharded detect -> unstitch -> route, end to end).
-On a 1-device world the mesh degenerates to 1x1 and every step is
-identical to the unsharded path.
+the canvases.  On a 1-device world the mesh degenerates to 1x1 and every
+step is identical to the unsharded path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
@@ -31,13 +34,14 @@ from repro import param as param_lib
 from repro.compat import shardingx
 from repro.config import DetectorConfig
 from repro.core import gmm, partitioning, rois
-from repro.core.invoker import SLOAwareInvoker
+from repro.core.engine import DeviceExecutor, ServingEngine, uniform_pool
+from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
 from repro.core.latency import measure
 from repro.data.synthetic import Scene, preset
-from repro.kernels.stitch import ops as stitch_ops
+from repro.data.video import shape_arrivals
 from repro.launch.mesh import make_serve_mesh
 from repro.models import detector as detector_lib
-from repro.sharding import ShardingConfig, divisible_sharding
+from repro.sharding import ShardingConfig
 
 
 def build_detector(canvas: int = 256):
@@ -53,25 +57,29 @@ def build_detector(canvas: int = 256):
     return cfg, params, serve_fn, rules
 
 
-def shard_canvases(canvases, mesh, rules):
-    """Lay the canvas batch out data-parallel over the serve mesh.
-
-    The batch is padded to a multiple of the "data"-axis size (records
-    never reference pad rows, so the detector output for them is simply
-    ignored), then device_put with the batch axis split over "data".
-    Pow2-style padding also stabilises jit static shapes: every batch
-    compiles to a multiple of the axis size.  Returns the sharded batch
-    and whether the data axis actually split it (False on 1 device).
-    """
-    n_data = shardingx.mesh_axis_sizes(mesh).get("data", 1)
-    pad = (-canvases.shape[0]) % n_data
-    if pad:
-        canvases = jnp.concatenate(
-            [canvases,
-             jnp.zeros((pad,) + canvases.shape[1:], canvases.dtype)])
-    sh = divisible_sharding(mesh, canvases.shape,
-                            ("batch", None, None, None), rules)
-    return jax.device_put(canvases, sh), bool(sh.spec) and n_data > 1
+def generate_stream(scene: Scene, executor: DeviceExecutor, n_frames: int,
+                    canvas: int, slo: float):
+    """Edge pipeline: GMM -> RoIs -> Alg. 1 patches, frames registered in
+    the executor's refcounted store.  Returns the patch stream in
+    generation order."""
+    state = gmm.init_state(scene.cfg.height, scene.cfg.width)
+    stream = []
+    for t, frame, gt in scene.frames(n_frames):
+        state, fg = gmm.update_jit(state, jnp.asarray(frame))
+        if t < 1.0:
+            continue
+        boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
+        boxes_np = np.asarray(boxes)[np.asarray(valid)]
+        patches = partitioning.partition_host(
+            boxes_np, scene.cfg.width, scene.cfg.height, 4, 4,
+            frame_id=scene.t, t_gen=t, slo=slo)
+        # enclosing rects can exceed zones; clamp to the canvas tile
+        patches = [partitioning.Patch(
+            p.x0, p.y0, min(p.x1, p.x0 + canvas), min(p.y1, p.y0 + canvas),
+            p.frame_id, p.camera_id, p.t_gen, p.slo) for p in patches]
+        executor.add_frame(scene.t, scene.render_rgb(), len(patches))
+        stream.extend(patches)
+    return stream
 
 
 def main(argv=None):
@@ -80,6 +88,8 @@ def main(argv=None):
     p.add_argument("--slo", type=float, default=1.0)
     p.add_argument("--canvas", type=int, default=256)
     p.add_argument("--scene", type=int, default=0)
+    p.add_argument("--bandwidth-mbps", type=float, default=40.0,
+                   help="uplink shaping for the virtual arrival clock")
     p.add_argument("--use-pallas-stitch", action="store_true",
                    help="assemble canvases with the Pallas kernel "
                         "(interpret mode on CPU)")
@@ -105,99 +115,29 @@ def main(argv=None):
     print("latency table:",
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
 
+    t_start = time.time()
+    executor = DeviceExecutor(serve_fn, params, m, n,
+                              use_pallas=args.use_pallas_stitch,
+                              mesh=mesh, rules=rules)
     scene = Scene(preset(args.scene, width=2 * args.canvas,
                          height=args.canvas))
-    state = gmm.init_state(scene.cfg.height, scene.cfg.width)
-    invoker = SLOAwareInvoker(m, n, table, max_canvases=4)
+    stream = generate_stream(scene, executor, args.frames, args.canvas,
+                             args.slo)
 
-    n_patches = n_invocations = n_detections = n_sharded = 0
-    evidence_bytes = 0
+    pool = uniform_pool(m, n, table, max_canvases=4)
+    engine = ServingEngine(pool, executor)
+    outcomes = engine.run(shape_arrivals(stream, args.bandwidth_mbps * 1e6))
 
-    def run_invocation(inv):
-        nonlocal n_invocations, n_detections, n_sharded, evidence_bytes
-        n_invocations += 1
-        _, _, per_frame, pixels, sharded = _execute(
-            inv, frames_store, serve_fn, params, m, n,
-            args.use_pallas_stitch, mesh=mesh, rules=rules)
-        n_sharded += bool(sharded)
-        n_detections += sum(len(v) for v in per_frame.values())
-        evidence_bytes += sum(a.nbytes for v in pixels.values() for a in v)
-    t_start = time.time()
-    frames_store = {}
-    for t, frame, gt in scene.frames(args.frames):
-        state, fg = gmm.update_jit(state, jnp.asarray(frame))
-        if t < 1.0:
-            continue
-        boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
-        boxes_np = np.asarray(boxes)[np.asarray(valid)]
-        patches = partitioning.partition_host(
-            boxes_np, scene.cfg.width, scene.cfg.height, 4, 4,
-            frame_id=scene.t, t_gen=t, slo=args.slo)
-        # enclosing rects can exceed zones; clamp to the canvas tile
-        patches = [partitioning.Patch(
-            p.x0, p.y0, min(p.x1, p.x0 + n), min(p.y1, p.y0 + m),
-            p.frame_id, p.camera_id, p.t_gen, p.slo) for p in patches]
-        frames_store[scene.t] = scene.render_rgb()
-        now = time.time() - t_start
-        for patch in patches:
-            n_patches += 1
-            fired = invoker.on_patch(now, patch)
-            fired += filter(None, [invoker.poll(now)])
-            for inv in fired:
-                run_invocation(inv)
-    last = invoker.flush(time.time() - t_start)
-    if last:
-        run_invocation(last)
-    print(f"served {n_patches} patches in {n_invocations} invocations "
-          f"({n_sharded} data-parallel over data={axis_sizes.get('data', 1)}), "
-          f"routed {n_detections} detections + "
-          f"{evidence_bytes / 1e6:.2f} MB patch evidence back to frames "
-          f"({time.time()-t_start:.1f}s wall)")
-
-
-def _execute(inv, frames_store, serve_fn, params, m, n, use_pallas,
-             mesh=None, rules=None):
-    """One serverless invocation: the invoker's multi-canvas plan drives a
-    single batched stitch, the data-parallel detector batch, and the
-    inverse unstitch that routes per-patch outputs back to their source
-    frames."""
-    plan = inv.batch_plan()
-    crops = []
-    for patch in inv.patches:
-        frame = frames_store.get(patch.frame_id)
-        if frame is None:
-            crops.append(np.zeros((patch.h, patch.w, 3), np.float32))
-        else:
-            crops.append(frame[patch.y0:patch.y1, patch.x0:patch.x1])
-    slots = stitch_ops.pack_plan_host(crops, plan)
-    records = jnp.asarray(plan.records)
-    impl = "pallas_interpret" if use_pallas else "xla"
-    canvases = stitch_ops.stitch_canvases(
-        jnp.asarray(slots), records, m, n, impl=impl)
-    sharded = False
-    if mesh is not None:
-        canvases, sharded = shard_canvases(canvases, mesh, rules)
-    obj, boxes = serve_fn(params, canvases)
-    # inverse gather, grouped by source frame alongside the routed
-    # detections.  The box head has no pixel-space output, so the
-    # canvases stand in for a per-pixel head (e.g. segmentation): the
-    # gathered slots equal the input crops, and the value here is
-    # exercising the unstitch path every invocation.  slot_capacity
-    # (pow2-bucketed) keeps the jit static shapes stable across
-    # invocations; rows past num_patches are never read.
-    patch_out = stitch_ops.unstitch_patches(
-        canvases, records, plan.slot_capacity, plan.hmax, plan.wmax,
-        impl=impl)
-    jax.block_until_ready((obj, patch_out))
-    per_frame = stitch_ops.route_detections(plan, inv.patches,
-                                            np.asarray(obj), np.asarray(boxes))
-    evidence = np.asarray(patch_out)
-    per_frame_pixels = {}
-    for i, patch in enumerate(inv.patches):
-        # copy: a view would pin the whole pow2-padded batch in memory
-        per_frame_pixels.setdefault(patch.frame_id, []).append(
-            np.ascontiguousarray(evidence[i, :patch.h, :patch.w]))
-    return obj, boxes, per_frame, per_frame_pixels, sharded
+    violated = sum(o.violated for o in outcomes)
+    print(f"served {len(stream)} patches in {executor.n_invocations} "
+          f"invocations "
+          f"({executor.n_sharded} data-parallel over "
+          f"data={axis_sizes.get('data', 1)}), "
+          f"routed {executor.n_detections} detections + "
+          f"{executor.evidence_bytes / 1e6:.2f} MB patch evidence back to "
+          f"frames, {violated} SLO violations "
+          f"({len(executor.frames)} frames still held, "
+          f"{time.time()-t_start:.1f}s wall)")
 
 
 if __name__ == "__main__":

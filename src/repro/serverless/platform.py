@@ -77,11 +77,17 @@ class Platform:
 
     def _acquire(self, t: float) -> Tuple[_Instance, float, bool]:
         """Pick a warm free instance, else scale up (cold start), else
-        queue on the earliest-free instance."""
+        queue on the earliest-free instance.
+
+        Among warm free instances the *most recently used* one (max
+        ``warm_until``) wins: traffic concentrates on a small hot set, so
+        the idle tail cools and falls out of keep-alive instead of every
+        instance's lease being refreshed round-robin by stray requests.
+        """
         warm_free = [i for i in self.instances
                      if i.free_at <= t and i.warm_until >= t]
         if warm_free:
-            return warm_free[0], t, False
+            return max(warm_free, key=lambda i: i.warm_until), t, False
         if len(self.instances) < self.cfg.max_instances:
             inst = _Instance()
             self.instances.append(inst)

@@ -171,6 +171,44 @@ class TestPlatform:
             p.submit(i * 0.01, 1 + i % 3)
         assert p.total_cost == pytest.approx(sum(r.cost for r in p.records))
 
+    def test_mru_warm_pick_fewer_cold_starts_on_bursty_trace(self):
+        """_acquire prefers the most-recently-used warm instance (max
+        ``warm_until``), concentrating traffic on a hot set whose leases
+        the last burst already refreshed.  On this deterministic bursty
+        trace (sigma=0: no sampling noise), first-free disperses work
+        onto instances whose keep-alive lapses mid-burst and pays two
+        extra cold starts; MRU also never leaves MORE of the fleet warm
+        at the end (the idle tail cools instead of being churned)."""
+        class FirstFreePlatform(Platform):
+            # the pre-MRU policy, kept here as the comparison arm
+            def _acquire(self, t):
+                warm_free = [i for i in self.instances
+                             if i.free_at <= t and i.warm_until >= t]
+                if warm_free:
+                    return warm_free[0], t, False
+                return super()._acquire(t)
+
+        bursts = [(2.259, 1), (2.358, 1), (3.924, 1), (4.034, 1), (4.14, 2),
+                  (5.705, 1), (5.72, 1), (5.823, 1), (5.917, 1), (5.932, 1),
+                  (6.261, 1), (7.092, 1), (7.185, 1), (7.246, 1), (8.514, 2),
+                  (8.591, 1), (8.72, 1)]
+        table = LatencyTable({1: (0.2, 0.0), 8: (1.6, 0.0)})
+        cfg = PlatformConfig(cold_start_s=0.5, keep_alive_s=1.0,
+                             max_instances=6, pre_warm=1)
+
+        def run(cls):
+            p = cls(table, cfg)
+            for t, b in bursts:
+                p.submit(t, b)
+            t_end = max(r.t_finish for r in p.records)
+            return (sum(r.cold for r in p.records),
+                    sum(i.warm_until >= t_end for i in p.instances))
+
+        mru_cold, mru_warm = run(Platform)
+        ff_cold, ff_warm = run(FirstFreePlatform)
+        assert mru_cold < ff_cold, (mru_cold, ff_cold)
+        assert mru_warm <= ff_warm, (mru_warm, ff_warm)
+
     def test_straggler_hedging_bounds_tail(self):
         cfg_nohedge = PlatformConfig(straggler_prob=1.0, straggler_factor=10,
                                      seed=1)

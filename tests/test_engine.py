@@ -1,0 +1,223 @@
+"""Unified event-driven serving engine (core/engine.py).
+
+Covers: timers firing at their scheduled virtual time (the old serve-loop
+polled only on arrivals), the per-SLO-class InvokerPool (outcome
+exactly-once + class purity + head-of-line-blocking relief), executor
+equivalence (SimExecutor and DeviceExecutor produce identical
+patch->invocation groupings for the same trace), and the DeviceExecutor's
+refcounted frame store.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import (DeviceExecutor, ServingEngine, SimExecutor,
+                               slo_class, uniform_pool)
+from repro.core.latency import LatencyTable
+from repro.core.partitioning import Patch
+from repro.data.video import Arrival
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+def table(mu=0.1, sigma=0.01, n=32):
+    return LatencyTable({b: (mu * b, sigma) for b in range(1, n + 1)},
+                        slack_sigmas=3.0)
+
+
+def patch(t_gen, slo=1.0, w=64, h=64, frame_id=0, camera_id=0):
+    return Patch(0, 0, w, h, frame_id=frame_id, camera_id=camera_id,
+                 t_gen=t_gen, slo=slo)
+
+
+def arrivals_of(patches):
+    """Arrival == generation (no uplink shaping): isolates the engine."""
+    return [Arrival(p.t_gen, p, 0.0) for p in patches]
+
+
+def sim_engine(latency=None, classify=None, platform_cfg=None):
+    latency = latency or table()
+    plat = Platform(latency, platform_cfg or PlatformConfig())
+    pool = uniform_pool(256, 256, latency, classify=classify)
+    return ServingEngine(pool, SimExecutor(plat), check_invariants=True)
+
+
+def fake_serve_fn(params, x):
+    """Detector stand-in: zero objectness (no detections), right shapes."""
+    import jax.numpy as jnp
+    return (jnp.zeros((x.shape[0], 2, 2)),
+            jnp.zeros((x.shape[0], 2, 2, 4)))
+
+
+# ------------------------------------------------------------ timer bug ----
+
+def test_timer_fires_at_scheduled_virtual_time_not_next_arrival():
+    """Regression for the serve-loop timer bug: the old launch/serve loop
+    polled the invoker only when a new patch arrived, so a timer falling
+    in a gap between frames fired late, inflating t_submit and the SLO
+    accounting.  The engine fires it at its scheduled virtual time even
+    when the next arrival is far away."""
+    eng = sim_engine()
+    out = eng.run(arrivals_of([patch(0.0), patch(5.0)]))
+    # t_remain = 1.0 - (0.1 + 3 * 0.01) = 0.87, inside the (0, 5) gap
+    first = eng.invocations[0]
+    assert first.reason == "timer"
+    assert first.t_submit == pytest.approx(0.87)
+    assert out[0].wait == pytest.approx(0.87)
+    # the straddled patch was NOT dragged to the second arrival's time
+    assert out[0].t_submit < 5.0
+
+
+def test_streaming_offer_matches_batch_run():
+    ps = [patch(0.0), patch(0.4), patch(2.0), patch(6.0)]
+    batch = sim_engine()
+    batch.run(arrivals_of(ps))
+    stream = sim_engine()
+    for a in arrivals_of(ps):
+        stream.offer(a)
+    stream.finish()
+    key = lambda e: [(i.t_submit, i.reason, len(i.patches))
+                     for i in e.invocations]
+    assert key(stream) == key(batch)
+
+
+# ----------------------------------------------------- pool property test ----
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 5), st.sampled_from([0.4, 2.0]),
+                          st.integers(16, 256), st.integers(16, 256)),
+                min_size=1, max_size=40))
+def test_pool_every_outcome_once_and_class_pure(arrivals):
+    """For any interleaving of arrivals across two SLO classes: every
+    patch yields exactly one PatchOutcome, t_submit >= t_arrive, and no
+    invoker ever receives another class's patch."""
+    patches = [patch(t, slo=s, w=w, h=h)
+               for t, s, w, h in sorted(arrivals)]
+    eng = sim_engine(classify=slo_class)
+    out = eng.run(arrivals_of(patches))
+
+    assert sorted(id(o.patch) for o in out) == sorted(id(p) for p in patches)
+    for o in out:
+        assert o.t_submit >= o.t_arrive - 1e-9
+    for inv in eng.invocations:
+        assert inv.patches
+        assert all(slo_class(p) == inv.key for p in inv.patches)
+    # completions delivered exactly once per invocation, in finish order
+    assert len(eng.completions) == len(eng.invocations)
+    finishes = [c.t_finish for c in eng.completions]
+    assert finishes == sorted(finishes)
+
+
+# ------------------------------------------- mixed-SLO head-of-line relief ----
+
+def mixed_trace():
+    """Three episodes: a burst of 6 canvas-filling loose patches, then one
+    tight patch arriving while the loose queue is deep."""
+    ps = []
+    for k in range(3):
+        t0 = 3.0 * k
+        for i in range(6):
+            ps.append(patch(t0 + 0.05 * i, slo=10.0, w=256, h=256))
+        ps.append(patch(t0 + 1.0, slo=0.55, w=64, h=64))
+    return ps
+
+
+def run_mixed(classify):
+    lat = table(mu=0.1, sigma=0.005)
+    eng = sim_engine(latency=lat, classify=classify,
+                     platform_cfg=PlatformConfig(max_instances=1))
+    out = eng.run(arrivals_of(mixed_trace()))
+    tight = [o for o in out if o.patch.slo < 1.0]
+    assert len(tight) == 3
+    return sum(o.violated for o in tight) / len(tight)
+
+
+def test_invoker_pool_lowers_tight_class_violations():
+    """The single shared queue head-of-line blocks the tight class: each
+    tight arrival forces the deep loose queue to dispatch first (SLO
+    pressure), and the tight batch then queues behind that execution on
+    the concurrency-1 platform.  Per-class invokers leave the loose queue
+    on its own (distant) timer, so tight batches run on an idle platform."""
+    shared = run_mixed(None)
+    pooled = run_mixed(slo_class)
+    assert pooled < shared, (pooled, shared)
+
+
+# ------------------------------------------------- executor equivalence ----
+
+def trace_for_device(n=18, seed=3):
+    rng = np.random.default_rng(seed)
+    ps = []
+    for i in range(n):
+        t = round(float(rng.uniform(0, 4.0)), 3)
+        w = int(rng.integers(8, 64))
+        h = int(rng.integers(8, 64))
+        ps.append(Patch(0, 0, w, h, frame_id=i // 3, t_gen=t,
+                        slo=float(rng.choice([0.6, 2.0]))))
+    return sorted(ps, key=lambda p: p.t_gen)
+
+
+def test_sim_and_device_executors_share_invocation_boundaries():
+    """Invocation boundaries depend only on arrivals and the batcher —
+    the same trace groups patches identically whether invocations run on
+    the platform model or on the real stitch->detect->unstitch pipeline."""
+    trace = trace_for_device()
+    lat = table()
+
+    sim = ServingEngine(uniform_pool(64, 64, lat, classify=slo_class),
+                        SimExecutor(Platform(lat, PlatformConfig())))
+    sim.run(arrivals_of(trace))
+
+    dev_exec = DeviceExecutor(fake_serve_fn, None, 64, 64)
+    dev = ServingEngine(uniform_pool(64, 64, lat, classify=slo_class),
+                        dev_exec)
+    dev.run(arrivals_of(trace))
+
+    idx = {id(p): i for i, p in enumerate(trace)}
+    group = lambda e: [[idx[id(p)] for p in inv.patches]
+                       for inv in e.invocations]
+    assert group(sim) == group(dev)
+    assert dev_exec.n_invocations == len(dev.invocations)
+
+
+# --------------------------------------------------- frame store eviction ----
+
+def test_device_frame_store_refcount_eviction():
+    """Regression for the frames_store leak: a frame is evicted the moment
+    every patch cut from it has been routed; the store is empty after the
+    final flush.  Frames that produced no patches are never stored."""
+    dev = DeviceExecutor(fake_serve_fn, None, 64, 64)
+    trace = []
+    for fid in range(4):
+        n = [2, 3, 0, 1][fid]
+        dev.add_frame(fid, np.full((64, 128, 3), fid, np.float32), n)
+        for j in range(n):
+            trace.append(Patch(8 * j, 0, 8 * j + 8, 16, frame_id=fid,
+                               t_gen=0.2 * fid + 0.01 * j, slo=0.5))
+    assert set(dev.frames) == {0, 1, 3}      # fid 2 produced no patches
+
+    eng = ServingEngine(uniform_pool(64, 64, table()), dev)
+    out = eng.run(arrivals_of(trace))
+    assert len(out) == len(trace)
+    assert dev.frames == {}
+    assert dev._refs == {}
+
+
+def test_device_frame_evicted_midway_once_fully_routed():
+    """Eviction is per-frame as completions land, not one big final
+    sweep: a frame whose patches all completed before a later arrival is
+    already gone when that arrival is processed."""
+    dev = DeviceExecutor(fake_serve_fn, None, 64, 64)
+    dev.add_frame(0, np.zeros((64, 128, 3), np.float32), 1)
+    dev.add_frame(1, np.zeros((64, 128, 3), np.float32), 1)
+    early = Patch(0, 0, 16, 16, frame_id=0, t_gen=0.0, slo=0.3)
+    late = Patch(0, 0, 16, 16, frame_id=1, t_gen=5.0, slo=0.3)
+
+    eng = ServingEngine(uniform_pool(64, 64, table()), dev)
+    eng.offer(Arrival(0.0, early, 0.0))
+    eng.offer(Arrival(5.0, late, 0.0))       # advances past frame 0's life
+    assert 0 not in dev.frames
+    assert 1 in dev.frames
+    eng.finish()
+    assert dev.frames == {}

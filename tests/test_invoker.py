@@ -125,6 +125,50 @@ def test_eviction_invariants_under_pressure(arrivals):
 
 
 @settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 6), st.floats(0.1, 3.0),
+                          st.integers(16, 256), st.integers(16, 256)),
+                min_size=1, max_size=40))
+def test_incremental_restitch_equals_from_scratch(arrivals):
+    """The incremental invoker (live PackState, probe-then-append) must
+    fire the exact same invocation stream — times, reasons, patch sets,
+    canvas counts, placements — as the paper's literal
+    restitch-everything-per-arrival semantics, under timers, SLO
+    pressure, memory overflow, and the final flush."""
+    from repro.core.stitching import validate
+
+    trace = [(t, patch(t, slo=slo, w=w, h=h))
+             for t, slo, w, h in sorted(arrivals)]
+    runs = []
+    for incremental in (True, False):
+        inv = SLOAwareInvoker(256, 256, table(), max_canvases=3,
+                              incremental=incremental)
+        fired = []
+        for t, p in trace:
+            while inv.next_timer() < t:
+                f = inv.poll(inv.next_timer())
+                if f is None:
+                    break
+                fired.append(f)
+            fired += inv.on_patch(t, p)
+        f = inv.flush(99.0)
+        if f is not None:
+            fired.append(f)
+        runs.append(fired)
+
+    a, b = runs
+    assert len(a) == len(b)
+    for fa, fb in zip(a, b):
+        assert (fa.t_submit, fa.reason) == (fb.t_submit, fb.reason)
+        assert [id(p) for p in fa.patches] == [id(p) for p in fb.patches]
+        assert len(fa.canvases) == len(fb.canvases)
+        assert [(pl.patch_idx, pl.canvas_idx, pl.x, pl.y, pl.w, pl.h)
+                for c in fa.canvases for pl in c.placements] == \
+            [(pl.patch_idx, pl.canvas_idx, pl.x, pl.y, pl.w, pl.h)
+             for c in fb.canvases for pl in c.placements]
+        validate(fa.canvases)
+
+
+@settings(max_examples=30, deadline=None)
 @given(st.lists(st.floats(0, 5), min_size=1, max_size=25))
 def test_all_patches_eventually_dispatched(times):
     inv = SLOAwareInvoker(256, 256, table(), max_canvases=8)

@@ -4,7 +4,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partitioning import Patch
-from repro.core.stitching import (Canvas, FreeRect, _choose, _split, stitch,
+from repro.core.stitching import (Canvas, FreeRect, PackState, _choose,
+                                  _split, stitch,
                                   total_efficiency, validate)
 
 
@@ -120,3 +121,25 @@ class TestStitchProperties:
         cs = stitch([P_(128, 128)] * (4 * n), 256, 256)
         assert len(cs) == n
         assert total_efficiency(cs) == 1.0
+
+    @settings(max_examples=60, deadline=None)
+    @given(patch_lists())
+    def test_incremental_append_equals_from_scratch(self, patches):
+        """PackState appends one patch per arrival into the live free-rect
+        state; the result must be the same packing (same canvas count,
+        same placements, valid) as restitching the whole queue from
+        scratch — the invariant the invoker's O(1) restitch rests on."""
+        state = PackState(256, 256)
+        for i, p in enumerate(patches):
+            fits = state.fits(p.w, p.h)
+            before = len(state.canvases)
+            state.append(p)
+            # the read-only probe predicts the canvas-count change
+            assert len(state.canvases) == before + (0 if fits else 1)
+            scratch = stitch(patches[: i + 1], 256, 256)
+            assert len(state.canvases) == len(scratch)
+            assert [(pl.patch_idx, pl.canvas_idx, pl.x, pl.y, pl.w, pl.h)
+                    for c in state.canvases for pl in c.placements] == \
+                [(pl.patch_idx, pl.canvas_idx, pl.x, pl.y, pl.w, pl.h)
+                 for c in scratch for pl in c.placements]
+        validate(state.canvases)
