@@ -1,6 +1,6 @@
-"""Engine perf trajectory: incremental vs from-scratch restitch + e2e sim.
+"""Engine perf trajectory: restitch, e2e sim, and device-overlap modes.
 
-Two measurements, written to ``BENCH_engine.json`` at the repo root:
+Three measurements, written to ``BENCH_engine.json`` at the repo root:
 
 * (a) invoker arrivals/sec at queue depths {16, 64, 256} for the
   incremental packer (live ``PackState``, probe-then-append) vs the
@@ -10,6 +10,14 @@ Two measurements, written to ``BENCH_engine.json`` at the repo root:
 * (b) end-to-end simulated serving throughput (patches/sec) through the
   unified engine: bandwidth-shaped arrivals -> per-class invoker pool ->
   SimExecutor/platform, on the standard multi-camera synthetic streams.
+* (c) device-overlap: sync vs async device mode arrivals/sec and p99
+  latency on a bursty trace.  The "device" is the deterministic
+  ``StubAccelerator`` (serial queue, fixed per-invocation service time —
+  host never burns CPU for it, exactly like a real accelerator), while
+  the host side is the real pipeline: crop gather, slot packing, stitch
+  and unstitch dispatch, detection routing.  Sync blocks the event loop
+  on every invocation; async (bounded in-flight) overlaps device service
+  with arrival ingestion and restitching.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full
@@ -32,6 +40,9 @@ from repro.serverless.platform import Platform, PlatformConfig
 
 DEPTHS = (16, 64, 256)
 CANVAS = 256
+SERVICE_S = 0.008        # stub device service time per invocation
+OVERLAP_CANVAS = 128     # smaller canvas: host work ~ device service, so
+                         # the overlap headroom is actually measurable
 
 
 def _queue_patches(depth: int, seed: int = 0):
@@ -82,6 +93,84 @@ def bench_e2e(n_cams: int, n_frames: int, per_frame: int = 6) -> dict:
             "invocations": res.invocations}
 
 
+def _burst_trace(canvas: int, n_bursts: int, per_burst: int, seed: int = 0):
+    """Bursty arrivals: each burst is one frame's patches in a tight
+    cluster, bursts spaced so the invoker timer fires one invocation per
+    burst."""
+    rng = np.random.default_rng(seed)
+    frames, patches = {}, []
+    for b in range(n_bursts):
+        frames[b] = rng.uniform(0.0, 1.0, (canvas, 2 * canvas, 3)) \
+            .astype(np.float32)
+        t0 = 0.25 * b
+        for j in range(per_burst):
+            w = int(rng.integers(32, 96))
+            h = int(rng.integers(32, 96))
+            x0 = int(rng.integers(0, 2 * canvas - w))
+            y0 = int(rng.integers(0, canvas - h))
+            patches.append(Patch(x0, y0, x0 + w, y0 + h, frame_id=b,
+                                 t_gen=round(t0 + 0.001 * j, 4), slo=0.1))
+    return frames, sorted(patches, key=lambda p: p.t_gen)
+
+
+def bench_device_overlap(smoke: bool) -> dict:
+    """Sync vs async device mode on the bursty trace (wall-clock timed)."""
+    from repro.core.devicestub import StubAccelerator
+    from repro.core.engine import (AsyncDeviceExecutor, DeviceExecutor,
+                                   ServingEngine, uniform_pool)
+    from repro.data.video import Arrival
+
+    n_bursts = 8 if smoke else 40
+    per_burst = 8
+    canvas = OVERLAP_CANVAS
+    frames, patches = _burst_trace(canvas, n_bursts, per_burst)
+    arrivals = [Arrival(p.t_gen, p, 0.0) for p in patches]
+    table = LatencyTable({1: (1e-3, 0.0)})
+    counts = {}
+    for p in patches:
+        counts[p.frame_id] = counts.get(p.frame_id, 0) + 1
+
+    def run(mode):
+        with StubAccelerator(SERVICE_S) as stub:
+            kw = dict(sync=stub.sync)
+            if mode == "async":
+                dev = AsyncDeviceExecutor(stub.serve_fn, None, canvas,
+                                          canvas, max_inflight=4, **kw)
+            else:
+                dev = DeviceExecutor(stub.serve_fn, None, canvas, canvas,
+                                     **kw)
+            for fid, px in frames.items():
+                dev.add_frame(fid, px, counts.get(fid, 0))
+            eng = ServingEngine(
+                uniform_pool(canvas, canvas, table, max_canvases=64), dev)
+            t0 = time.perf_counter()
+            eng.run(arrivals)
+            dt = time.perf_counter() - t0
+        lats = sorted(o.latency for o in eng.outcomes)
+        return {"arrivals_per_s": round(len(arrivals) / dt, 1),
+                "seconds": round(dt, 4),
+                "invocations": len(eng.invocations),
+                "p99_latency_s": round(lats[int(0.99 * (len(lats) - 1))], 4),
+                "inflight_high_water": eng.inflight_high_water}
+
+    run("sync")                      # warm the jit caches for these shapes
+    # best-of-2 per mode: wall-clock timings on shared CI hosts jitter,
+    # and the fastest rep is the least-perturbed measurement of each mode
+    sync = min((run("sync") for _ in range(2)),
+               key=lambda r: r["seconds"])
+    asyn = min((run("async") for _ in range(2)),
+               key=lambda r: r["seconds"])
+    assert sync["invocations"] == asyn["invocations"], \
+        "overlap mode leaked into invocation boundaries"
+    return {"trace": {"canvas": canvas, "bursts": n_bursts,
+                      "per_burst": per_burst, "stub_service_s": SERVICE_S},
+            "sync": sync, "async": asyn,
+            "speedup": round(asyn["arrivals_per_s"]
+                             / sync["arrivals_per_s"], 2),
+            "p99_added_latency_s": round(asyn["p99_latency_s"]
+                                         - sync["p99_latency_s"], 4)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -106,6 +195,14 @@ def main(argv=None):
     report["e2e_sim"] = bench_e2e(n_cams=2 if args.smoke else 4,
                                   n_frames=15 if args.smoke else 40)
     print("e2e:", report["e2e_sim"])
+
+    report["device_overlap"] = bench_device_overlap(args.smoke)
+    ov = report["device_overlap"]
+    print(f"device overlap: sync {ov['sync']['arrivals_per_s']}/s "
+          f"async {ov['async']['arrivals_per_s']}/s "
+          f"speedup {ov['speedup']}x "
+          f"(p99 added {ov['p99_added_latency_s']}s, "
+          f"in-flight high water {ov['async']['inflight_high_water']})")
 
     out = pathlib.Path(args.out) if args.out else (
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json")

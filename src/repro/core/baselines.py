@@ -91,8 +91,11 @@ class ClipperBatcher:
 
     Requests are patches padded to a fixed tile; a batch fires when the
     queue reaches the current target; the target grows +1 when the batch
-    met its SLO budget (executor feedback via ``on_result``) and halves on
-    violation.  A drain timer (slo/2) bounds tail waiting, as in Clipper's
+    met its SLO budget and halves on violation.  The engine delivers the
+    ``on_result`` feedback at *completion-delivery* time — the batcher
+    learns a batch's fate when its result lands, as the real Clipper
+    does, so arrivals in the dispatch->finish window still see the old
+    target.  A drain timer (slo/2) bounds tail waiting, as in Clipper's
     adaptive batching.
     """
 

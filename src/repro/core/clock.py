@@ -1,0 +1,96 @@
+"""Pluggable engine clocks: virtual time for simulation/replay, wall time
+for live serving.
+
+Every timer decision in the serving engine is made against *engine time*
+(seconds, starting at 0 with the trace).  What engine time *is* depends
+on the clock:
+
+* :class:`VirtualClock` — simulation and trace replay.  ``advance_to``
+  jumps instantly, so a 10-minute trace executes as fast as the host can
+  process events.  This is the engine's default and reproduces the exact
+  `self.now = max(self.now, t)` semantics the event loop historically
+  hard-coded.
+* :class:`WallClock` — live serving.  Engine time is anchored to
+  ``time.perf_counter`` at construction; ``advance_to`` genuinely sleeps
+  until the target instant, so invoker timers fire at real wall times and
+  device executions overlap with the wait for the next arrival.  The
+  ``speed`` factor (engine seconds per wall second) exists so wall-clock
+  behaviour can be exercised in CI without waiting out a real trace:
+  ``WallClock(speed=100)`` replays a 5-second trace in 50 ms while
+  keeping every relative ordering intact.
+
+Both clocks are monotone: ``advance_to`` never moves engine time
+backwards, and ``now()`` never decreases.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """What :class:`~repro.core.engine.ServingEngine` needs from a clock."""
+
+    #: True when ``advance_to`` jumps instantly (simulation semantics).
+    virtual: bool
+
+    def now(self) -> float:
+        """Current engine time in seconds."""
+
+    def advance_to(self, t: float) -> None:
+        """Move engine time forward to ``t`` (no-op when already past)."""
+
+
+class VirtualClock:
+    """Discrete-event time: ``advance_to`` jumps, nothing sleeps."""
+
+    virtual = True
+
+    def __init__(self, t0: float = 0.0):
+        self._t = t0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance_to(self, t: float) -> None:
+        if t > self._t:
+            self._t = t
+
+
+class WallClock:
+    """Engine time anchored to real time; ``advance_to`` sleeps.
+
+    ``speed`` is engine-seconds per wall-second (1.0 = real time;
+    >1 compresses the trace for tests).  ``now()`` is clamped monotone so
+    a caller never observes time running backwards even if the underlying
+    timer is perturbed.
+    """
+
+    virtual = False
+
+    def __init__(self, speed: float = 1.0,
+                 time_fn: Callable[[], float] = time.perf_counter,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        if speed <= 0:
+            raise ValueError(f"speed must be positive, got {speed}")
+        self.speed = speed
+        self._time_fn = time_fn
+        self._sleep_fn = sleep_fn
+        self._epoch = time_fn()
+        self._floor = 0.0
+
+    def now(self) -> float:
+        t = (self._time_fn() - self._epoch) * self.speed
+        if t > self._floor:
+            self._floor = t
+        return self._floor
+
+    def advance_to(self, t: float) -> None:
+        dt = (t - self.now()) / self.speed
+        if dt > 0:
+            self._sleep_fn(dt)
+        # an event scheduled at t has, by definition, happened by the time
+        # advance_to returns — even if sleep undershot by a scheduler tick
+        if t > self._floor:
+            self._floor = t

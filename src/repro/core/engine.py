@@ -1,19 +1,40 @@
 """Unified event-driven serving engine: one control plane for the
 simulated platform and the real jit'd detector.
 
-The engine owns the virtual-clock event loop every serving scenario runs
-on.  Three event kinds, always processed in virtual-time order:
+The engine owns the event loop every serving scenario runs on.  *Engine
+time* comes from a pluggable :mod:`~repro.core.clock` — a
+:class:`~repro.core.clock.VirtualClock` (default) jumps between events so
+simulation and replay run as fast as the host allows, while a
+:class:`~repro.core.clock.WallClock` sleeps to each event so timers fire
+at real wall times (live serving).  Three event kinds, always processed
+in engine-time order:
 
 * **arrivals** — bandwidth-shaped ``data.video.Arrival`` records fed via
   :meth:`ServingEngine.run` (a whole trace) or :meth:`ServingEngine.offer`
   (streaming);
 * **invoker timers** — each batching policy exposes ``next_timer()``; the
-  engine fires the policy *at the timer's scheduled virtual time*, never
+  engine fires the policy *at the timer's scheduled time*, never
   deferring to the next arrival (a gap between arrivals that straddles
   ``t_remain`` no longer inflates ``t_submit``);
-* **completions** — every dispatched invocation's finish event, delivered
-  back to the executor (``on_complete``) so device-side bookkeeping such
-  as frame-store eviction happens on the same clock.
+* **completions** — every dispatched invocation finishes some time after
+  it was submitted.  ``t_finish`` is *not* known at dispatch: executors
+  expose ``submit(inv) -> handle`` and the engine resolves the handle to
+  a :class:`Completion` later — from the platform model (``SimExecutor``,
+  finish time known as soon as the model is consulted), or by joining the
+  device future (``AsyncDeviceExecutor``).  Completion delivery is where
+  outcomes are recorded, executor bookkeeping (frame-store eviction) runs,
+  and batcher feedback (``on_result``) fires — the feedback loop sees
+  what actually happened, not what the model predicted at dispatch.
+
+**Event ordering at timestamp ties** (pinned by regression test): when a
+completion and a timer are scheduled at the same instant, the completion
+is delivered first — feedback from finished work always lands before the
+next batch is cut.  When two invokers in an :class:`InvokerPool` share a
+timer instant, the first-registered class fires first (dict insertion
+order, i.e. order of first arrival).  Async device completions carry no
+scheduled time; they are delivered as soon as the device reports them
+ready (harvested at every event-loop step), with finish times clamped
+monotone.
 
 Scheduling policy and execution substrate are independent axes:
 
@@ -21,13 +42,19 @@ Scheduling policy and execution substrate are independent axes:
   batches.  :class:`~repro.core.invoker.SLOAwareInvoker` is the paper's
   Algorithm 2; :class:`InvokerPool` keys one invoker per SLO class (or any
   user classification) so tight-deadline patches never queue behind
-  loose-deadline ones; the baselines in ``core.baselines`` are alternative
-  batchers over the same loop.
+  loose-deadline ones; ``core.adaptive.AdaptiveInvokerPool`` layers a
+  completion-driven AIMD controller on top; the baselines in
+  ``core.baselines`` are alternative batchers over the same loop.
 * an **executor** runs a fired invocation: :class:`SimExecutor` submits to
   the serverless ``Platform`` model, :class:`DeviceExecutor` runs the real
-  stitch -> (sharded) detect -> unstitch -> route pipeline.  Invocation
-  boundaries depend only on arrivals and the batcher, so the same trace
-  produces identical patch->invocation groupings on both.
+  stitch -> (sharded) detect -> unstitch -> route pipeline synchronously,
+  and :class:`AsyncDeviceExecutor` exploits JAX async dispatch — submit
+  returns after the host-side stitch + jit dispatch, the device crunches
+  in the background while the engine keeps ingesting arrivals and
+  restitching, and the engine blocks only when the bounded in-flight
+  queue is full or the trace is draining.  Invocation boundaries depend
+  only on arrivals and the batcher, so the same trace produces identical
+  patch->invocation groupings on all three.
 
 Batcher protocol (duck-typed; ``SLOAwareInvoker`` already conforms):
 
@@ -35,23 +62,33 @@ Batcher protocol (duck-typed; ``SLOAwareInvoker`` already conforms):
     poll(t)            -> Optional[Invocation]
     flush(t)           -> Optional[Invocation]  # engine loops until None
     next_timer()       -> float                 # inf when idle
-    on_result(inv, t_finish)                    # optional feedback (AIMD)
+    on_result(inv, t_finish)                    # optional feedback, called
+                                                # at completion delivery
 
 Executor protocol:
 
-    execute(inv) -> Completion                  # runs the invocation
-    on_complete(comp)                           # optional, at t_finish
+    submit(inv) -> ExecHandle       # dispatch; handle.t_finish set when
+                                    # the finish time is already known
+    resolve(handle) -> Completion   # join; blocks if work is in flight
+    ready(handle) -> bool           # optional, async executors only
+    max_inflight: int               # optional bound on unresolved handles
+    on_complete(comp)               # optional, at completion delivery
+
+Executors that only implement the legacy ``execute(inv) -> Completion``
+are still accepted (the engine wraps them in a pre-resolved handle).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import math
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.clock import Clock, VirtualClock
 from repro.core.invoker import Invocation, SLOAwareInvoker
 from repro.core.partitioning import Patch
 from repro.core.stitching import validate
@@ -145,11 +182,28 @@ class Results:
 
 @dataclasses.dataclass
 class Completion:
-    """One finished invocation, delivered at ``t_finish`` virtual time."""
+    """One finished invocation, delivered at ``t_finish`` engine time."""
     invocation: Invocation
     t_finish: float
     record: object = None     # platform ExecutionRecord (SimExecutor)
     outputs: object = None    # routed device outputs (DeviceExecutor)
+
+
+@dataclasses.dataclass
+class ExecHandle:
+    """An in-flight invocation, returned by ``Executor.submit``.
+
+    ``t_finish`` is set when the executor already knows the finish time
+    at submit (the platform model, or a sync device run) — the engine
+    then schedules delivery on the event heap.  When ``None`` the work is
+    genuinely in flight (async device futures) and the engine resolves
+    the handle when it reports ready, the in-flight bound is hit, or the
+    trace drains.
+    """
+    invocation: Invocation
+    t_finish: Optional[float] = None
+    completion: Optional[Completion] = None
+    payload: object = None            # executor-private in-flight state
 
 
 # ----------------------------------------------------------- invoker pool ----
@@ -196,7 +250,12 @@ class InvokerPool:
                    default=math.inf)
 
     def poll(self, t_now: float) -> Optional[Invocation]:
-        """Fire the due invoker with the earliest timer (ties: insertion)."""
+        """Fire the due invoker with the earliest timer.
+
+        Timer ties resolve to the *first-registered* class (dict
+        insertion order = order of each class's first arrival) — pinned
+        by a regression test so multi-class schedules are deterministic.
+        """
         due = [(inv.next_timer(), key) for key, inv in self.invokers.items()
                if inv.next_timer() <= t_now]
         if not due:
@@ -234,22 +293,58 @@ def uniform_pool(canvas_m: int, canvas_n: int, latency, max_canvases: int = 8,
 # -------------------------------------------------------------- executors ----
 
 class SimExecutor:
-    """Executor over the discrete-event serverless ``Platform`` model."""
+    """Executor over the discrete-event serverless ``Platform`` model.
+
+    The model is consulted at submit, so the handle's finish time is
+    known immediately and the engine schedules delivery on the event
+    heap — the simulation analogue of "the device will interrupt us at
+    t_finish".
+    """
 
     def __init__(self, platform: Platform):
         self.platform = platform
 
-    def execute(self, inv: Invocation) -> Completion:
+    def submit(self, inv: Invocation) -> ExecHandle:
         size = (inv.cost_canvases if inv.cost_canvases is not None
                 else len(inv.canvases))
         rec = self.platform.submit(inv.t_submit, size,
                                    n_patches=len(inv.patches))
-        return Completion(inv, rec.t_finish, record=rec)
+        comp = Completion(inv, rec.t_finish, record=rec)
+        return ExecHandle(inv, t_finish=rec.t_finish, completion=comp)
+
+    def resolve(self, handle: ExecHandle) -> Completion:
+        return handle.completion
+
+    def execute(self, inv: Invocation) -> Completion:  # legacy shim
+        return self.resolve(self.submit(inv))
+
+
+def _leaf_ready(x) -> bool:
+    """Duck-typed readiness: jax Arrays and future-likes expose
+    ``is_ready()``; anything else (numpy, scalars) is ready by
+    definition."""
+    probe = getattr(x, "is_ready", None)
+    if probe is None:
+        return True
+    try:
+        return bool(probe())
+    except TypeError:           # is_ready is a property on some types
+        return bool(probe)
 
 
 class DeviceExecutor:
     """Executor over the real pipeline: batched stitch -> (data-parallel)
-    detect -> inverse unstitch -> per-frame routing.
+    detect -> inverse unstitch -> per-frame routing, joined synchronously
+    at submit (``t_finish`` = ``t_submit`` + measured wall execution, the
+    same quantity the offline profiling table estimates, so SLO
+    accounting stays consistent between simulation and device).
+
+    The pipeline is split into :meth:`_launch` (host-side crop gather +
+    slot packing + jit dispatch — *returns before the device finishes*,
+    courtesy of JAX async dispatch) and :meth:`_finalize` (block on the
+    device values, route detections, account).  This class joins the two
+    back-to-back; :class:`AsyncDeviceExecutor` keeps them apart so device
+    execution overlaps arrival ingestion.
 
     Owns the frame store: ``add_frame`` registers a frame's pixels with a
     reference count (how many patches were cut from it); the engine's
@@ -257,14 +352,15 @@ class DeviceExecutor:
     patch cut from it has been routed, so long serving runs no longer
     leak every frame ever seen.
 
-    Virtual ``t_finish`` is ``t_submit`` plus the measured wall execution
-    time — the same quantity the offline profiling table estimates, so
-    SLO accounting stays consistent between simulation and device.
+    ``sync`` joins dispatched device work (default
+    ``jax.block_until_ready``); tests and benchmarks substitute a hook
+    that also joins non-JAX future-likes.
     """
 
     def __init__(self, serve_fn, params, canvas_m: int, canvas_n: int, *,
                  use_pallas: bool = False, mesh=None, rules=None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 sync: Optional[Callable[[object], None]] = None):
         self.serve_fn = serve_fn
         self.params = params
         self.m, self.n = canvas_m, canvas_n
@@ -272,6 +368,7 @@ class DeviceExecutor:
         self.mesh = mesh
         self.rules = rules
         self.clock = clock
+        self.sync = sync
         self.frames: Dict[object, np.ndarray] = {}
         self._refs: Dict[object, int] = {}
         self.n_invocations = 0
@@ -306,10 +403,12 @@ class DeviceExecutor:
 
     # --------------------------------------------------------- execution ----
 
-    def execute(self, inv: Invocation) -> Completion:
+    def _launch(self, inv: Invocation) -> dict:
+        """Host-side stitch + jit dispatch.  Everything here returns as
+        soon as the work is *enqueued* on the device (JAX async
+        dispatch); nothing blocks on device values."""
         # imported here so the pure-simulation control plane never touches
         # the kernel/jit stack
-        import jax
         import jax.numpy as jnp
 
         from repro.kernels.stitch import ops as stitch_ops
@@ -343,24 +442,81 @@ class DeviceExecutor:
         patch_out = stitch_ops.unstitch_patches(
             canvases, records, plan.slot_capacity, plan.hmax, plan.wmax,
             impl=impl)
-        jax.block_until_ready((obj, patch_out))
+        self.n_invocations += 1
+        self.n_sharded += bool(sharded)
+        return {"plan": plan, "obj": obj, "boxes": boxes,
+                "patch_out": patch_out, "t0": t0}
+
+    def _finalize(self, inv: Invocation, payload: dict) -> Completion:
+        """Join the device values and do the host-side routing."""
+        import jax
+
+        from repro.kernels.stitch import ops as stitch_ops
+
+        sync = self.sync or jax.block_until_ready
+        sync((payload["obj"], payload["patch_out"]))
+        plan = payload["plan"]
         per_frame = stitch_ops.route_detections(
-            plan, inv.patches, np.asarray(obj), np.asarray(boxes))
-        evidence = np.asarray(patch_out)
+            plan, inv.patches, np.asarray(payload["obj"]),
+            np.asarray(payload["boxes"]))
+        evidence = np.asarray(payload["patch_out"])
         per_frame_pixels: Dict[object, List[np.ndarray]] = {}
         for i, patch in enumerate(inv.patches):
             # copy: a view would pin the whole pow2-padded batch in memory
             per_frame_pixels.setdefault(patch.frame_id, []).append(
                 np.ascontiguousarray(evidence[i, :patch.h, :patch.w]))
-        wall = self.clock() - t0
+        wall = self.clock() - payload["t0"]
 
-        self.n_invocations += 1
-        self.n_sharded += bool(sharded)
         self.n_detections += sum(len(v) for v in per_frame.values())
         self.evidence_bytes += sum(
             a.nbytes for v in per_frame_pixels.values() for a in v)
         return Completion(inv, inv.t_submit + wall,
                           outputs=(per_frame, per_frame_pixels))
+
+    def submit(self, inv: Invocation) -> ExecHandle:
+        comp = self._finalize(inv, self._launch(inv))
+        return ExecHandle(inv, t_finish=comp.t_finish, completion=comp)
+
+    def resolve(self, handle: ExecHandle) -> Completion:
+        if handle.completion is None:
+            handle.completion = self._finalize(handle.invocation,
+                                               handle.payload)
+            handle.payload = None
+        return handle.completion
+
+    def execute(self, inv: Invocation) -> Completion:  # legacy shim
+        return self.resolve(self.submit(inv))
+
+
+class AsyncDeviceExecutor(DeviceExecutor):
+    """Overlapped device execution: submit returns after the host-side
+    stitch + jit *dispatch*, so the engine keeps ingesting arrivals and
+    restitching while the device works through its queue.
+
+    ``max_inflight`` bounds the number of unresolved handles the engine
+    may hold (device memory for canvases + outputs is pinned per handle);
+    the engine blocks on the *oldest* handle when the bound is hit.
+    Handles resolve in FIFO submit order — a single device queue executes
+    in order, so the oldest dispatch is always the first to finish — and
+    the finish times the engine records are clamped monotone across
+    completions.
+    """
+
+    def __init__(self, *args, max_inflight: int = 4, **kwargs):
+        super().__init__(*args, **kwargs)
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = max_inflight
+
+    def submit(self, inv: Invocation) -> ExecHandle:
+        return ExecHandle(inv, t_finish=None, payload=self._launch(inv))
+
+    def ready(self, handle: ExecHandle) -> bool:
+        if handle.completion is not None:
+            return True
+        p = handle.payload
+        return (_leaf_ready(p["obj"]) and _leaf_ready(p["patch_out"])
+                and _leaf_ready(p["boxes"]))
 
 
 def shard_canvases(canvases, mesh, rules):
@@ -394,20 +550,42 @@ def shard_canvases(canvases, mesh, rules):
 
 class ServingEngine:
     """The one event loop.  Feed arrivals; timers and completions fire at
-    their scheduled virtual times; fired invocations run on the executor.
+    their scheduled engine times; fired invocations run on the executor.
+
+    ``clock`` defaults to a fresh :class:`VirtualClock` (simulation /
+    replay).  Pass a :class:`~repro.core.clock.WallClock` for live
+    serving: the engine then sleeps to each event instant instead of
+    jumping, and in-flight async device work completes during those
+    waits.
     """
 
-    def __init__(self, pool, executor, check_invariants: bool = False):
+    def __init__(self, pool, executor, clock: Optional[Clock] = None,
+                 check_invariants: bool = False):
         self.pool = pool
         self.executor = executor
+        self.clock = clock if clock is not None else VirtualClock()
         self.check_invariants = check_invariants
         self.outcomes: List[PatchOutcome] = []
         self.invocations: List[Invocation] = []
         self.completions: List[Completion] = []
-        self._arrive_at: Dict[int, float] = {}
-        self._pending: List = []          # heap of (t_finish, seq, Completion)
-        self._seq = 0
-        self.now = 0.0                    # last event time processed
+        # arrival bookkeeping is keyed by a per-arrival sequence number;
+        # _seq_of indexes live patches into it (the strong patch ref held
+        # in _arrivals guarantees an id() cannot be recycled while its
+        # entry exists).  Both are evicted when the outcome is recorded,
+        # so a long-lived engine no longer grows without bound.
+        self._arrivals: Dict[int, Tuple[Patch, float]] = {}
+        self._seq_of: Dict[int, int] = {}
+        self._arrival_seq = 0
+        self._scheduled: List = []   # heap of (t_finish, seq, ExecHandle)
+        self._inflight: collections.deque = collections.deque()
+        self._event_seq = 0
+        self._last_async_finish = 0.0
+        self.inflight_high_water = 0
+
+    @property
+    def now(self) -> float:
+        """Engine time of the last event processed."""
+        return self.clock.now()
 
     # ----------------------------------------------------------- feeding ----
 
@@ -421,22 +599,30 @@ class ServingEngine:
     def offer(self, arrival: Arrival):
         """One arrival: first fire everything due strictly before it."""
         self.advance(arrival.t_arrive)
-        self.now = max(self.now, arrival.t_arrive)
-        self._arrive_at[id(arrival.patch)] = arrival.t_arrive
+        self.clock.advance_to(arrival.t_arrive)
+        seq = self._arrival_seq
+        self._arrival_seq += 1
+        self._arrivals[seq] = (arrival.patch, arrival.t_arrive)
+        self._seq_of[id(arrival.patch)] = seq
         for inv in self.pool.on_patch(arrival.t_arrive, arrival.patch):
             self._dispatch(inv)
 
     def advance(self, t: float):
-        """Process every timer/completion event scheduled before ``t``."""
+        """Process every timer/completion event scheduled before ``t``.
+
+        Tie rule (regression-pinned): a completion and a timer at the
+        same instant deliver the completion first.
+        """
         while True:
+            self._harvest_ready()
             t_timer = self.pool.next_timer()
-            t_comp = self._pending[0][0] if self._pending else math.inf
+            t_comp = self._scheduled[0][0] if self._scheduled else math.inf
             t_next = min(t_timer, t_comp)
             if t_next >= t:
                 return
-            self.now = max(self.now, t_next)
+            self.clock.advance_to(t_next)
             if t_comp <= t_timer:
-                self._deliver_completion()
+                self._deliver_scheduled()
             else:
                 fired = self.pool.poll(t_timer)
                 if fired is None:       # defensive: a policy may decline
@@ -453,9 +639,11 @@ class ServingEngine:
             if fired is None:
                 break
             self._dispatch(fired)
-        while self._pending:
-            self.now = max(self.now, self._pending[0][0])
-            self._deliver_completion()
+        while self._inflight:
+            self._resolve_oldest()
+        while self._scheduled:
+            self.clock.advance_to(self._scheduled[0][0])
+            self._deliver_scheduled()
 
     # --------------------------------------------------------- internals ----
 
@@ -472,22 +660,73 @@ class ServingEngine:
                             for p in c.placements)
             assert placed == list(range(len(inv.patches))), placed
         self.invocations.append(inv)
-        comp = self.executor.execute(inv)
-        on_result = getattr(self.pool, "on_result", None)
-        if on_result is not None:
-            on_result(inv, comp.t_finish)
-        for p in inv.patches:
-            self.outcomes.append(PatchOutcome(
-                p, self._arrive_at.get(id(p), inv.t_submit), inv.t_submit,
-                comp.t_finish))
-        self._seq += 1
-        heapq.heappush(self._pending, (comp.t_finish, self._seq, comp))
+        bound = getattr(self.executor, "max_inflight", None)
+        if bound is not None:
+            # block on the oldest in-flight handle until there is room:
+            # the submit below may pin device memory for its canvases
+            while len(self._inflight) >= bound:
+                self._resolve_oldest()
+        handle = self._submit(inv)
+        if handle.t_finish is not None:
+            self._event_seq += 1
+            heapq.heappush(self._scheduled,
+                           (handle.t_finish, self._event_seq, handle))
+        else:
+            self._inflight.append(handle)
+            self.inflight_high_water = max(self.inflight_high_water,
+                                           len(self._inflight))
 
-    def _deliver_completion(self):
-        _, _, comp = heapq.heappop(self._pending)
+    def _submit(self, inv: Invocation) -> ExecHandle:
+        submit = getattr(self.executor, "submit", None)
+        if submit is not None:
+            return submit(inv)
+        comp = self.executor.execute(inv)          # legacy executor
+        return ExecHandle(inv, t_finish=comp.t_finish, completion=comp)
+
+    def _harvest_ready(self):
+        """Deliver async completions the device has already finished.
+
+        Non-blocking: only the FIFO head is probed (a single in-order
+        device queue finishes oldest-first, so nothing behind an unready
+        head can be ready in a way the engine could exploit)."""
+        ready = getattr(self.executor, "ready", None)
+        if ready is None:
+            return
+        while self._inflight and ready(self._inflight[0]):
+            self._resolve_oldest()
+
+    def _resolve_oldest(self):
+        handle = self._inflight.popleft()
+        comp = self.executor.resolve(handle)
+        # async finishes are measured on the device's own wall timer;
+        # clamp monotone so the delivered completion stream is ordered
+        # even when per-invocation elapsed times jitter
+        self._last_async_finish = max(self._last_async_finish, comp.t_finish)
+        comp.t_finish = self._last_async_finish
+        self._deliver(comp)
+
+    def _deliver_scheduled(self):
+        _, _, handle = heapq.heappop(self._scheduled)
+        self._deliver(self.executor.resolve(handle))
+
+    def _deliver(self, comp: Completion):
+        """Completion delivery: executor bookkeeping, outcome recording,
+        then batcher feedback — all observing the *actual* finish."""
         on_complete = getattr(self.executor, "on_complete", None)
         if on_complete is not None:
             on_complete(comp)
+        inv = comp.invocation
+        for p in inv.patches:
+            seq = self._seq_of.pop(id(p), None)
+            if seq is None:
+                t_arrive = inv.t_submit
+            else:
+                _, t_arrive = self._arrivals.pop(seq)
+            self.outcomes.append(
+                PatchOutcome(p, t_arrive, inv.t_submit, comp.t_finish))
+        on_result = getattr(self.pool, "on_result", None)
+        if on_result is not None:
+            on_result(inv, comp.t_finish)
         # the executor's on_complete is the delivery point for outputs;
         # dropping the payload here keeps the retained completion log
         # light — otherwise a long device run would pin every routed

@@ -63,13 +63,22 @@ class SLOAwareInvoker:
     O(canvases) instead of O(queue * canvases) per arrival.
     ``incremental=False`` keeps the literal restitch-everything behaviour
     for equivalence tests and the perf benchmark's baseline arm.
+
+    ``max_canvases`` and ``margin`` are live knobs: a completion-driven
+    controller (``core.adaptive.AdaptiveInvokerPool``) may retune them
+    between arrivals.  ``margin`` is extra firing slack subtracted from
+    ``t_remain`` on top of the latency estimate — it absorbs delay the
+    offline table cannot see (platform queueing, cold starts), observed
+    from completions.  The default 0.0 reproduces Eqn. 8 exactly.
     """
 
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
-                 max_canvases: int = 8, incremental: bool = True):
+                 max_canvases: int = 8, incremental: bool = True,
+                 margin: float = 0.0):
         self.m, self.n = canvas_m, canvas_n
         self.latency = latency
         self.max_canvases = max_canvases
+        self.margin = margin
         self.incremental = incremental
         self.queue: List[Patch] = []
         self.canvases: List[Canvas] = []
@@ -85,7 +94,7 @@ class SLOAwareInvoker:
 
         n_after, packed = self._probe_canvases(patch)
         t_remain_after = (min(self._t_ddl, patch.deadline)
-                          - self.latency.t_slack(n_after))
+                          - self.latency.t_slack(n_after) - self.margin)
 
         if t_remain_after < t_now or n_after > self.max_canvases:
             reason = ("memory" if n_after > self.max_canvases
@@ -154,7 +163,8 @@ class SLOAwareInvoker:
             self.canvases = stitch(self.queue, self.m, self.n)
         self._t_ddl = min(self._t_ddl, patch.deadline)
         self.t_remain = (self._t_ddl
-                         - self.latency.t_slack(len(self.canvases)))
+                         - self.latency.t_slack(len(self.canvases))
+                         - self.margin)
 
     def _clear(self):
         self.queue = []

@@ -6,11 +6,18 @@ scenario (bandwidth-shaped arrivals -> SLO-aware batching -> serverless
 platform) and assembles the ``Results`` record that every benchmark
 (Figs. 8-14) reads.  ``PatchOutcome``/``Results`` are re-exported here
 for backwards compatibility.
+
+Pass ``adaptive=AIMDConfig(...)`` to put the completion-driven AIMD
+controller (:mod:`repro.core.adaptive`) on the pool: per-class canvas
+budgets and firing margins then track delivered completions instead of
+staying at the static configuration.
 """
 from __future__ import annotations
 
 from typing import Callable, Optional, Sequence
 
+from repro.core.adaptive import AIMDConfig, adaptive_uniform_pool
+from repro.core.clock import Clock
 from repro.core.engine import (PatchOutcome, Results, ServingEngine,
                                SimExecutor, uniform_pool)
 from repro.core.latency import LatencyTable
@@ -27,16 +34,26 @@ class TangramScheduler:
     ``classify=None`` keeps the paper's single shared queue; pass
     ``engine.slo_class`` (or any ``Patch -> key`` function) to shard the
     invoker per SLO class so tight deadlines never wait behind loose ones.
+    ``clock`` defaults to a fresh virtual clock per run (simulation).
     """
 
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
                  platform: Platform, max_canvases: int = 8,
                  check_invariants: bool = False,
                  classify: Optional[Callable[[Patch], object]] = None,
-                 incremental: bool = True):
-        self.pool = uniform_pool(canvas_m, canvas_n, latency, max_canvases,
-                                 incremental=incremental, classify=classify)
+                 incremental: bool = True,
+                 adaptive: Optional[AIMDConfig] = None,
+                 clock: Optional[Clock] = None):
+        if adaptive is not None:
+            self.pool = adaptive_uniform_pool(
+                canvas_m, canvas_n, latency, max_canvases,
+                incremental=incremental, classify=classify, cfg=adaptive)
+        else:
+            self.pool = uniform_pool(canvas_m, canvas_n, latency,
+                                     max_canvases, incremental=incremental,
+                                     classify=classify)
         self.platform = platform
+        self.clock = clock
         self.check_invariants = check_invariants
 
     def run(self, streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
@@ -44,6 +61,7 @@ class TangramScheduler:
         per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
         arrivals = merge_arrivals(per_cam)
         engine = ServingEngine(self.pool, SimExecutor(self.platform),
+                               clock=self.clock,
                                check_invariants=self.check_invariants)
         outcomes = engine.run(arrivals)
 

@@ -3,12 +3,20 @@
 Edge side per frame: GMM background subtraction -> RoI extraction ->
 adaptive frame partitioning (Alg. 1).  Cloud side: the unified serving
 engine (``core.engine``) drives the per-SLO-class invoker pool over
-bandwidth-shaped virtual arrivals and executes every fired invocation on
-the :class:`~repro.core.engine.DeviceExecutor` — batched stitch ->
-(data-parallel) detect -> inverse unstitch -> per-frame routing.  Timers
-fire at their scheduled virtual times (not at the next arrival), and the
-executor's frame store is refcounted: a frame is evicted the moment every
-patch cut from it has been routed.
+bandwidth-shaped arrivals and executes every fired invocation on the
+device pipeline — batched stitch -> (data-parallel) detect -> inverse
+unstitch -> per-frame routing.  Timers fire at their scheduled times
+(not at the next arrival), and the executor's frame store is refcounted:
+a frame is evicted the moment every patch cut from it has been routed.
+
+``--async-device`` switches the executor to submit/complete mode
+(:class:`~repro.core.engine.AsyncDeviceExecutor`): each fired invocation
+is stitched and *dispatched* without blocking, the device works through
+its queue while the engine keeps ingesting arrivals, and the engine
+blocks only when ``--max-inflight`` handles are unresolved or the trace
+drains.  ``--clock wall`` runs the engine on real time (timers fire at
+wall instants, ``--wall-speed`` compresses the replay); the default
+virtual clock replays the trace as fast as events can be processed.
 
 Multi-device: the detector batch runs under a ``NamedSharding``
 data-parallel layout — the stitched canvas batch is padded to the mesh's
@@ -18,6 +26,7 @@ step is identical to the unsharded path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
+  PYTHONPATH=src python -m repro.launch.serve --async-device --max-inflight 4
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --frames 16
 """
@@ -34,7 +43,9 @@ from repro import param as param_lib
 from repro.compat import shardingx
 from repro.config import DetectorConfig
 from repro.core import gmm, partitioning, rois
-from repro.core.engine import DeviceExecutor, ServingEngine, uniform_pool
+from repro.core.clock import VirtualClock, WallClock
+from repro.core.engine import (AsyncDeviceExecutor, DeviceExecutor,
+                               ServingEngine, uniform_pool)
 from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
 from repro.core.latency import measure
 from repro.data.synthetic import Scene, preset
@@ -93,6 +104,18 @@ def main(argv=None):
     p.add_argument("--use-pallas-stitch", action="store_true",
                    help="assemble canvases with the Pallas kernel "
                         "(interpret mode on CPU)")
+    p.add_argument("--async-device", action="store_true",
+                   help="overlap device execution with arrival ingestion "
+                        "(submit/complete executor over JAX async dispatch)")
+    p.add_argument("--max-inflight", type=int, default=4,
+                   help="bound on unresolved device invocations in "
+                        "--async-device mode")
+    p.add_argument("--clock", choices=("virtual", "wall"), default="virtual",
+                   help="virtual: replay as fast as events process; "
+                        "wall: timers fire at real wall instants")
+    p.add_argument("--wall-speed", type=float, default=1.0,
+                   help="engine seconds per wall second with --clock wall "
+                        "(>1 compresses the replay)")
     args = p.parse_args(argv)
 
     cfg, params, serve_fn, rules = build_detector(args.canvas)
@@ -116,22 +139,32 @@ def main(argv=None):
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
 
     t_start = time.time()
-    executor = DeviceExecutor(serve_fn, params, m, n,
-                              use_pallas=args.use_pallas_stitch,
-                              mesh=mesh, rules=rules)
+    if args.async_device:
+        executor = AsyncDeviceExecutor(serve_fn, params, m, n,
+                                       use_pallas=args.use_pallas_stitch,
+                                       mesh=mesh, rules=rules,
+                                       max_inflight=args.max_inflight)
+    else:
+        executor = DeviceExecutor(serve_fn, params, m, n,
+                                  use_pallas=args.use_pallas_stitch,
+                                  mesh=mesh, rules=rules)
     scene = Scene(preset(args.scene, width=2 * args.canvas,
                          height=args.canvas))
     stream = generate_stream(scene, executor, args.frames, args.canvas,
                              args.slo)
 
     pool = uniform_pool(m, n, table, max_canvases=4)
-    engine = ServingEngine(pool, executor)
+    clock = (WallClock(speed=args.wall_speed) if args.clock == "wall"
+             else VirtualClock())
+    engine = ServingEngine(pool, executor, clock=clock)
     outcomes = engine.run(shape_arrivals(stream, args.bandwidth_mbps * 1e6))
 
     violated = sum(o.violated for o in outcomes)
+    overlap = (f"async, in-flight high water {engine.inflight_high_water}/"
+               f"{args.max_inflight}" if args.async_device else "sync")
     print(f"served {len(stream)} patches in {executor.n_invocations} "
-          f"invocations "
-          f"({executor.n_sharded} data-parallel over "
+          f"invocations ({overlap}, {args.clock} clock, "
+          f"{executor.n_sharded} data-parallel over "
           f"data={axis_sizes.get('data', 1)}), "
           f"routed {executor.n_detections} detections + "
           f"{executor.evidence_bytes / 1e6:.2f} MB patch evidence back to "

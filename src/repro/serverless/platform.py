@@ -49,6 +49,10 @@ class ExecutionRecord:
     hedged: bool
     cost: float
     n_patches: int = 0           # patches consolidated into the batch
+    instance: int = -1           # index of the instance that ran it
+    backup_instance: int = -1    # hedged backup's instance (-1: none)
+    backup_t_start: float = 0.0
+    backup_exec_s: float = 0.0
 
 
 class Platform:
@@ -112,6 +116,15 @@ class Platform:
         t_finish = t_start + exec_s
         cost = self.meter.charge(exec_s)
 
+        # commit the primary's busy interval BEFORE any hedged acquire:
+        # with free_at still stale, _acquire at t_start + threshold used to
+        # hand the backup the very instance the primary is running on —
+        # two overlapping busy intervals billed on one concurrency-1
+        # instance (double-billed warm time, utilization > 1 possible)
+        inst.free_at = t_start + exec_s
+        inst.warm_until = inst.free_at + self.cfg.keep_alive_s
+
+        b_instance, b_start, backup_exec = -1, 0.0, 0.0
         if exec_s > threshold:
             # hedged backup on a second instance, fired at the threshold
             hedged = True
@@ -121,12 +134,15 @@ class Platform:
             cost += self.meter.charge(backup_exec)
             inst2.free_at = b_start + backup_exec
             inst2.warm_until = inst2.free_at + self.cfg.keep_alive_s
+            b_instance = self.instances.index(inst2)
 
-        inst.free_at = t_start + exec_s
-        inst.warm_until = inst.free_at + self.cfg.keep_alive_s
         rec = ExecutionRecord(t_submit, t_start, t_finish, exec_s,
                               batch_size, cold, hedged, cost,
-                              n_patches=n_patches)
+                              n_patches=n_patches,
+                              instance=self.instances.index(inst),
+                              backup_instance=b_instance,
+                              backup_t_start=b_start,
+                              backup_exec_s=backup_exec)
         self.records.append(rec)
         return rec
 
@@ -144,6 +160,25 @@ class Platform:
         if not counted:
             return 0.0
         return sum(counted) / len(counted)
+
+    def busy_intervals(self) -> dict:
+        """Per-instance busy intervals ``{idx: [(start, end), ...]}``.
+
+        Every billed second appears in exactly one interval (primaries
+        and hedged backups each on their own instance), so
+        ``sum(lengths) == meter.busy_seconds`` — the audit that overlapping
+        in-flight invocations are never double-billed onto one
+        concurrency-1 instance."""
+        out: dict = {}
+        for r in self.records:
+            out.setdefault(r.instance, []).append(
+                (r.t_start, r.t_start + r.exec_s))
+            if r.backup_instance >= 0:
+                out.setdefault(r.backup_instance, []).append(
+                    (r.backup_t_start, r.backup_t_start + r.backup_exec_s))
+        for iv in out.values():
+            iv.sort()
+        return out
 
     def utilization(self, horizon: float) -> float:
         if not self.instances or horizon <= 0:

@@ -209,6 +209,49 @@ class TestPlatform:
         assert mru_cold < ff_cold, (mru_cold, ff_cold)
         assert mru_warm <= ff_warm, (mru_warm, ff_warm)
 
+    def test_hedged_backup_never_reuses_the_primary_instance(self):
+        """Regression: the hedged ``_acquire`` used to run before the
+        primary's busy interval was committed (``free_at`` still stale),
+        so the backup could land on the very instance the primary was
+        running on — two overlapping busy intervals billed against one
+        concurrency-1 instance."""
+        cfg = PlatformConfig(straggler_prob=1.0, straggler_factor=10,
+                             backup_after_sigma=1.0, seed=1, pre_warm=2)
+        p = Platform(LatencyTable({1: (0.1, 0.01)}), cfg)
+        r = p.submit(0.0, 1)
+        assert r.hedged
+        assert r.backup_instance >= 0
+        assert r.backup_instance != r.instance
+
+    def test_no_overlapping_busy_intervals_no_double_billed_time(self):
+        """Accounting audit under concurrently in-flight invocations and
+        forced hedges: per-instance busy intervals never overlap, every
+        billed second appears in exactly one interval
+        (``sum(lengths) == busy_seconds``), and utilization over the
+        makespan stays within [0, 1]."""
+        cfg = PlatformConfig(cold_start_s=0.05, keep_alive_s=2.0,
+                             max_instances=3, pre_warm=1,
+                             straggler_prob=0.3, straggler_factor=6.0,
+                             backup_after_sigma=1.0, seed=7)
+        table = LatencyTable({b: (0.05 * b, 0.01) for b in range(1, 17)})
+        p = Platform(table, cfg)
+        for i, t in enumerate([0.0, 0.02, 0.05, 0.3, 0.31, 0.6, 0.9,
+                               1.4, 1.41, 1.8]):
+            p.submit(t, 1 + i % 4)
+        assert any(r.hedged for r in p.records)
+
+        intervals = p.busy_intervals()
+        assert set(intervals) <= set(range(len(p.instances)))
+        total = 0.0
+        for idx, iv in intervals.items():
+            for (a0, a1), (b0, b1) in zip(iv, iv[1:]):
+                assert a1 <= b0 + 1e-9, \
+                    f"overlapping busy intervals on instance {idx}"
+            total += sum(e - s for s, e in iv)
+        assert total == pytest.approx(p.meter.busy_seconds)
+        horizon = max(r.t_finish for r in p.records)
+        assert 0.0 < p.utilization(horizon) <= 1.0
+
     def test_straggler_hedging_bounds_tail(self):
         cfg_nohedge = PlatformConfig(straggler_prob=1.0, straggler_factor=10,
                                      seed=1)

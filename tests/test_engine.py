@@ -4,8 +4,10 @@ Covers: timers firing at their scheduled virtual time (the old serve-loop
 polled only on arrivals), the per-SLO-class InvokerPool (outcome
 exactly-once + class purity + head-of-line-blocking relief), executor
 equivalence (SimExecutor and DeviceExecutor produce identical
-patch->invocation groupings for the same trace), and the DeviceExecutor's
-refcounted frame store.
+patch->invocation groupings for the same trace), the DeviceExecutor's
+refcounted frame store, deterministic event ordering at timestamp ties,
+the seq-keyed arrival bookkeeping (leak regression), and the pluggable
+clock (wall-clock run ≡ virtual-clock run).
 """
 import math
 
@@ -13,6 +15,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core.clock import VirtualClock, WallClock
 from repro.core.engine import (DeviceExecutor, ServingEngine, SimExecutor,
                                slo_class, uniform_pool)
 from repro.core.latency import LatencyTable
@@ -179,6 +182,141 @@ def test_sim_and_device_executors_share_invocation_boundaries():
                        for inv in e.invocations]
     assert group(sim) == group(dev)
     assert dev_exec.n_invocations == len(dev.invocations)
+
+
+# ---------------------------------------------- event ordering at ties ----
+
+class RecordingPool:
+    """Transparent pool wrapper logging poll-fires and completion
+    feedback, to observe the engine's event order at timestamp ties."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.log = []
+
+    def on_patch(self, t, p):
+        return self.inner.on_patch(t, p)
+
+    def next_timer(self):
+        return self.inner.next_timer()
+
+    def poll(self, t):
+        fired = self.inner.poll(t)
+        if fired is not None:
+            self.log.append(("timer", t))
+        return fired
+
+    def flush(self, t):
+        return self.inner.flush(t)
+
+    def on_result(self, inv, t_finish):
+        self.log.append(("completion", t_finish))
+
+
+def test_completion_delivered_before_timer_at_same_instant():
+    """Pinned tie rule: a completion and a timer scheduled at the same
+    instant resolve completion-first, so batcher feedback from finished
+    work lands before the next batch is cut."""
+    lat = table(mu=1.0, sigma=0.0)
+    pool = RecordingPool(uniform_pool(256, 256, lat))
+    eng = ServingEngine(pool, SimExecutor(Platform(lat, PlatformConfig())))
+    # patch A cannot meet its SLO -> fires "late" at t=0, exec 1.0 on the
+    # pre-warmed instance -> completion at exactly t=1.0
+    eng.offer(Arrival(0.0, patch(0.0, slo=0.5), 0.0))
+    # patch B's timer: t_remain = (0.2 + 1.8) - 1.0 = 1.0, a dead tie
+    eng.offer(Arrival(0.2, patch(0.2, slo=1.8), 0.0))
+    eng.finish()
+    assert pool.log[0] == ("completion", pytest.approx(1.0))
+    assert pool.log[1] == ("timer", pytest.approx(1.0))
+    assert [i.reason for i in eng.invocations] == ["late", "timer"]
+
+
+def test_pool_timer_tie_first_registered_class_fires_first():
+    """Pinned tie rule: when two class invokers share a timer instant,
+    the first-registered class (insertion order = order of each class's
+    first arrival) fires first."""
+    eng = sim_engine(classify=lambda p: p.camera_id)
+    # same SLO and size -> identical t_remain = 0.87 for both classes;
+    # camera 7 registered first
+    eng.run(arrivals_of([patch(0.0, camera_id=7), patch(0.0, camera_id=3)]))
+    assert [inv.key for inv in eng.invocations] == [7, 3]
+    assert all(inv.t_submit == pytest.approx(0.87)
+               for inv in eng.invocations)
+    assert all(inv.reason == "timer" for inv in eng.invocations)
+
+
+# ------------------------------------------- arrival bookkeeping (leak) ----
+
+def test_arrival_bookkeeping_seq_keyed_and_evicted_on_outcome():
+    """Regression for the `_arrive_at` leak: entries are keyed by a
+    per-arrival sequence number, hold the patch alive (no id() aliasing),
+    and are evicted the moment the patch's outcome is recorded — a
+    long-lived engine stays bounded."""
+    eng = sim_engine()
+    eng.offer(Arrival(0.0, patch(0.0), 0.0))
+    assert len(eng._arrivals) == 1 and len(eng._seq_of) == 1
+    # the next offer advances past the first patch's completion (~0.97):
+    # its bookkeeping must already be gone when the new entry is added
+    eng.offer(Arrival(5.0, patch(5.0), 0.0))
+    assert len(eng._arrivals) == 1 and len(eng._seq_of) == 1
+    eng.finish()
+    assert eng._arrivals == {} and eng._seq_of == {}
+    assert [o.t_arrive for o in eng.outcomes] == [0.0, 5.0]
+
+
+def test_outcomes_complete_over_long_streaming_run():
+    eng = sim_engine()
+    ps = [patch(0.3 * i) for i in range(40)]
+    for a in arrivals_of(ps):
+        eng.offer(a)
+    eng.finish()
+    assert len(eng.outcomes) == 40
+    assert eng._arrivals == {} and eng._seq_of == {}
+    arrived = {id(o.patch): o.t_arrive for o in eng.outcomes}
+    assert all(arrived[id(p)] == p.t_gen for p in ps)
+
+
+# -------------------------------------------------------- pluggable clock ----
+
+def test_wall_clock_run_matches_virtual_clock_boundaries():
+    """The clock only decides how the engine *waits* between events, not
+    which events happen: a compressed wall-clock replay produces the
+    exact invocation stream of the virtual-clock run."""
+    ps = [patch(0.0), patch(0.4, slo=2.0), patch(0.9), patch(1.3, slo=2.0)]
+    lat = table()
+
+    def run(clock):
+        plat = Platform(lat, PlatformConfig())
+        eng = ServingEngine(uniform_pool(256, 256, lat, classify=slo_class),
+                            SimExecutor(plat), clock=clock)
+        eng.run(arrivals_of(ps))
+        return [(i.t_submit, i.reason, [id(p) for p in i.patches])
+                for i in eng.invocations]
+
+    virtual = run(VirtualClock())
+    wall = run(WallClock(speed=500.0))
+    assert wall == virtual
+
+
+def test_wall_clock_advance_to_sleeps_scaled():
+    sleeps = []
+    t = [100.0]
+    clk = WallClock(speed=10.0, time_fn=lambda: t[0],
+                    sleep_fn=lambda s: (sleeps.append(s),
+                                        t.__setitem__(0, t[0] + s)))
+    assert clk.now() == 0.0
+    clk.advance_to(5.0)          # 5 engine-seconds = 0.5 wall-seconds
+    assert sleeps == [pytest.approx(0.5)]
+    assert clk.now() == pytest.approx(5.0)
+    clk.advance_to(1.0)          # already past: no sleep
+    assert len(sleeps) == 1
+
+
+def test_virtual_clock_monotone_jump():
+    clk = VirtualClock()
+    clk.advance_to(3.0)
+    clk.advance_to(1.0)
+    assert clk.now() == 3.0
 
 
 # --------------------------------------------------- frame store eviction ----

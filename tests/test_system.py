@@ -52,6 +52,15 @@ def test_serve_driver_with_real_model_and_pallas_stitch():
                 "--use-pallas-stitch"])
 
 
+def test_serve_driver_async_wall_clock_smoke():
+    """launch/serve.py --async-device on a compressed wall clock: the
+    full driver path through AsyncDeviceExecutor + WallClock."""
+    from repro.launch import serve
+    serve.main(["--frames", "10", "--canvas", "128", "--slo", "5.0",
+                "--async-device", "--max-inflight", "2",
+                "--clock", "wall", "--wall-speed", "50"])
+
+
 def test_train_driver_reduced_detector():
     from repro.launch import train
     train.main(["--arch", "tangram-detector", "--steps", "3", "--batch", "2"])
