@@ -18,6 +18,13 @@ Three measurements, written to ``BENCH_engine.json`` at the repo root:
   and unstitch dispatch, detection routing.  Sync blocks the event loop
   on every invocation; async (bounded in-flight) overlaps device service
   with arrival ingestion and restitching.
+* (d) worker scaling: the same bursty trace served by a
+  ``WorkerPoolExecutor`` over 1 / 2 / 4 workers, each worker its own
+  ``StubAccelerator`` (independent serial device queue, the pool analogue
+  of independent mesh slices) behind an async executor with a shared
+  frame store.  Reports arrivals/sec and p99 added latency per pool
+  size; the 4-vs-1 speedup is the acceptance number for multi-worker
+  in-flight scheduling.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full
@@ -43,6 +50,9 @@ CANVAS = 256
 SERVICE_S = 0.008        # stub device service time per invocation
 OVERLAP_CANVAS = 128     # smaller canvas: host work ~ device service, so
                          # the overlap headroom is actually measurable
+WORKER_SERVICE_S = 0.03  # worker-scaling stub service time: device-bound
+                         # regime, so adding workers is what pays
+WORKER_COUNTS = (1, 2, 4)
 
 
 def _queue_patches(depth: int, seed: int = 0):
@@ -171,6 +181,74 @@ def bench_device_overlap(smoke: bool) -> dict:
                                          - sync["p99_latency_s"], 4)}
 
 
+def bench_worker_scaling(smoke: bool) -> dict:
+    """Worker-pool throughput on the bursty trace: 1 / 2 / 4 workers,
+    each its own stub device queue, routed least-outstanding."""
+    from repro.core.devicestub import StubAccelerator
+    from repro.core.engine import (AsyncDeviceExecutor, ServingEngine,
+                                   uniform_pool)
+    from repro.core.workers import device_worker_pool
+    from repro.data.video import Arrival
+
+    n_bursts = 8 if smoke else 40
+    per_burst = 8
+    canvas = OVERLAP_CANVAS
+    frames, patches = _burst_trace(canvas, n_bursts, per_burst)
+    arrivals = [Arrival(p.t_gen, p, 0.0) for p in patches]
+    table = LatencyTable({1: (1e-3, 0.0)})
+    counts = {}
+    for p in patches:
+        counts[p.frame_id] = counts.get(p.frame_id, 0) + 1
+
+    def run(n_workers):
+        stubs = [StubAccelerator(WORKER_SERVICE_S) for _ in range(n_workers)]
+        try:
+            pool_exec = device_worker_pool(
+                n_workers,
+                lambda i: AsyncDeviceExecutor(
+                    stubs[i].serve_fn, None, canvas, canvas,
+                    max_inflight=4, sync=stubs[i].sync))
+            for fid, px in frames.items():
+                pool_exec.add_frame(fid, px, counts.get(fid, 0))
+            eng = ServingEngine(
+                uniform_pool(canvas, canvas, table, max_canvases=64),
+                pool_exec)
+            t0 = time.perf_counter()
+            eng.run(arrivals)
+            dt = time.perf_counter() - t0
+        finally:
+            for s in stubs:
+                s.close()
+        lats = sorted(o.latency for o in eng.outcomes)
+        assert len(eng.outcomes) == len(arrivals)
+        return {"workers": n_workers,
+                "arrivals_per_s": round(len(arrivals) / dt, 1),
+                "seconds": round(dt, 4),
+                "invocations": len(eng.invocations),
+                "p99_latency_s": round(lats[int(0.99 * (len(lats) - 1))], 4),
+                "per_worker": pool_exec.worker_stats()}
+
+    run(1)                           # warm the jit caches for these shapes
+    # best-of-2 per pool size: wall-clock timings on shared CI hosts
+    # jitter, and the fastest rep is the least-perturbed measurement
+    by_workers = {}
+    for n in WORKER_COUNTS:
+        best = min((run(n) for _ in range(2)), key=lambda r: r["seconds"])
+        by_workers[str(n)] = best
+    invs = {r["invocations"] for r in by_workers.values()}
+    assert len(invs) == 1, \
+        "pool size leaked into invocation boundaries: %r" % invs
+    w1, w4 = by_workers["1"], by_workers[str(WORKER_COUNTS[-1])]
+    return {"trace": {"canvas": canvas, "bursts": n_bursts,
+                      "per_burst": per_burst,
+                      "stub_service_s": WORKER_SERVICE_S},
+            "by_workers": by_workers,
+            "speedup_4v1": round(w4["arrivals_per_s"]
+                                 / w1["arrivals_per_s"], 2),
+            "p99_added_latency_s": round(w4["p99_latency_s"]
+                                         - w1["p99_latency_s"], 4)}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -203,6 +281,15 @@ def main(argv=None):
           f"speedup {ov['speedup']}x "
           f"(p99 added {ov['p99_added_latency_s']}s, "
           f"in-flight high water {ov['async']['inflight_high_water']})")
+
+    report["worker_scaling"] = bench_worker_scaling(args.smoke)
+    ws = report["worker_scaling"]
+    scaling = " ".join(
+        f"{n}w {ws['by_workers'][str(n)]['arrivals_per_s']}/s"
+        for n in WORKER_COUNTS)
+    print(f"worker scaling: {scaling} -> "
+          f"{ws['speedup_4v1']}x at {WORKER_COUNTS[-1]} workers "
+          f"(p99 added {ws['p99_added_latency_s']}s)")
 
     out = pathlib.Path(args.out) if args.out else (
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json")

@@ -28,6 +28,14 @@ Per-class canvas geometry flows through the same factory the static pool
 uses: :class:`ClassSpec` + :func:`pool_from_specs` give each SLO class
 its own canvas size, latency table, and starting budget, with or without
 the AIMD controller on top.
+
+With an :class:`~repro.core.latency.OnlineLatencyTable` as a class's
+latency source the two feedback loops compose instead of fighting:
+sustained service-time drift folds into the table (so ``t_remain`` for
+*future* batches moves with real device speed), while the margin absorbs
+only the residual the estimator cannot see — the violation excess is
+measured against the *current* estimate, not the snapshot taken when the
+invocation fired.
 """
 from __future__ import annotations
 
@@ -99,8 +107,16 @@ class AdaptiveInvokerPool(InvokerPool):
         st.completions += 1
         deadline = min(p.deadline for p in inv.patches)
         # what the platform added beyond the conservative inference
-        # estimate the invocation was scheduled with
-        excess = max(0.0, (t_finish - inv.t_submit) - inv.t_slack)
+        # estimate — measured against the *current* estimate, not the
+        # snapshot the invocation was scheduled with: with an
+        # OnlineLatencyTable as the class's latency source, service-time
+        # drift migrates into the table and the margin keeps absorbing
+        # only what the estimator still cannot see (queueing, cold
+        # starts), instead of double-counting the same delay
+        est = max(inv.t_slack,
+                  invoker.latency.t_slack(len(inv.canvases)
+                                          or len(inv.patches)))
+        excess = max(0.0, (t_finish - inv.t_submit) - est)
         if t_finish > deadline:
             st.violations += 1
             st.streak = 0

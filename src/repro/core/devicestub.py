@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import time
-from typing import Tuple
+from typing import Callable, Tuple, Union
 
 import numpy as np
 
@@ -93,3 +93,49 @@ class StubAccelerator:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+
+class VirtualAccelerator:
+    """Engine-time device stand-in: a submit/complete executor whose
+    finish times live on the *engine* clock, not the wall clock.
+
+    ``service`` is seconds per invocation — a float, or a callable
+    ``service(batch_size) -> seconds`` for batch-dependent devices.  The
+    executor models one serial device queue: an invocation starts when
+    both it has been submitted and the queue is free, and finishes
+    ``service`` later, so ``t_finish = max(t_submit, queue_free) +
+    service``.  No threads, no sleeps — drifted-device and placement
+    tests stay exactly reproducible under the virtual clock (a real
+    ``StubAccelerator`` would race engine virtual time against wall
+    sleeps).
+
+    Handles carry their finish time at submit, so the engine schedules
+    delivery on the event heap — the device analogue of ``SimExecutor``'s
+    "the model tells us now, the event fires later".
+    """
+
+    def __init__(self, service: Union[float, Callable[[int], float]]):
+        self.service = service
+        self.queue_free = 0.0
+        self.n_calls = 0
+        self.per_batch: list = []      # (t_submit, batch, t_finish) log
+
+    def _service_s(self, batch: int) -> float:
+        if callable(self.service):
+            return float(self.service(batch))
+        return float(self.service)
+
+    def submit(self, inv) -> "ExecHandle":
+        from repro.core.engine import Completion, ExecHandle
+
+        batch = len(inv.canvases) or len(inv.patches)
+        start = max(inv.t_submit, self.queue_free)
+        t_finish = start + self._service_s(batch)
+        self.queue_free = t_finish
+        self.n_calls += 1
+        self.per_batch.append((inv.t_submit, batch, t_finish))
+        return ExecHandle(inv, t_finish=t_finish,
+                          completion=Completion(inv, t_finish))
+
+    def resolve(self, handle) -> "Completion":
+        return handle.completion

@@ -34,7 +34,9 @@ timer instant, the first-registered class fires first (dict insertion
 order, i.e. order of first arrival).  Async device completions carry no
 scheduled time; they are delivered as soon as the device reports them
 ready (harvested at every event-loop step), with finish times clamped
-monotone.
+monotone per worker (each worker's serial queue finishes in submit
+order; cross-worker streams interleave) and simultaneous readiness
+tie-broken by ``(worker index, submit seq)``.
 
 Scheduling policy and execution substrate are independent axes:
 
@@ -131,6 +133,8 @@ class Results:
     exec_seconds: float
     transmission_seconds: float
     mean_consolidation: float = 0.0   # patches per invocation (platform view)
+    worker_stats: Optional[List[dict]] = None  # per-worker pool counters
+                                      # (WorkerPoolExecutor.worker_stats())
 
     @property
     def n_patches(self) -> int:
@@ -163,8 +167,25 @@ class Results:
             return 0.0
         return self.exec_seconds / len(self.outcomes)
 
-    def summary(self) -> dict:
+    def class_breakdown(self) -> dict:
+        """Per-SLO-class outcome breakdown (keyed by the patch's SLO)."""
+        by: Dict[object, List[PatchOutcome]] = {}
+        for o in self.outcomes:
+            by.setdefault(o.patch.slo, []).append(o)
         return {
+            str(slo): {
+                "patches": len(outs),
+                "violations": sum(o.violated for o in outs),
+                "violation_rate": round(
+                    sum(o.violated for o in outs) / len(outs), 4),
+                "mean_latency_s": round(
+                    sum(o.latency for o in outs) / len(outs), 4),
+            }
+            for slo, outs in sorted(by.items(), key=lambda kv: str(kv[0]))
+        }
+
+    def summary(self) -> dict:
+        out = {
             "name": self.name,
             "patches": self.n_patches,
             "violation_rate": round(self.violation_rate, 4),
@@ -177,7 +198,19 @@ class Results:
                 / max(len(self.canvas_efficiencies), 1), 4),
             "amortized_latency_s": round(self.amortized_latency, 4),
             "mean_consolidation": round(self.mean_consolidation, 2),
+            "class_violations": self.class_breakdown(),
         }
+        if self.worker_stats is not None:
+            # horizon = span of delivered work; utilization is each
+            # worker's busy time over it, so placement-policy skew shows
+            # up directly in the benchmark JSON
+            horizon = max((o.t_finish for o in self.outcomes), default=0.0)
+            out["per_worker"] = [
+                dict(ws, utilization=round(ws.get("busy_s", 0.0)
+                                           / max(horizon, 1e-12), 4))
+                for ws in self.worker_stats
+            ]
+        return out
 
 
 @dataclasses.dataclass
@@ -187,6 +220,7 @@ class Completion:
     t_finish: float
     record: object = None     # platform ExecutionRecord (SimExecutor)
     outputs: object = None    # routed device outputs (DeviceExecutor)
+    worker: int = 0           # pool worker that ran it (0 outside a pool)
 
 
 @dataclasses.dataclass
@@ -199,11 +233,20 @@ class ExecHandle:
     genuinely in flight (async device futures) and the engine resolves
     the handle when it reports ready, the in-flight bound is hit, or the
     trace drains.
+
+    ``worker`` is the pool worker index the invocation was placed on
+    (:class:`~repro.core.workers.WorkerPoolExecutor`; 0 for single-device
+    executors) and ``seq`` the engine's submit sequence number — together
+    they are the pinned completion tie-break ``(worker, seq)`` that makes
+    multi-worker delivery order reproducible when several handles report
+    ready at the same harvest.
     """
     invocation: Invocation
     t_finish: Optional[float] = None
     completion: Optional[Completion] = None
     payload: object = None            # executor-private in-flight state
+    worker: int = 0
+    seq: int = -1
 
 
 # ----------------------------------------------------------- invoker pool ----
@@ -495,11 +538,12 @@ class AsyncDeviceExecutor(DeviceExecutor):
 
     ``max_inflight`` bounds the number of unresolved handles the engine
     may hold (device memory for canvases + outputs is pinned per handle);
-    the engine blocks on the *oldest* handle when the bound is hit.
-    Handles resolve in FIFO submit order — a single device queue executes
-    in order, so the oldest dispatch is always the first to finish — and
-    the finish times the engine records are clamped monotone across
-    completions.
+    when the bound is hit the engine retires an already-ready handle if
+    there is one and otherwise blocks on the oldest.  A single device
+    queue executes in order, so this executor's dispatches finish
+    oldest-first and the engine's per-worker monotone clamp only smooths
+    timer jitter; across a worker pool completions harvest out of order
+    between workers.
     """
 
     def __init__(self, *args, max_inflight: int = 4, **kwargs):
@@ -579,7 +623,7 @@ class ServingEngine:
         self._scheduled: List = []   # heap of (t_finish, seq, ExecHandle)
         self._inflight: collections.deque = collections.deque()
         self._event_seq = 0
-        self._last_async_finish = 0.0
+        self._last_async_finish: Dict[int, float] = {}   # per worker
         self.inflight_high_water = 0
 
     @property
@@ -640,7 +684,7 @@ class ServingEngine:
                 break
             self._dispatch(fired)
         while self._inflight:
-            self._resolve_oldest()
+            self._resolve_one()
         while self._scheduled:
             self.clock.advance_to(self._scheduled[0][0])
             self._deliver_scheduled()
@@ -662,13 +706,15 @@ class ServingEngine:
         self.invocations.append(inv)
         bound = getattr(self.executor, "max_inflight", None)
         if bound is not None:
-            # block on the oldest in-flight handle until there is room:
-            # the submit below may pin device memory for its canvases
+            # make room before submitting (the submit below may pin
+            # device memory for its canvases): take any already-finished
+            # handle first, and only block on the oldest when none is
             while len(self._inflight) >= bound:
-                self._resolve_oldest()
+                self._resolve_one()
         handle = self._submit(inv)
+        self._event_seq += 1
+        handle.seq = self._event_seq
         if handle.t_finish is not None:
-            self._event_seq += 1
             heapq.heappush(self._scheduled,
                            (handle.t_finish, self._event_seq, handle))
         else:
@@ -683,26 +729,57 @@ class ServingEngine:
         comp = self.executor.execute(inv)          # legacy executor
         return ExecHandle(inv, t_finish=comp.t_finish, completion=comp)
 
+    @staticmethod
+    def _delivery_order(handle: ExecHandle):
+        """Pinned completion tie-break: worker index, then submit seq —
+        so multi-worker replays deliver simultaneously-ready handles in a
+        reproducible order (regression-tested)."""
+        return (handle.worker, handle.seq)
+
     def _harvest_ready(self):
         """Deliver async completions the device has already finished.
 
-        Non-blocking: only the FIFO head is probed (a single in-order
-        device queue finishes oldest-first, so nothing behind an unready
-        head can be ready in a way the engine could exploit)."""
+        Non-blocking: *every* in-flight handle is probed, not just the
+        FIFO head — with a worker pool (or any out-of-order substrate) a
+        slow batch at the head must not pin completed later batches in
+        flight (head-of-line harvest bug, regression-tested).  Handles
+        ready at the same harvest deliver in ``(worker, seq)`` order."""
         ready = getattr(self.executor, "ready", None)
         if ready is None:
             return
-        while self._inflight and ready(self._inflight[0]):
-            self._resolve_oldest()
+        while True:
+            done = [h for h in self._inflight if ready(h)]
+            if not done:
+                return
+            for handle in sorted(done, key=self._delivery_order):
+                self._inflight.remove(handle)
+                self._resolve_inflight(handle)
 
-    def _resolve_oldest(self):
-        handle = self._inflight.popleft()
+    def _resolve_one(self):
+        """Retire one in-flight handle: any already-ready handle first
+        (lowest ``(worker, seq)``), else block on the FIFO head."""
+        ready = getattr(self.executor, "ready", None)
+        if ready is not None:
+            done = [h for h in self._inflight if ready(h)]
+            if done:
+                handle = min(done, key=self._delivery_order)
+                self._inflight.remove(handle)
+                self._resolve_inflight(handle)
+                return
+        self._resolve_inflight(self._inflight.popleft())
+
+    def _resolve_inflight(self, handle: ExecHandle):
         comp = self.executor.resolve(handle)
         # async finishes are measured on the device's own wall timer;
-        # clamp monotone so the delivered completion stream is ordered
-        # even when per-invocation elapsed times jitter
-        self._last_async_finish = max(self._last_async_finish, comp.t_finish)
-        comp.t_finish = self._last_async_finish
+        # clamp monotone *per worker* — a worker is a serial queue, so
+        # its dispatches really do finish in submit order and the clamp
+        # only smooths timer jitter.  Across workers finishes genuinely
+        # interleave: a global clamp would inflate the recorded latency
+        # (and fabricate SLO violations) for a fast worker's completion
+        # delivered after a slow worker's.
+        last = self._last_async_finish.get(handle.worker, 0.0)
+        comp.t_finish = max(last, comp.t_finish)
+        self._last_async_finish[handle.worker] = comp.t_finish
         self._deliver(comp)
 
     def _deliver_scheduled(self):

@@ -10,10 +10,16 @@ the paper).  Two profile sources:
   are hardware-parameterized and reproducible.
 * ``measure`` — times a real callable (the CPU detector in the examples),
   the paper's 1000-iteration offline profiling, scaled down.
+
+``OnlineLatencyTable`` closes the loop at serving time: it starts as the
+profiled table and folds observed per-worker, per-batch completion times
+back into ``mu_sigma`` via EWMA, so the firing decision tracks the device
+the system is actually running on instead of a stale offline profile.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -61,6 +67,140 @@ class LatencyTable:
 
     def t_slack(self, batch: int) -> float:
         """Conservative inference-time estimate for a batch of canvases."""
+        if batch <= 0:
+            return 0.0
+        mu, sigma = self.mu_sigma(batch)
+        return mu + self.slack_sigmas * sigma
+
+
+class OnlineLatencyTable:
+    """A latency estimator that refreshes itself from delivered completions.
+
+    Starts as (and, with zero observations, is *exactly*) the profiled
+    ``seed`` table — including PR 2's clamp below the smallest profiled
+    point — then folds every observed ``(batch, elapsed)`` completion back
+    in:
+
+    * **per-batch EWMA** — batch sizes that have been observed directly
+      serve an EWMA mean and an EWMA-variance-derived sigma (floored at
+      the drift-scaled seed sigma, so the estimate never becomes
+      overconfident just because recent observations happened to agree);
+    * **global drift ratio** — batch sizes *not* yet observed serve the
+      seed estimate scaled by the EWMA of observed/seed ratios, clamped to
+      ``ratio_bounds`` so one wild measurement cannot blow up (or zero
+      out) the whole table.
+
+    Per-worker drift ratios are tracked alongside (``drift(worker=i)``)
+    so a heterogeneous pool is visible to diagnostics and placement,
+    while the served estimate aggregates all workers — the invoker cannot
+    know which worker its next batch will land on.
+
+    Non-finite or non-positive observations are rejected (counted in
+    ``n_rejected``), which keeps every served ``(mu, sigma)`` finite with
+    ``mu > 0`` and ``sigma >= 0`` under adversarial observation streams —
+    property-pinned in the tests.
+
+    The class duck-types :class:`LatencyTable` (``mu_sigma`` /
+    ``t_slack`` / ``slack_sigmas``): hand the *same instance* to the
+    invokers and to the executor that calls :meth:`observe`, and firing
+    decisions track real device speed with no further wiring.
+    """
+
+    _TINY = 1e-12
+
+    def __init__(self, seed: LatencyTable, alpha: float = 0.25,
+                 ratio_bounds: Tuple[float, float] = (0.05, 50.0)):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        lo, hi = ratio_bounds
+        if not 0.0 < lo <= hi:
+            raise ValueError(f"bad ratio_bounds {ratio_bounds}")
+        self.seed = seed
+        self.alpha = alpha
+        self.ratio_bounds = ratio_bounds
+        self._mu: Dict[int, float] = {}
+        self._var: Dict[int, float] = {}
+        self._count: Dict[int, int] = {}
+        self._ratio: Optional[float] = None
+        self._worker_ratio: Dict[object, float] = {}
+        self.n_observations = 0
+        self.n_rejected = 0
+
+    @property
+    def slack_sigmas(self) -> float:
+        return self.seed.slack_sigmas
+
+    def _clamped(self, ratio: Optional[float]) -> float:
+        if ratio is None:
+            return 1.0
+        lo, hi = self.ratio_bounds
+        return min(max(ratio, lo), hi)
+
+    def drift(self, worker: Optional[object] = None) -> float:
+        """Clamped EWMA of observed/seed latency (1.0 = profile holds).
+
+        ``worker=None`` aggregates every worker; a worker with no
+        observations reports the aggregate drift."""
+        if worker is not None and worker in self._worker_ratio:
+            return self._clamped(self._worker_ratio[worker])
+        return self._clamped(self._ratio)
+
+    def observe(self, batch: int, elapsed: float,
+                worker: Optional[object] = None) -> bool:
+        """Fold one delivered completion in.  Returns False (and changes
+        nothing) for observations that are non-finite, non-positive, or
+        for empty batches.  Valid observations are clamped into
+        ``ratio_bounds`` times the seed estimate before the EWMA update,
+        so a single wild measurement moves the table by at most the
+        configured drift range and every internal statistic stays finite
+        (no overflow through the EWMA recurrences)."""
+        try:
+            elapsed = float(elapsed)
+        except (TypeError, ValueError):
+            self.n_rejected += 1
+            return False
+        if batch < 1 or not math.isfinite(elapsed) or elapsed <= 0.0:
+            self.n_rejected += 1
+            return False
+        self.n_observations += 1
+        a = self.alpha
+        lo, hi = self.ratio_bounds
+        seed_mu = max(self.seed.mu_sigma(batch)[0], self._TINY)
+        elapsed = min(max(elapsed, lo * seed_mu), hi * seed_mu)
+        if batch not in self._mu:
+            self._mu[batch] = elapsed
+            self._var[batch] = 0.0
+            self._count[batch] = 1
+        else:
+            delta = elapsed - self._mu[batch]
+            self._mu[batch] += a * delta
+            # EWMA variance (West): decay old spread, add the new
+            # deviation's contribution
+            self._var[batch] = (1.0 - a) * (self._var[batch]
+                                            + a * delta * delta)
+            self._count[batch] += 1
+        r = elapsed / seed_mu                 # in [lo, hi] by construction
+        self._ratio = r if self._ratio is None else (
+            self._ratio + a * (r - self._ratio))
+        if worker is not None:
+            prev = self._worker_ratio.get(worker)
+            self._worker_ratio[worker] = r if prev is None else (
+                prev + a * (r - prev))
+        return True
+
+    def mu_sigma(self, batch: int) -> Tuple[float, float]:
+        if self.n_observations == 0:
+            return self.seed.mu_sigma(batch)      # exactly the seed
+        r = self._clamped(self._ratio)
+        seed_mu, seed_sigma = self.seed.mu_sigma(batch)
+        if batch in self._mu:
+            mu = max(self._mu[batch], self._TINY)
+            sigma = max(math.sqrt(max(self._var[batch], 0.0)),
+                        seed_sigma * r, 0.0)
+            return mu, sigma
+        return max(seed_mu * r, self._TINY), max(seed_sigma * r, 0.0)
+
+    def t_slack(self, batch: int) -> float:
         if batch <= 0:
             return 0.0
         mu, sigma = self.mu_sigma(batch)

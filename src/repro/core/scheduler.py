@@ -11,19 +11,30 @@ Pass ``adaptive=AIMDConfig(...)`` to put the completion-driven AIMD
 controller (:mod:`repro.core.adaptive`) on the pool: per-class canvas
 budgets and firing margins then track delivered completions instead of
 staying at the static configuration.
+
+Pass ``n_workers > 1`` to serve through a
+:class:`~repro.core.workers.WorkerPoolExecutor` over per-worker platform
+capacity shards (:func:`~repro.serverless.platform.split_platform`) —
+the simulation twin of routing invocations across device mesh slices;
+``placement`` picks the routing policy.  ``online_latency=True`` wraps
+the profiled table in an :class:`~repro.core.latency.OnlineLatencyTable`
+shared between the invokers and the executor, so firing decisions track
+observed completion times instead of the static profile.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 from repro.core.adaptive import AIMDConfig, adaptive_uniform_pool
 from repro.core.clock import Clock
 from repro.core.engine import (PatchOutcome, Results, ServingEngine,
                                SimExecutor, uniform_pool)
-from repro.core.latency import LatencyTable
+from repro.core.latency import LatencyTable, OnlineLatencyTable
 from repro.core.partitioning import Patch
+from repro.core.workers import WorkerPoolExecutor, make_placement
 from repro.data.video import merge_arrivals, shape_arrivals
-from repro.serverless.platform import Platform
+from repro.serverless.platform import (Platform, mean_consolidation,
+                                       split_platform)
 
 __all__ = ["PatchOutcome", "Results", "TangramScheduler"]
 
@@ -43,7 +54,15 @@ class TangramScheduler:
                  classify: Optional[Callable[[Patch], object]] = None,
                  incremental: bool = True,
                  adaptive: Optional[AIMDConfig] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 n_workers: int = 1,
+                 placement: Union[str, object, None] = None,
+                 online_latency: bool = False):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        self.estimator: Optional[OnlineLatencyTable] = None
+        if online_latency:
+            latency = self.estimator = OnlineLatencyTable(latency)
         if adaptive is not None:
             self.pool = adaptive_uniform_pool(
                 canvas_m, canvas_n, latency, max_canvases,
@@ -53,20 +72,37 @@ class TangramScheduler:
                                      max_canvases, incremental=incremental,
                                      classify=classify)
         self.platform = platform
+        self.n_workers = n_workers
+        self.placement = (make_placement(placement)
+                          if isinstance(placement, str) else placement)
         self.clock = clock
         self.check_invariants = check_invariants
+
+    def _executor(self):
+        """One SimExecutor, or a worker pool over platform capacity
+        shards (shared cost meter: billing aggregates unchanged)."""
+        if self.n_workers == 1 and self.estimator is None:
+            return SimExecutor(self.platform), [self.platform]
+        platforms = (split_platform(self.platform, self.n_workers)
+                     if self.n_workers > 1 else [self.platform])
+        pool = WorkerPoolExecutor([SimExecutor(p) for p in platforms],
+                                  placement=self.placement,
+                                  estimator=self.estimator)
+        return pool, platforms
 
     def run(self, streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
             name: str = "tangram") -> Results:
         per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
         arrivals = merge_arrivals(per_cam)
-        engine = ServingEngine(self.pool, SimExecutor(self.platform),
+        executor, platforms = self._executor()
+        engine = ServingEngine(self.pool, executor,
                                clock=self.clock,
                                check_invariants=self.check_invariants)
         outcomes = engine.run(arrivals)
 
         bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
         trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
+        records = [r for p in platforms for r in p.records]
         return Results(
             name=name, outcomes=outcomes,
             canvas_efficiencies=[c.efficiency for inv in engine.invocations
@@ -76,7 +112,10 @@ class TangramScheduler:
                                for inv in engine.invocations],
             bytes_sent=bytes_sent,
             total_cost=self.platform.total_cost,
-            invocations=len(self.platform.records),
+            invocations=len(records),
             exec_seconds=self.platform.meter.busy_seconds,
             transmission_seconds=trans,
-            mean_consolidation=self.platform.mean_consolidation)
+            mean_consolidation=mean_consolidation(records),
+            worker_stats=(executor.worker_stats()
+                          if isinstance(executor, WorkerPoolExecutor)
+                          else None))

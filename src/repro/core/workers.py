@@ -1,0 +1,321 @@
+"""Multi-worker device pool: route concurrent invocations across workers.
+
+The PR 4 async core overlaps device execution with arrival ingestion, but
+every invocation still funnels through *one* executor with one in-flight
+queue — the simulation models N concurrent instances while the real
+pipeline can exploit only one.  This module splits the executor layer
+into independent **workers** (each its own mesh slice / device queue /
+platform shard) behind one submit/complete facade:
+
+* :class:`WorkerPoolExecutor` implements the engine's executor protocol
+  (``submit``/``resolve``/``ready``/``max_inflight``/``on_complete``)
+  and dispatches each fired :class:`~repro.core.invoker.Invocation` to a
+  worker chosen by a pluggable **placement policy**.  Workers are plain
+  executors — ``AsyncDeviceExecutor`` over per-worker mesh slices
+  (:func:`repro.launch.mesh.make_worker_meshes`), ``SimExecutor`` over
+  per-worker platform shards (:func:`repro.serverless.platform.
+  split_platform`), or stubs — so Sim and Device scenarios share the
+  same pool semantics.
+* Placement policies: :class:`LeastOutstandingPlacement` (default — the
+  worker with the fewest unresolved invocations wins, index breaks
+  ties), :class:`RoundRobinPlacement`, and
+  :class:`ClassAffinityPlacement` (tight-SLO classes get reserved
+  workers; everything else spreads over the rest).
+* The engine harvests completions **out of order** across all workers'
+  in-flight work (a slow batch on worker 0 no longer pins completed
+  batches on worker 1), with delivery ties pinned to ``(worker index,
+  submit seq)`` so multi-worker replays are reproducible.
+* Pass an :class:`~repro.core.latency.OnlineLatencyTable` as
+  ``estimator`` and every resolved completion feeds its observed
+  per-worker, per-batch elapsed time back into the table the invokers
+  fire against — the closed loop between real device speed and batching
+  decisions.
+
+Device workers sharing pixels: :func:`share_frame_store` aliases the
+refcounted frame store across a pool's device executors, so any worker
+can gather crops for any frame and eviction still happens exactly when
+the last patch cut from a frame has been routed (regardless of which
+workers routed them).
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, List, Mapping, Optional, Sequence
+
+from repro.core.engine import Completion, ExecHandle
+from repro.core.invoker import Invocation
+
+
+# ------------------------------------------------------- placement ----
+
+class LeastOutstandingPlacement:
+    """Pick the worker with the fewest unresolved invocations (lowest
+    index wins ties) — the classic join-the-shortest-queue heuristic."""
+
+    def choose(self, inv: Invocation, pool: "WorkerPoolExecutor") -> int:
+        return min(range(pool.n_workers),
+                   key=lambda i: (pool.outstanding[i], i))
+
+
+class RoundRobinPlacement:
+    """Cycle through workers regardless of load (baseline policy)."""
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, inv: Invocation, pool: "WorkerPoolExecutor") -> int:
+        idx = self._next % pool.n_workers
+        self._next += 1
+        return idx
+
+
+class ClassAffinityPlacement:
+    """Reserve workers for specific SLO classes.
+
+    ``reserved`` maps an invocation's class key (``inv.key``, tagged by
+    the :class:`~repro.core.engine.InvokerPool`) to the worker indices
+    its batches may run on; keys not in the map spread over the
+    *unreserved* workers (or over every worker when nothing is left).
+    Within the allowed set the least-outstanding worker wins, so the
+    policy degrades to :class:`LeastOutstandingPlacement` inside each
+    partition.
+
+    ``reserve_tightest`` is the zero-config variant: the first
+    ``reserve_tightest`` workers are reserved for the numerically
+    smallest class key observed so far (tightest SLO under the default
+    ``slo_class`` classification) — useful when class keys are not known
+    up front.  The reservation only activates once a *second* class has
+    been seen: with a single class there is no competition to protect
+    against, and pinning all traffic to the reserved workers would
+    silently waste the rest of the pool.
+    """
+
+    def __init__(self, reserved: Optional[Mapping[object,
+                                                  Sequence[int]]] = None,
+                 reserve_tightest: int = 0):
+        self.reserved = {k: tuple(v) for k, v in (reserved or {}).items()}
+        self.reserve_tightest = reserve_tightest
+        self._tightest: object = None
+        self._seen: set = set()
+
+    def _allowed(self, key: object, n_workers: int) -> Sequence[int]:
+        if self.reserve_tightest > 0:
+            k = min(self.reserve_tightest, n_workers)
+            self._seen.add(key)
+            try:
+                if self._tightest is None or key < self._tightest:
+                    self._tightest = key
+            except TypeError:          # uncomparable keys: first one wins
+                if self._tightest is None:
+                    self._tightest = key
+            if len(self._seen) < 2:
+                return range(n_workers)
+            if key == self._tightest:
+                return range(k)
+            rest = range(k, n_workers)
+            return rest if len(rest) else range(n_workers)
+        if key in self.reserved:
+            allowed = [i for i in self.reserved[key] if i < n_workers]
+            if allowed:
+                return allowed
+        taken = {i for v in self.reserved.values() for i in v}
+        free = [i for i in range(n_workers) if i not in taken]
+        return free if free else range(n_workers)
+
+    def choose(self, inv: Invocation, pool: "WorkerPoolExecutor") -> int:
+        allowed = self._allowed(inv.key, pool.n_workers)
+        return min(allowed, key=lambda i: (pool.outstanding[i], i))
+
+
+_PLACEMENTS = {
+    "least": LeastOutstandingPlacement,
+    "round": RoundRobinPlacement,
+    "affinity": lambda: ClassAffinityPlacement(reserve_tightest=1),
+}
+
+
+def make_placement(name: str):
+    """CLI-name -> policy instance (``least`` | ``round`` | ``affinity``)."""
+    try:
+        return _PLACEMENTS[name]()
+    except KeyError:
+        raise ValueError(f"unknown placement {name!r}; "
+                         f"choose from {sorted(_PLACEMENTS)}") from None
+
+
+# ------------------------------------------------------------ pool ----
+
+class WorkerPoolExecutor:
+    """N independent workers behind one engine-facing executor.
+
+    ``workers`` are executors implementing the submit/complete protocol
+    (legacy ``execute``-only executors are not supported here — wrap them
+    first).  ``placement`` chooses a worker per invocation; ``estimator``
+    (an :class:`~repro.core.latency.OnlineLatencyTable`) receives every
+    resolved completion's ``(batch, elapsed, worker)`` observation.
+
+    ``max_inflight`` is the sum of the workers' bounds (the engine blocks
+    only when the whole pool is saturated).  A worker's *own* bound is a
+    hard constraint — it exists because each unresolved handle pins
+    device memory on that worker — so :meth:`submit` treats placement as
+    a preference that yields to it: an invocation placed on a worker
+    already at its bound is re-routed to the least-outstanding worker
+    with room (there always is one while the engine admits submits).
+    Workers without a bound (sim workers resolve from the model at
+    submit) are never full — a pool of only such workers exposes no
+    bound at all.
+    """
+
+    def __init__(self, workers: Sequence[object], placement=None,
+                 estimator=None):
+        if not workers:
+            raise ValueError("WorkerPoolExecutor needs at least one worker")
+        self.workers = list(workers)
+        self.placement = placement or LeastOutstandingPlacement()
+        self.estimator = estimator
+        n = len(self.workers)
+        self.outstanding = [0] * n       # unresolved invocations per worker
+        self.n_submitted = [0] * n
+        self.n_patches = [0] * n
+        self.busy_s = [0.0] * n          # union of per-worker busy intervals
+        self._last_finish = [0.0] * n
+        bounds = [getattr(w, "max_inflight", None) for w in self.workers]
+        known = [b for b in bounds if b is not None]
+        if known:
+            self.max_inflight = sum(known)
+
+    @property
+    def n_workers(self) -> int:
+        return len(self.workers)
+
+    def _has_room(self, idx: int) -> bool:
+        bound = getattr(self.workers[idx], "max_inflight", None)
+        return bound is None or self.outstanding[idx] < bound
+
+    # ------------------------------------------------ engine protocol ----
+
+    def submit(self, inv: Invocation) -> ExecHandle:
+        idx = self.placement.choose(inv, self)
+        if not 0 <= idx < self.n_workers:
+            raise ValueError(f"placement chose worker {idx} "
+                             f"of {self.n_workers}")
+        if not self._has_room(idx):
+            # the per-worker in-flight bound is a device-memory bound and
+            # therefore hard; overflow to the least-loaded worker with
+            # room rather than exceed it (skewed policies like class
+            # affinity can otherwise pile everything on one worker)
+            room = [i for i in range(self.n_workers) if self._has_room(i)]
+            if room:
+                idx = min(room, key=lambda i: (self.outstanding[i], i))
+        handle = self.workers[idx].submit(inv)
+        handle.worker = idx
+        self.outstanding[idx] += 1
+        self.n_submitted[idx] += 1
+        self.n_patches[idx] += len(inv.patches)
+        return handle
+
+    def ready(self, handle: ExecHandle) -> bool:
+        probe = getattr(self.workers[handle.worker], "ready", None)
+        if probe is None:
+            return handle.completion is not None
+        return probe(handle)
+
+    def resolve(self, handle: ExecHandle) -> Completion:
+        comp = self.workers[handle.worker].resolve(handle)
+        w = handle.worker
+        comp.worker = w
+        self.outstanding[w] -= 1
+        elapsed = comp.t_finish - comp.invocation.t_submit
+        if math.isfinite(elapsed) and elapsed > 0:
+            # busy time is the union of the worker's service intervals: a
+            # queued invocation's interval starts where the previous one
+            # finished, so overlapped in-flight work is not double-counted
+            # (utilization = busy_s / horizon must stay <= 1)
+            start = max(comp.invocation.t_submit, self._last_finish[w])
+            self.busy_s[w] += max(0.0, comp.t_finish - start)
+            self._last_finish[w] = max(self._last_finish[w], comp.t_finish)
+        if self.estimator is not None:
+            # the estimator deliberately sees submit->finish elapsed
+            # (including queueing on the worker): that is the quantity
+            # t_slack must cover for the firing decision to be safe
+            batch = (len(comp.invocation.canvases)
+                     or len(comp.invocation.patches))
+            self.estimator.observe(batch, elapsed, worker=w)
+        return comp
+
+    def on_complete(self, comp: Completion):
+        on_complete = getattr(self.workers[comp.worker], "on_complete", None)
+        if on_complete is not None:
+            on_complete(comp)
+
+    # ---------------------------------------------- frame store facade ----
+
+    def add_frame(self, frame_id, pixels, n_patches: int):
+        """Register a frame once; device workers share one store (see
+        :func:`share_frame_store`), so worker 0's store is the store."""
+        self.workers[0].add_frame(frame_id, pixels, n_patches)
+
+    @property
+    def frames(self):
+        return self.workers[0].frames
+
+    # --------------------------------------------------- aggregation ----
+
+    def _sum(self, attr: str) -> int:
+        return sum(getattr(w, attr, 0) for w in self.workers)
+
+    @property
+    def n_invocations(self) -> int:
+        return self._sum("n_invocations")
+
+    @property
+    def n_detections(self) -> int:
+        return self._sum("n_detections")
+
+    @property
+    def n_sharded(self) -> int:
+        return self._sum("n_sharded")
+
+    @property
+    def evidence_bytes(self) -> int:
+        return self._sum("evidence_bytes")
+
+    def worker_stats(self) -> List[dict]:
+        """Per-worker counters for ``Results.worker_stats`` / benchmarks."""
+        stats = []
+        for i in range(self.n_workers):
+            ws = {"worker": i,
+                  "invocations": self.n_submitted[i],
+                  "patches": self.n_patches[i],
+                  "busy_s": round(self.busy_s[i], 4)}
+            if self.estimator is not None:
+                ws["drift"] = round(self.estimator.drift(worker=i), 3)
+            stats.append(ws)
+        return stats
+
+
+def share_frame_store(executors: Sequence[object]) -> None:
+    """Alias one refcounted frame store across device executors.
+
+    Patches cut from one frame may be routed by different workers; with
+    per-worker stores each worker's refcount would never drain (worker A
+    cannot see the decrements worker B's completions perform).  Sharing
+    the dicts keeps `DeviceExecutor.on_complete`'s eviction exact: the
+    frame disappears when the *pool-wide* last patch is routed."""
+    if not executors:
+        return
+    head = executors[0]
+    for ex in executors[1:]:
+        ex.frames = head.frames
+        ex._refs = head._refs
+
+
+def device_worker_pool(n_workers: int, make_executor: Callable[[int], object],
+                       placement=None, estimator=None) -> WorkerPoolExecutor:
+    """Build a device pool: ``make_executor(i)`` constructs worker ``i``
+    (typically an ``AsyncDeviceExecutor`` over mesh slice ``i``); the
+    frame stores are shared and the pool assembled."""
+    workers = [make_executor(i) for i in range(n_workers)]
+    share_frame_store(workers)
+    return WorkerPoolExecutor(workers, placement=placement,
+                              estimator=estimator)

@@ -46,5 +46,31 @@ def make_serve_mesh(n_devices: int | None = None):
                                devices=devices[:n])
 
 
+def make_worker_meshes(n_workers: int, devices=None):
+    """Split the device set into ``n_workers`` independent serve meshes.
+
+    Each worker mesh is a contiguous (data, model) slice the shape of
+    :func:`make_serve_mesh`, so per-worker executors shard their canvas
+    batches data-parallel *within* their slice while the worker pool
+    routes concurrent invocations *across* slices.  With fewer devices
+    than workers the devices are reused round-robin (worker i pins device
+    ``i % n_devices`` — on a 1-device host every worker degenerates to
+    the unit mesh and the pool still exercises the full routing path).
+    Leftover devices (``n_devices % n_workers``) are left unused so every
+    worker has identical capacity and the latency profile of one worker
+    holds for all.
+    """
+    if n_workers < 1:
+        raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) >= n_workers:
+        per = len(devices) // n_workers
+        slices = [devices[i * per:(i + 1) * per] for i in range(n_workers)]
+    else:
+        slices = [[devices[i % len(devices)]] for i in range(n_workers)]
+    return [shardingx.make_mesh((len(sl), 1), ("data", "model"), devices=sl)
+            for sl in slices]
+
+
 def mesh_chips(mesh) -> int:
     return mesh.devices.size

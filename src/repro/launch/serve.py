@@ -18,6 +18,23 @@ drains.  ``--clock wall`` runs the engine on real time (timers fire at
 wall instants, ``--wall-speed`` compresses the replay); the default
 virtual clock replays the trace as fast as events can be processed.
 
+``--workers N`` serves through a worker pool
+(:class:`~repro.core.workers.WorkerPoolExecutor`): the local device set
+is split into N independent mesh slices
+(:func:`~repro.launch.mesh.make_worker_meshes`), each backing its own
+async executor, and every fired invocation is routed to a worker by
+``--placement`` (least-outstanding default; ``round`` round-robin;
+``affinity`` reserves worker 0 for the tightest SLO class).  Completions
+harvest out of order across workers, so one slow batch no longer pins
+finished work on other slices.  ``--online-latency`` wraps the profiled
+table in an :class:`~repro.core.latency.OnlineLatencyTable` shared by
+the invokers and the pool, folding observed per-worker completion times
+back into the firing decision (EWMA), so batching tracks real device
+speed instead of the offline profile.  The flag composes with any
+executor mode — at ``--workers 1`` the chosen sync/async executor is
+wrapped in a 1-worker pool that only adds the feedback loop, never a
+change of execution semantics.
+
 Multi-device: the detector batch runs under a ``NamedSharding``
 data-parallel layout — the stitched canvas batch is padded to the mesh's
 "data"-axis size and split over it, so each device detects its slice of
@@ -27,8 +44,9 @@ step is identical to the unsharded path.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
   PYTHONPATH=src python -m repro.launch.serve --async-device --max-inflight 4
+  PYTHONPATH=src python -m repro.launch.serve --workers 2 --online-latency
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    PYTHONPATH=src python -m repro.launch.serve --frames 16
+    PYTHONPATH=src python -m repro.launch.serve --frames 16 --workers 4
 """
 from __future__ import annotations
 
@@ -47,10 +65,12 @@ from repro.core.clock import VirtualClock, WallClock
 from repro.core.engine import (AsyncDeviceExecutor, DeviceExecutor,
                                ServingEngine, uniform_pool)
 from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
-from repro.core.latency import measure
+from repro.core.latency import OnlineLatencyTable, measure
+from repro.core.workers import (WorkerPoolExecutor, device_worker_pool,
+                                make_placement)
 from repro.data.synthetic import Scene, preset
 from repro.data.video import shape_arrivals
-from repro.launch.mesh import make_serve_mesh
+from repro.launch.mesh import make_serve_mesh, make_worker_meshes
 from repro.models import detector as detector_lib
 from repro.sharding import ShardingConfig
 
@@ -116,15 +136,38 @@ def main(argv=None):
     p.add_argument("--wall-speed", type=float, default=1.0,
                    help="engine seconds per wall second with --clock wall "
                         "(>1 compresses the replay)")
+    p.add_argument("--workers", type=int, default=1,
+                   help="device worker pool size: the local device set is "
+                        "split into this many independent mesh slices, "
+                        "each an overlapped (async) executor, and "
+                        "concurrent invocations are routed across them")
+    p.add_argument("--placement", choices=("least", "round", "affinity"),
+                   default="least",
+                   help="worker placement policy with --workers > 1: "
+                        "least-outstanding (default), round-robin, or "
+                        "class-affinity (tightest SLO class gets worker 0 "
+                        "once a second class appears)")
+    p.add_argument("--online-latency", action="store_true",
+                   help="fold observed per-worker completion times back "
+                        "into the latency table (EWMA) so firing decisions "
+                        "track real device speed; composes with any "
+                        "executor mode")
     args = p.parse_args(argv)
+    if args.workers < 1:
+        p.error("--workers must be >= 1")
 
     cfg, params, serve_fn, rules = build_detector(args.canvas)
     m = n = args.canvas
-    mesh = make_serve_mesh()
+    if args.workers > 1:
+        meshes = make_worker_meshes(args.workers)
+    else:
+        meshes = [make_serve_mesh()]
+    mesh = meshes[0]
     axis_sizes = shardingx.mesh_axis_sizes(mesh)
-    print(f"serve mesh: data={axis_sizes.get('data', 1)} "
+    print(f"serve mesh: {len(meshes)} worker(s) x "
+          f"data={axis_sizes.get('data', 1)} "
           f"model={axis_sizes.get('model', 1)} "
-          f"({mesh.devices.size} devices)")
+          f"({mesh.devices.size} devices each)")
 
     # offline profiling (the paper's 1000-iteration stage, scaled down)
     # under the same data-parallel layout execution will use; the sync
@@ -137,17 +180,39 @@ def main(argv=None):
                     sync=jax.block_until_ready)
     print("latency table:",
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
+    if args.online_latency:
+        # one estimator instance, shared between the invoker pool (reads
+        # t_slack) and the worker pool (feeds observations back)
+        table = OnlineLatencyTable(table)
 
     t_start = time.time()
-    if args.async_device:
-        executor = AsyncDeviceExecutor(serve_fn, params, m, n,
-                                       use_pallas=args.use_pallas_stitch,
-                                       mesh=mesh, rules=rules,
-                                       max_inflight=args.max_inflight)
+    if args.workers > 1:
+        # a multi-worker pool overlaps by construction: each worker is an
+        # async executor over its own mesh slice, sharing one frame store
+        executor = device_worker_pool(
+            args.workers,
+            lambda i: AsyncDeviceExecutor(
+                serve_fn, params, m, n,
+                use_pallas=args.use_pallas_stitch,
+                mesh=meshes[i], rules=rules,
+                max_inflight=args.max_inflight),
+            placement=make_placement(args.placement),
+            estimator=table if args.online_latency else None)
     else:
-        executor = DeviceExecutor(serve_fn, params, m, n,
-                                  use_pallas=args.use_pallas_stitch,
-                                  mesh=mesh, rules=rules)
+        if args.async_device:
+            executor = AsyncDeviceExecutor(serve_fn, params, m, n,
+                                           use_pallas=args.use_pallas_stitch,
+                                           mesh=mesh, rules=rules,
+                                           max_inflight=args.max_inflight)
+        else:
+            executor = DeviceExecutor(serve_fn, params, m, n,
+                                      use_pallas=args.use_pallas_stitch,
+                                      mesh=mesh, rules=rules)
+        if args.online_latency:
+            # a 1-worker pool only adds the estimator feedback loop: the
+            # wrapped executor keeps its sync-vs-async semantics, so the
+            # flag never changes execution mode behind the user's back
+            executor = WorkerPoolExecutor([executor], estimator=table)
     scene = Scene(preset(args.scene, width=2 * args.canvas,
                          height=args.canvas))
     stream = generate_stream(scene, executor, args.frames, args.canvas,
@@ -160,8 +225,17 @@ def main(argv=None):
     outcomes = engine.run(shape_arrivals(stream, args.bandwidth_mbps * 1e6))
 
     violated = sum(o.violated for o in outcomes)
-    overlap = (f"async, in-flight high water {engine.inflight_high_water}/"
-               f"{args.max_inflight}" if args.async_device else "sync")
+    if args.workers > 1:
+        overlap = (f"{args.workers} worker(s), {args.placement} placement, "
+                   f"in-flight high water {engine.inflight_high_water}/"
+                   f"{getattr(executor, 'max_inflight', '-')}")
+    elif args.async_device:
+        overlap = (f"async, in-flight high water "
+                   f"{engine.inflight_high_water}/{args.max_inflight}")
+    else:
+        overlap = "sync"
+    if args.online_latency:
+        overlap += ", online latency"
     print(f"served {len(stream)} patches in {executor.n_invocations} "
           f"invocations ({overlap}, {args.clock} clock, "
           f"{executor.n_sharded} data-parallel over "
@@ -171,6 +245,12 @@ def main(argv=None):
           f"frames, {violated} SLO violations "
           f"({len(executor.frames)} frames still held, "
           f"{time.time()-t_start:.1f}s wall)")
+    if isinstance(executor, WorkerPoolExecutor):
+        for ws in executor.worker_stats():
+            drift = (f", drift {ws['drift']}x" if "drift" in ws else "")
+            print(f"  worker {ws['worker']}: {ws['invocations']} "
+                  f"invocations, {ws['patches']} patches, "
+                  f"busy {ws['busy_s']:.3f}s{drift}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,32 @@ class PlatformConfig:
     backup_after_sigma: float = math.inf   # hedged dispatch threshold
     seed: int = 0
 
+    def per_worker(self, n_workers: int, worker: int = 0) -> "PlatformConfig":
+        """Capacity shard of this config for one of ``n_workers`` pool
+        workers.  Total capacity is conserved exactly: instance and
+        pre-warm budgets are split with the remainder going to the
+        lowest-index workers, so summing the shards reproduces the
+        source config and an ``n_workers`` sweep compares platforms of
+        identical aggregate capacity.  Jitter seeds are offset per
+        worker so shards draw independent streams.  More workers than
+        instances is refused — a zero-instance shard cannot serve."""
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        if not 0 <= worker < n_workers:
+            raise ValueError(f"worker {worker} not in [0, {n_workers})")
+        if self.max_instances < n_workers:
+            raise ValueError(
+                f"cannot shard {self.max_instances} instances across "
+                f"{n_workers} workers (a worker needs >= 1)")
+
+        def share(total: int) -> int:
+            return total // n_workers + (1 if worker < total % n_workers
+                                         else 0)
+
+        return dataclasses.replace(
+            self, max_instances=share(self.max_instances),
+            pre_warm=share(self.pre_warm), seed=self.seed + worker)
+
 
 @dataclasses.dataclass
 class _Instance:
@@ -156,10 +182,7 @@ class Platform:
     def mean_consolidation(self) -> float:
         """Mean patches consolidated per invocation, over records that
         reported patch counts (0.0 when none did)."""
-        counted = [r.n_patches for r in self.records if r.n_patches > 0]
-        if not counted:
-            return 0.0
-        return sum(counted) / len(counted)
+        return mean_consolidation(self.records)
 
     def busy_intervals(self) -> dict:
         """Per-instance busy intervals ``{idx: [(start, end), ...]}``.
@@ -184,3 +207,28 @@ class Platform:
         if not self.instances or horizon <= 0:
             return 0.0
         return self.meter.busy_seconds / (len(self.instances) * horizon)
+
+
+def mean_consolidation(records: List[ExecutionRecord]) -> float:
+    """Mean patches consolidated per invocation over records that
+    reported patch counts (0.0 when none did) — shared by the platform
+    property and multi-shard aggregation in the scheduler."""
+    counted = [r.n_patches for r in records if r.n_patches > 0]
+    if not counted:
+        return 0.0
+    return sum(counted) / len(counted)
+
+
+def split_platform(platform: Platform, n_workers: int) -> List[Platform]:
+    """Per-worker capacity shards of one platform (the simulation twin of
+    splitting the device mesh into worker slices).
+
+    Each shard gets ``cfg.per_worker``'s instance budget and its own
+    jitter stream, but all shards **share the source platform's cost
+    meter** — total cost / busy seconds aggregate exactly as if one
+    platform had served everything, so Results accounting is unchanged
+    by the split."""
+    return [Platform(platform.latency,
+                     platform.cfg.per_worker(n_workers, worker=i),
+                     meter=platform.meter)
+            for i in range(n_workers)]

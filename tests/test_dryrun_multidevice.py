@@ -72,7 +72,7 @@ def test_serve_pipeline_data_parallel_end_to_end():
     r8 = subprocess.run(argv, capture_output=True, text=True, env=env,
                         timeout=900)
     assert r8.returncode == 0, r8.stdout + r8.stderr
-    assert "serve mesh: data=8" in r8.stdout
+    assert "serve mesh: 1 worker(s) x data=8" in r8.stdout
     served8 = [l for l in r8.stdout.splitlines() if l.startswith("served")]
     assert served8 and "data-parallel over data=8" in served8[0]
     # at least one invocation actually split its batch over the 8 devices
@@ -90,3 +90,27 @@ def test_serve_pipeline_data_parallel_end_to_end():
     patches8, dets8 = stats(served8[0])
     assert patches8 > 0
     assert (patches8, dets8) == stats(served1[0])
+
+
+def test_serve_worker_pool_slices_mesh_end_to_end():
+    """--workers 2 on 8 fake devices: make_worker_meshes must cut the
+    device set into two data=4 slices, and the pooled pipeline (shared
+    frame store, out-of-order harvest) must still serve every patch
+    data-parallel within each slice."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--frames", "16", "--canvas", "128", "--slo", "120",
+         "--workers", "2", "--placement", "least", "--online-latency"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "serve mesh: 2 worker(s) x data=4" in r.stdout
+    served = [l for l in r.stdout.splitlines() if l.startswith("served")]
+    assert served and "data-parallel over data=4" in served[0]
+    assert "(0 data-parallel" not in served[0]
+    assert "0 frames still held" in served[0]
+    workers = [l for l in r.stdout.splitlines()
+               if l.strip().startswith("worker ")]
+    assert len(workers) == 2 and all("drift" in l for l in workers)

@@ -1,0 +1,142 @@
+"""Property tests for the online latency estimator.
+
+Pinned properties (PR acceptance):
+
+* with **zero observations** an ``OnlineLatencyTable`` is *exactly* its
+  seed ``LatencyTable`` — same ``mu_sigma`` and ``t_slack`` at every
+  batch size, including the clamp below the smallest profiled point;
+* under **adversarial observation streams** (NaN, infinities, negatives,
+  zeros, denormals, astronomically large values) every served estimate
+  stays finite with ``mu > 0`` and ``sigma >= 0``, and invalid
+  observations are rejected without perturbing the state.
+
+Runs under real hypothesis (CI) or the vendored shim (tests/_vendor).
+"""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.latency import LatencyTable, OnlineLatencyTable
+
+
+@st.composite
+def seed_tables(draw):
+    """Profiled tables with mu non-decreasing in batch size (a real
+    device profile: bigger batches are never faster) — the regime the
+    seed's linear extrapolation is meant for."""
+    n_entries = draw(st.integers(min_value=1, max_value=6))
+    batches = sorted(set(draw(st.lists(
+        st.integers(min_value=1, max_value=16),
+        min_size=n_entries, max_size=n_entries))))
+    table = {}
+    mu = 0.0
+    for b in batches:
+        mu += draw(st.floats(min_value=1e-6, max_value=5.0))
+        sigma = draw(st.floats(min_value=0.0, max_value=1.0))
+        table[b] = (mu, sigma)
+    return LatencyTable(table, slack_sigmas=3.0)
+
+
+_adversarial = st.one_of(
+    st.floats(min_value=-1e9, max_value=1e9),
+    st.sampled_from([float("nan"), float("inf"), float("-inf"),
+                     0.0, -0.0, 1e308, 5e-324, -1.0, 1e-9]))
+
+
+@given(seed_tables(), st.integers(min_value=1, max_value=32))
+@settings(max_examples=60)
+def test_zero_observations_is_exactly_the_seed(seed, batch):
+    online = OnlineLatencyTable(seed)
+    assert online.mu_sigma(batch) == seed.mu_sigma(batch)
+    assert online.t_slack(batch) == seed.t_slack(batch)
+    assert online.t_slack(0) == seed.t_slack(0) == 0.0
+    assert online.slack_sigmas == seed.slack_sigmas
+    assert online.drift() == 1.0
+
+
+@given(seed_tables(),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=20),
+                          _adversarial),
+                min_size=1, max_size=40),
+       st.integers(min_value=1, max_value=32))
+@settings(max_examples=60)
+def test_adversarial_streams_keep_estimates_finite_positive(
+        seed, stream, probe_batch):
+    online = OnlineLatencyTable(seed)
+    for batch, elapsed in stream:
+        online.observe(batch, elapsed, worker=batch % 3)
+        mu, sigma = online.mu_sigma(probe_batch)
+        assert math.isfinite(mu) and mu > 0.0
+        assert math.isfinite(sigma) and sigma >= 0.0
+        t = online.t_slack(probe_batch)
+        assert math.isfinite(t) and t > 0.0
+        assert math.isfinite(online.drift())
+        lo, hi = online.ratio_bounds
+        assert lo <= online.drift() <= hi
+
+
+@given(seed_tables(),
+       st.sampled_from([float("nan"), float("inf"), float("-inf"),
+                        -1.0, 0.0, -0.0]))
+@settings(max_examples=30)
+def test_invalid_observations_are_rejected_without_state_change(
+        seed, bad):
+    online = OnlineLatencyTable(seed)
+    online.observe(2, 0.5)
+    before = (online.mu_sigma(2), online.n_observations, online.drift())
+    assert online.observe(2, bad) is False
+    assert online.observe(0, 0.5) is False      # empty batch
+    assert (online.mu_sigma(2), online.n_observations,
+            online.drift()) == before
+    assert online.n_rejected >= 2
+
+
+def test_ewma_converges_to_sustained_observation():
+    seed = LatencyTable({1: (0.01, 0.001)})
+    online = OnlineLatencyTable(seed, alpha=0.5)
+    for _ in range(20):
+        online.observe(1, 0.08)
+    mu, sigma = online.mu_sigma(1)
+    assert mu == pytest.approx(0.08, rel=1e-3)
+    assert sigma >= 0.0
+    # unobserved batch sizes scale by the (clamped) drift ratio
+    mu4, _ = online.mu_sigma(4)
+    assert mu4 == pytest.approx(seed.mu_sigma(4)[0] * online.drift(),
+                                rel=1e-6)
+
+
+def test_drift_ratio_is_clamped():
+    seed = LatencyTable({1: (0.01, 0.0)})
+    online = OnlineLatencyTable(seed, alpha=1.0, ratio_bounds=(0.5, 4.0))
+    online.observe(1, 10.0)             # 1000x the profile
+    assert online.drift() == 4.0
+    mu4, _ = online.mu_sigma(4)
+    assert mu4 == pytest.approx(seed.mu_sigma(4)[0] * 4.0)
+    online.observe(1, 1e-9)             # collapse toward zero
+    assert online.drift() == 0.5
+
+
+def test_constructor_validation():
+    seed = LatencyTable({1: (0.01, 0.0)})
+    with pytest.raises(ValueError):
+        OnlineLatencyTable(seed, alpha=0.0)
+    with pytest.raises(ValueError):
+        OnlineLatencyTable(seed, alpha=1.5)
+    with pytest.raises(ValueError):
+        OnlineLatencyTable(seed, ratio_bounds=(0.0, 1.0))
+    with pytest.raises(ValueError):
+        OnlineLatencyTable(seed, ratio_bounds=(2.0, 1.0))
+
+
+def test_seed_clamp_below_smallest_profiled_point_is_preserved():
+    """PR 2's fix (no extrapolation through the origin) survives the
+    online wrapper: below the smallest profiled batch the seed's clamped
+    value is served, scaled only by observed drift."""
+    seed = LatencyTable({4: (0.4, 0.04), 8: (0.8, 0.08)})
+    online = OnlineLatencyTable(seed)
+    assert online.mu_sigma(1) == seed.mu_sigma(1) == (0.4, 0.04)
+    online.observe(4, 0.8)              # 2x drift at batch 4
+    mu1, _ = online.mu_sigma(1)
+    assert mu1 == pytest.approx(0.4 * online.drift())

@@ -61,6 +61,16 @@ def test_serve_driver_async_wall_clock_smoke():
                 "--clock", "wall", "--wall-speed", "50"])
 
 
+def test_serve_driver_worker_pool_online_latency_smoke():
+    """launch/serve.py --workers/--placement/--online-latency: the full
+    driver path through make_worker_meshes -> WorkerPoolExecutor (shared
+    frame store) with the online estimator fed back into the invoker."""
+    from repro.launch import serve
+    serve.main(["--frames", "10", "--canvas", "128", "--slo", "5.0",
+                "--workers", "2", "--placement", "least",
+                "--online-latency"])
+
+
 def test_train_driver_reduced_detector():
     from repro.launch import train
     train.main(["--arch", "tangram-detector", "--steps", "3", "--batch", "2"])
