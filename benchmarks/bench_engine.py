@@ -26,9 +26,17 @@ Three measurements, written to ``BENCH_engine.json`` at the repo root:
   size; the 4-vs-1 speedup is the acceptance number for multi-worker
   in-flight scheduling.
 
+With ``--source synthetic`` a fifth arm measures live-source ingestion:
+two synthetic cameras run the edge pipeline during serving, overloading
+the sim platform through the engine's ingestion window, and the report
+records throughput plus the drop/degrade accounting that bounds the
+backlog.  The e2e and source arms embed ``ServeConfig.to_dict()`` /
+``LatencyTable.to_dict()`` so each measurement carries the exact
+(rebuildable) scheduler configuration.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.bench_engine            # full
-    PYTHONPATH=src python -m benchmarks.bench_engine --smoke    # CI
+    PYTHONPATH=src python -m benchmarks.bench_engine --smoke --source synthetic  # CI
 """
 from __future__ import annotations
 
@@ -97,10 +105,14 @@ def bench_e2e(n_cams: int, n_frames: int, per_frame: int = 6) -> dict:
     t0 = time.perf_counter()
     res = sched.run(streams, bandwidth_bps=20e6)
     dt = time.perf_counter() - t0
+    # the config/latency records round-trip through JSON (named
+    # references only), so a report is enough to rebuild the scheduler
     return {"patches": res.n_patches, "seconds": round(dt, 4),
             "patches_per_s": round(res.n_patches / dt, 1),
             "violation_rate": round(res.violation_rate, 4),
-            "invocations": res.invocations}
+            "invocations": res.invocations,
+            "config": sched.config.to_dict(),
+            "latency": table.to_dict()}
 
 
 def _burst_trace(canvas: int, n_bursts: int, per_burst: int, seed: int = 0):
@@ -249,10 +261,54 @@ def bench_worker_scaling(smoke: bool) -> dict:
                                          - w1["p99_latency_s"], 4)}
 
 
+def bench_source_ingestion(smoke: bool) -> dict:
+    """Live-source serving under sustained overload: two synthetic
+    cameras at a burst-modulated frame rate feed the sim platform
+    through the ingestion window; the cameras degrade RoI quality (and
+    drop at 2x the window) so the backlog stays bounded."""
+    from repro.core.config import ServeConfig
+    from repro.core.latency import LatencyTable
+    from repro.sources import RateProfile, make_source
+
+    n_frames = 20 if smoke else 80
+    window = 24
+    # slow platform vs a fast camera clock: overload is structural
+    table = LatencyTable({1: (0.20, 0.0), 2: (0.32, 0.0), 4: (0.5, 0.0)})
+    config = ServeConfig(max_canvases=4, ingestion_window=window)
+    sched = TangramScheduler(OVERLAP_CANVAS, OVERLAP_CANVAS, table,
+                             Platform(table, PlatformConfig()),
+                             config=config)
+    source = make_source(
+        "synthetic", n_cameras=2, n_frames=n_frames,
+        canvas=OVERLAP_CANVAS, bandwidth_bps=200e6, warmup_s=0.3,
+        overload="degrade",
+        rate=RateProfile(fps=30.0, burst_prob=0.2, burst_factor=2.0,
+                         diurnal_amplitude=0.3, diurnal_period_s=4.0))
+    t0 = time.perf_counter()
+    res = sched.serve_source(source, name="source-ingestion")
+    dt = time.perf_counter() - t0
+    src = res.summary()["source"]
+    return {"frames": src["frames_total"],
+            "patches": src["patches_emitted"],
+            "dropped": src["frames_dropped"],
+            "degraded": src["frames_degraded"],
+            "backlog_high_water": src["backlog_high_water"],
+            "ingestion_window": window,
+            "seconds": round(dt, 4),
+            "patches_per_s": round(src["patches_emitted"] / dt, 1),
+            "violation_rate": round(res.violation_rate, 4),
+            "config": config.to_dict()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="short budgets for CI")
+    ap.add_argument("--source", choices=("trace", "synthetic"),
+                    default="trace",
+                    help="synthetic: additionally measure live-source "
+                         "ingestion under overload (drop/degrade "
+                         "accounting)")
     ap.add_argument("--out", default=None,
                     help="output path (default: repo-root BENCH_engine.json)")
     args = ap.parse_args(argv)
@@ -281,6 +337,15 @@ def main(argv=None):
           f"speedup {ov['speedup']}x "
           f"(p99 added {ov['p99_added_latency_s']}s, "
           f"in-flight high water {ov['async']['inflight_high_water']})")
+
+    if args.source == "synthetic":
+        report["source_ingestion"] = bench_source_ingestion(args.smoke)
+        si = report["source_ingestion"]
+        print(f"source ingestion: {si['patches']} patches from "
+              f"{si['frames']} frames at {si['patches_per_s']}/s "
+              f"({si['dropped']} dropped, {si['degraded']} degraded, "
+              f"backlog high water {si['backlog_high_water']}/"
+              f"{si['ingestion_window']})")
 
     report["worker_scaling"] = bench_worker_scaling(args.smoke)
     ws = report["worker_scaling"]

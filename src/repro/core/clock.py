@@ -94,3 +94,25 @@ class WallClock:
         # advance_to returns — even if sleep undershot by a scheduler tick
         if t > self._floor:
             self._floor = t
+
+
+_CLOCKS = {
+    "virtual": VirtualClock,
+    "wall": WallClock,
+}
+
+
+def make_clock(name: str, **cfg) -> Clock:
+    """Clock-name -> instance (``virtual`` | ``wall``), mirroring
+    ``make_placement`` / ``make_source``.  ``cfg`` forwards to the clock
+    constructor (e.g. ``make_clock("wall", speed=100.0)``); ``speed`` is
+    accepted—and ignored—for the virtual clock so one config dict can
+    drive either name."""
+    try:
+        cls = _CLOCKS[name]
+    except KeyError:
+        raise ValueError(f"unknown clock {name!r}; "
+                         f"choose from {sorted(_CLOCKS)}") from None
+    if cls is VirtualClock:
+        cfg = {k: v for k, v in cfg.items() if k != "speed"}
+    return cls(**cfg)

@@ -1,0 +1,122 @@
+"""`ServeConfig`: one declarative record for the whole serving pipeline.
+
+`TangramScheduler` had accreted ~10 orthogonal keyword arguments
+(batching knobs, executor mode, pool size, placement, estimator, clock),
+and `launch/serve.py` mirrored each as an ad-hoc CLI flag.  This module
+consolidates them into a single frozen dataclass grouped by subsystem,
+designed so a config can be **logged into benchmark JSON and rebuilt**
+from it:
+
+* every field is a plain value or a *named reference* — classifiers,
+  placements, clocks, executors and sources are referred to by their
+  registry names (``make_classify`` / ``make_placement`` /
+  ``make_clock`` / ``make_executor`` / ``make_source`` resolve them),
+  never by callables or meshes;
+* ``to_dict()`` / ``from_dict()`` round-trip through ``json`` exactly
+  (nested ``AIMDConfig`` included), and ``dataclasses.replace`` works
+  for one-field sweeps.
+
+The old keyword arguments still work through a deprecation shim on
+``TangramScheduler`` that warns once and forwards here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.adaptive import AIMDConfig
+from repro.core.partitioning import Patch
+
+#: classifier registry: named references for the `classify` field.  None
+#: (the paper's single shared queue) is spelled as the name ``None`` /
+#: JSON null.  Register project classifiers here so configs stay
+#: serializable.
+_CLASSIFIERS: dict = {}
+
+
+def register_classify(name: str, fn: Callable[[Patch], object]) -> None:
+    _CLASSIFIERS[name] = fn
+
+
+def make_classify(name: Optional[str]
+                  ) -> Optional[Callable[[Patch], object]]:
+    """Classifier-name -> callable (``"slo"`` | ``None``), the named-
+    reference resolution for ``ServeConfig.classify``."""
+    if name is None:
+        return None
+    if not _CLASSIFIERS:
+        from repro.core.engine import slo_class
+        _CLASSIFIERS["slo"] = slo_class
+    try:
+        return _CLASSIFIERS[name]
+    except KeyError:
+        raise ValueError(f"unknown classifier {name!r}; "
+                         f"choose from {sorted(_CLASSIFIERS)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything the serving pipeline needs beyond data + models.
+
+    Grouped by subsystem; each group's fields resolve through the
+    matching factory.  All fields are JSON-safe by construction.
+    """
+
+    # --- batching (invoker pool) ---------------------------------------
+    max_canvases: int = 8            # canvas budget per invocation (Eq. 5)
+    incremental: bool = True         # live PackState vs literal restitch
+    classify: Optional[str] = None   # None: shared queue; "slo": per-class
+    adaptive: Optional[AIMDConfig] = None  # AIMD controller on the pool
+
+    # --- execution ------------------------------------------------------
+    executor: str = "sim"            # sim | device | async_device
+    use_pallas: bool = False         # Pallas stitch kernel on device paths
+    max_inflight: int = 4            # async in-flight bound (device memory)
+    clock: str = "virtual"           # virtual | wall
+    wall_speed: float = 1.0          # engine seconds per wall second
+    check_invariants: bool = False
+
+    # --- worker pool ----------------------------------------------------
+    n_workers: int = 1
+    placement: Optional[str] = None  # least | round | affinity (None: least)
+
+    # --- latency estimator ----------------------------------------------
+    online_latency: bool = False     # OnlineLatencyTable feedback loop
+
+    # --- ingestion (source layer) ---------------------------------------
+    source: str = "trace"            # trace | synthetic | file
+    ingestion_window: Optional[int] = None  # backlog bound, in patches
+
+    def __post_init__(self):
+        if self.n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {self.n_workers}")
+        if self.max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {self.max_inflight}")
+        if self.wall_speed <= 0:
+            raise ValueError(
+                f"wall_speed must be positive, got {self.wall_speed}")
+        if self.ingestion_window is not None and self.ingestion_window < 1:
+            raise ValueError(f"ingestion_window must be >= 1, got "
+                             f"{self.ingestion_window}")
+
+    def replace(self, **changes) -> "ServeConfig":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------ serialization ----
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)   # AIMDConfig -> nested plain dict
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        d = dict(d)
+        adaptive = d.get("adaptive")
+        if isinstance(adaptive, dict):
+            d["adaptive"] = AIMDConfig(**adaptive)
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ServeConfig fields {sorted(unknown)}")
+        return cls(**d)

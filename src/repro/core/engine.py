@@ -135,6 +135,10 @@ class Results:
     mean_consolidation: float = 0.0   # patches per invocation (platform view)
     worker_stats: Optional[List[dict]] = None  # per-worker pool counters
                                       # (WorkerPoolExecutor.worker_stats())
+    source_stats: Optional[dict] = None  # ingestion-side accounting
+                                      # (repro.sources SourceStats.to_dict():
+                                      # frames dropped/degraded under
+                                      # backpressure, arrivals, bytes)
 
     @property
     def n_patches(self) -> int:
@@ -210,6 +214,8 @@ class Results:
                                            / max(horizon, 1e-12), 4))
                 for ws in self.worker_stats
             ]
+        if self.source_stats is not None:
+            out["source"] = self.source_stats
         return out
 
 
@@ -287,6 +293,11 @@ class InvokerPool:
     def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
         key = self.classify(patch)
         return self._tag(self._invoker(key).on_patch(t_now, patch), key)
+
+    def queue_depth(self) -> int:
+        """Patches currently queued (unfired) across every class — the
+        pool half of the engine's ingestion-backpressure signal."""
+        return sum(len(inv.queue) for inv in self.invokers.values())
 
     def next_timer(self) -> float:
         return min((inv.next_timer() for inv in self.invokers.values()),
@@ -590,6 +601,33 @@ def shard_canvases(canvases, mesh, rules):
     return jax.device_put(canvases, sh), bool(sh.spec) and n_data > 1
 
 
+_EXECUTORS = {
+    "sim": SimExecutor,
+    "device": DeviceExecutor,
+    "async_device": AsyncDeviceExecutor,
+}
+
+
+def make_executor(name: str, **cfg):
+    """Executor-name -> instance (``sim`` | ``device`` | ``async_device``),
+    mirroring ``make_placement`` / ``make_clock`` / ``make_source``.
+
+    ``cfg`` forwards to the executor constructor: ``sim`` takes
+    ``platform=``; the device executors take the pipeline arguments
+    (``serve_fn, params, canvas_m, canvas_n, ...``).  ``max_inflight`` is
+    accepted—and dropped—for the sync executors so one config dict can
+    drive any name.
+    """
+    try:
+        cls = _EXECUTORS[name]
+    except KeyError:
+        raise ValueError(f"unknown executor {name!r}; "
+                         f"choose from {sorted(_EXECUTORS)}") from None
+    if cls is not AsyncDeviceExecutor:
+        cfg = {k: v for k, v in cfg.items() if k != "max_inflight"}
+    return cls(**cfg)
+
+
 # ------------------------------------------------------------ event loop ----
 
 class ServingEngine:
@@ -601,14 +639,28 @@ class ServingEngine:
     serving: the engine then sleeps to each event instant instead of
     jumping, and in-flight async device work completes during those
     waits.
+
+    ``ingestion_window`` bounds the backlog the engine is willing to
+    accumulate, in patches: queued-but-unfired patches in the pool plus
+    patches inside unresolved invocations.  The engine never refuses an
+    offer — the bound is advisory, read by live sources
+    (:mod:`repro.sources`) through :meth:`overloaded`, which respond by
+    dropping frames or degrading RoI quality.  ``None`` (default)
+    disables the signal: trace replay ingests everything, as before.
     """
 
     def __init__(self, pool, executor, clock: Optional[Clock] = None,
-                 check_invariants: bool = False):
+                 check_invariants: bool = False,
+                 ingestion_window: Optional[int] = None):
+        if ingestion_window is not None and ingestion_window < 1:
+            raise ValueError(f"ingestion_window must be >= 1, got "
+                             f"{ingestion_window}")
         self.pool = pool
         self.executor = executor
         self.clock = clock if clock is not None else VirtualClock()
         self.check_invariants = check_invariants
+        self.ingestion_window = ingestion_window
+        self.backlog_high_water = 0
         self.outcomes: List[PatchOutcome] = []
         self.invocations: List[Invocation] = []
         self.completions: List[Completion] = []
@@ -640,6 +692,21 @@ class ServingEngine:
         self.finish()
         return self.outcomes
 
+    def serve(self, source) -> List[PatchOutcome]:
+        """Pull loop over a :mod:`repro.sources` source.
+
+        The source's event iterator receives *this engine* as its
+        feedback handle: between frames it reads :meth:`overloaded` /
+        :meth:`backlog` and throttles itself (drop / degrade).  With a
+        trace source (backpressure ignored) this is event-for-event
+        identical to :meth:`run` on the same arrivals — pinned by the
+        boundary-identity test.
+        """
+        for arr in source.events(self):
+            self.offer(arr)
+        self.finish()
+        return self.outcomes
+
     def offer(self, arrival: Arrival):
         """One arrival: first fire everything due strictly before it."""
         self.advance(arrival.t_arrive)
@@ -650,6 +717,32 @@ class ServingEngine:
         self._seq_of[id(arrival.patch)] = seq
         for inv in self.pool.on_patch(arrival.t_arrive, arrival.patch):
             self._dispatch(inv)
+        backlog = self.backlog()
+        if backlog > self.backlog_high_water:
+            self.backlog_high_water = backlog
+
+    # ------------------------------------------------- ingestion window ----
+
+    def queued_patches(self) -> int:
+        """Patches accepted but not yet fired (pool queues)."""
+        depth = getattr(self.pool, "queue_depth", None)
+        return depth() if depth is not None else 0
+
+    def inflight_patches(self) -> int:
+        """Patches inside unresolved invocations (scheduled + in flight)."""
+        return (sum(len(h.invocation.patches) for h in self._inflight)
+                + sum(len(h.invocation.patches)
+                      for _, _, h in self._scheduled))
+
+    def backlog(self) -> int:
+        """Total unfinished patches — the backpressure quantity live
+        sources compare against ``ingestion_window``."""
+        return self.queued_patches() + self.inflight_patches()
+
+    def overloaded(self) -> bool:
+        """True when the backlog has filled the ingestion window."""
+        return (self.ingestion_window is not None
+                and self.backlog() >= self.ingestion_window)
 
     def advance(self, t: float):
         """Process every timer/completion event scheduled before ``t``.

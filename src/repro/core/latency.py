@@ -72,6 +72,24 @@ class LatencyTable:
         mu, sigma = self.mu_sigma(batch)
         return mu + self.slack_sigmas * sigma
 
+    # ------------------------------------------------------ serialization ----
+    # ``dataclasses.asdict`` alone does not survive a JSON round-trip:
+    # json stringifies the int batch keys and list-ifies the (mu, sigma)
+    # tuples, so a reloaded table would miss every exact-key lookup.
+    # These helpers are the benchmark-JSON logging surface.
+
+    def to_dict(self) -> dict:
+        return {"kind": "profile",
+                "slack_sigmas": self.slack_sigmas,
+                "table": {str(k): [float(m), float(s)]
+                          for k, (m, s) in sorted(self.table.items())}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LatencyTable":
+        return cls({int(k): (float(m), float(s))
+                    for k, (m, s) in d["table"].items()},
+                   slack_sigmas=float(d.get("slack_sigmas", 3.0)))
+
 
 class OnlineLatencyTable:
     """A latency estimator that refreshes itself from delivered completions.
@@ -205,6 +223,36 @@ class OnlineLatencyTable:
             return 0.0
         mu, sigma = self.mu_sigma(batch)
         return mu + self.slack_sigmas * sigma
+
+    # ------------------------------------------------------ serialization ----
+
+    def to_dict(self) -> dict:
+        """JSON-safe spec of this estimator: the seed profile plus the
+        EWMA knobs.  Learned state (per-batch EWMAs, drift ratios) is
+        deliberately *not* serialized — a config log describes how the
+        estimator was built, and a deserialized estimator starts exactly
+        at its seed, the same contract as a fresh construction."""
+        return {"kind": "online",
+                "seed": self.seed.to_dict(),
+                "alpha": self.alpha,
+                "ratio_bounds": list(self.ratio_bounds)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "OnlineLatencyTable":
+        return cls(LatencyTable.from_dict(d["seed"]),
+                   alpha=float(d.get("alpha", 0.25)),
+                   ratio_bounds=tuple(d.get("ratio_bounds", (0.05, 50.0))))
+
+
+def latency_from_dict(d: dict):
+    """Inverse of ``LatencyTable.to_dict`` / ``OnlineLatencyTable.to_dict``
+    keyed on the embedded ``kind`` tag."""
+    kind = d.get("kind", "profile")
+    if kind == "online":
+        return OnlineLatencyTable.from_dict(d)
+    if kind == "profile":
+        return LatencyTable.from_dict(d)
+    raise ValueError(f"unknown latency spec kind {kind!r}")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,6 +15,7 @@ A numpy reference (``numpy_rois``) exists for property tests.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -28,6 +29,14 @@ class RoIConfig:
     dilate: int = 2
     max_rois: int = 64
     min_area: int = 2          # in downsampled cells
+
+    def degraded(self, factor: int = 2) -> "RoIConfig":
+        """A reduced-quality variant for source-side overload response:
+        coarser grid (small objects may be lost), fewer components —
+        cheaper to extract and produces fewer, coarser patches."""
+        return dataclasses.replace(
+            self, downsample=self.downsample * factor,
+            max_rois=max(1, self.max_rois // factor))
 
 
 def _maxpool(mask: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -102,9 +111,16 @@ def extract_rois(mask: jnp.ndarray, cfg: RoIConfig = RoIConfig()
     return boxes, valid
 
 
-@jax.jit
-def extract_rois_jit(mask):
-    return extract_rois(mask)
+@functools.lru_cache(maxsize=None)
+def rois_jit(cfg: RoIConfig = RoIConfig()):
+    """Jitted :func:`extract_rois` specialised to ``cfg`` (cached per
+    config, so sources can flip between normal and degraded quality
+    without recompiling every frame)."""
+    return jax.jit(lambda mask: extract_rois(mask, cfg))
+
+
+def extract_rois_jit(mask, cfg: RoIConfig = RoIConfig()):
+    return rois_jit(cfg)(mask)
 
 
 # ------------------------------------------------------------- reference ----

@@ -7,76 +7,143 @@ platform) and assembles the ``Results`` record that every benchmark
 (Figs. 8-14) reads.  ``PatchOutcome``/``Results`` are re-exported here
 for backwards compatibility.
 
-Pass ``adaptive=AIMDConfig(...)`` to put the completion-driven AIMD
-controller (:mod:`repro.core.adaptive`) on the pool: per-class canvas
-budgets and firing margins then track delivered completions instead of
-staying at the static configuration.
+Configuration is one :class:`~repro.core.config.ServeConfig`::
 
-Pass ``n_workers > 1`` to serve through a
-:class:`~repro.core.workers.WorkerPoolExecutor` over per-worker platform
-capacity shards (:func:`~repro.serverless.platform.split_platform`) —
-the simulation twin of routing invocations across device mesh slices;
-``placement`` picks the routing policy.  ``online_latency=True`` wraps
-the profiled table in an :class:`~repro.core.latency.OnlineLatencyTable`
-shared between the invokers and the executor, so firing decisions track
-observed completion times instead of the static profile.
+    sched = TangramScheduler(256, 256, table, platform,
+                             config=ServeConfig(classify="slo",
+                                                n_workers=2,
+                                                online_latency=True))
+
+Every field is a plain value or a named reference resolved through the
+factories (``make_classify`` / ``make_placement`` / ``make_clock``), so
+the exact scheduler configuration can be logged into benchmark JSON via
+``config.to_dict()`` and rebuilt with ``ServeConfig.from_dict``.
+
+The pre-config keyword arguments (``max_canvases=``, ``adaptive=``,
+``n_workers=``, ...) still work through a deprecation shim that warns
+once per process and forwards onto a ``ServeConfig``; non-serializable
+legacy values (a ``classify`` callable, a ``Clock`` or placement
+*instance*) are honoured as direct overrides but cannot be expressed in
+the config record — pass registry names to keep configs loggable.
+
+Ingestion is pluggable the same way: :meth:`TangramScheduler.run` shapes
+patch streams through a :class:`~repro.sources.TraceSource` (the replay
+special case — event-for-event identical to the historical
+``shape_arrivals`` path), while :meth:`serve_source` accepts any
+:mod:`repro.sources` source, with the engine's ingestion window feeding
+backpressure to it and the source's drop/degrade accounting landing in
+``Results.summary()["source"]``.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Union
+import warnings
+from typing import Callable, Optional, Sequence
 
-from repro.core.adaptive import AIMDConfig, adaptive_uniform_pool
-from repro.core.clock import Clock
+from repro.core.adaptive import adaptive_uniform_pool
+from repro.core.clock import Clock, make_clock
+from repro.core.config import ServeConfig, make_classify
 from repro.core.engine import (PatchOutcome, Results, ServingEngine,
                                SimExecutor, uniform_pool)
 from repro.core.latency import LatencyTable, OnlineLatencyTable
 from repro.core.partitioning import Patch
 from repro.core.workers import WorkerPoolExecutor, make_placement
-from repro.data.video import merge_arrivals, shape_arrivals
 from repro.serverless.platform import (Platform, mean_consolidation,
                                        split_platform)
 
-__all__ = ["PatchOutcome", "Results", "TangramScheduler"]
+__all__ = ["PatchOutcome", "Results", "ServeConfig", "TangramScheduler"]
+
+#: legacy keyword -> ServeConfig field (the deprecation shim's mapping)
+_LEGACY_FIELDS = ("max_canvases", "check_invariants", "classify",
+                  "incremental", "adaptive", "clock", "n_workers",
+                  "placement", "online_latency", "ingestion_window")
+_legacy_warned = False
+
+
+def _warn_legacy_once(names):
+    global _legacy_warned
+    if _legacy_warned:
+        return
+    _legacy_warned = True
+    warnings.warn(
+        f"TangramScheduler keyword arguments {sorted(names)} are "
+        f"deprecated; pass config=ServeConfig(...) instead "
+        f"(repro.core.config)", DeprecationWarning, stacklevel=3)
 
 
 class TangramScheduler:
     """The cloud-side scheduler of Fig. 5.
 
-    ``classify=None`` keeps the paper's single shared queue; pass
-    ``engine.slo_class`` (or any ``Patch -> key`` function) to shard the
-    invoker per SLO class so tight deadlines never wait behind loose ones.
-    ``clock`` defaults to a fresh virtual clock per run (simulation).
+    ``config.classify=None`` keeps the paper's single shared queue;
+    ``"slo"`` shards the invoker per SLO class so tight deadlines never
+    wait behind loose ones.  ``config.clock="virtual"`` (default) gives
+    every run a fresh virtual clock (simulation).
     """
 
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
-                 platform: Platform, max_canvases: int = 8,
-                 check_invariants: bool = False,
-                 classify: Optional[Callable[[Patch], object]] = None,
-                 incremental: bool = True,
-                 adaptive: Optional[AIMDConfig] = None,
-                 clock: Optional[Clock] = None,
-                 n_workers: int = 1,
-                 placement: Union[str, object, None] = None,
-                 online_latency: bool = False):
-        if n_workers < 1:
-            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+                 platform: Platform,
+                 config: Optional[ServeConfig] = None, **legacy):
+        config = config if config is not None else ServeConfig()
+        # -------------------------------------------- deprecation shim ----
+        # Old keyword arguments forward onto the config.  Values that a
+        # config cannot express (callables / instances) become direct
+        # overrides resolved below in place of the named references.
+        classify_override: Optional[Callable[[Patch], object]] = None
+        clock_override: Optional[Clock] = None
+        placement_override: object = None
+        if legacy:
+            unknown = set(legacy) - set(_LEGACY_FIELDS)
+            if unknown:
+                raise TypeError(
+                    f"unexpected TangramScheduler arguments "
+                    f"{sorted(unknown)}")
+            _warn_legacy_once(legacy)
+            fields = {}
+            for name, value in legacy.items():
+                if name == "classify" and callable(value):
+                    classify_override = value
+                elif name == "clock" and isinstance(value, Clock):
+                    clock_override = value
+                elif name == "placement" and not (
+                        value is None or isinstance(value, str)):
+                    placement_override = value
+                else:
+                    fields[name] = value
+            config = config.replace(**fields)
+
+        self.config = config
+        classify = (classify_override if classify_override is not None
+                    else make_classify(config.classify))
         self.estimator: Optional[OnlineLatencyTable] = None
-        if online_latency:
+        if config.online_latency:
             latency = self.estimator = OnlineLatencyTable(latency)
-        if adaptive is not None:
+        if config.adaptive is not None:
             self.pool = adaptive_uniform_pool(
-                canvas_m, canvas_n, latency, max_canvases,
-                incremental=incremental, classify=classify, cfg=adaptive)
+                canvas_m, canvas_n, latency, config.max_canvases,
+                incremental=config.incremental, classify=classify,
+                cfg=config.adaptive)
         else:
             self.pool = uniform_pool(canvas_m, canvas_n, latency,
-                                     max_canvases, incremental=incremental,
+                                     config.max_canvases,
+                                     incremental=config.incremental,
                                      classify=classify)
         self.platform = platform
-        self.n_workers = n_workers
-        self.placement = (make_placement(placement)
-                          if isinstance(placement, str) else placement)
-        self.clock = clock
-        self.check_invariants = check_invariants
+        self.n_workers = config.n_workers
+        self.placement = (placement_override
+                          if placement_override is not None
+                          else make_placement(config.placement)
+                          if config.placement is not None else None)
+        self.clock = clock_override
+        self.check_invariants = config.check_invariants
+
+    def _clock(self) -> Optional[Clock]:
+        """A legacy clock instance wins; otherwise "virtual" keeps the
+        engine default (a fresh VirtualClock per engine) and "wall"
+        builds a fresh wall clock per run."""
+        if self.clock is not None:
+            return self.clock
+        if self.config.clock == "virtual":
+            return None
+        return make_clock(self.config.clock, speed=self.config.wall_speed)
 
     def _executor(self):
         """One SimExecutor, or a worker pool over platform capacity
@@ -92,16 +159,29 @@ class TangramScheduler:
 
     def run(self, streams: Sequence[Sequence[Patch]], bandwidth_bps: float,
             name: str = "tangram") -> Results:
-        per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
-        arrivals = merge_arrivals(per_cam)
+        """Replay per-camera patch streams over shaped uplinks — the
+        historical entry point, now a :class:`~repro.sources.TraceSource`
+        special case of :meth:`serve_source`."""
+        from repro.sources import TraceSource
+        return self.serve_source(
+            TraceSource(streams=streams, bandwidth_bps=bandwidth_bps),
+            name=name)
+
+    def serve_source(self, source, name: str = "tangram") -> Results:
+        """Serve any :mod:`repro.sources` source end-to-end and assemble
+        the ``Results`` record (bandwidth + drop/degrade accounting from
+        ``source.stats()``)."""
         executor, platforms = self._executor()
         engine = ServingEngine(self.pool, executor,
-                               clock=self.clock,
-                               check_invariants=self.check_invariants)
-        outcomes = engine.run(arrivals)
+                               clock=self._clock(),
+                               check_invariants=self.check_invariants,
+                               ingestion_window=self.config.ingestion_window)
+        outcomes = engine.serve(source)
 
-        bytes_sent = sum(a.n_bytes for cam in per_cam for a in cam)
-        trans = sum(a.t_arrive - a.patch.t_gen for cam in per_cam for a in cam)
+        stats = source.stats()
+        source_stats = stats.to_dict()
+        source_stats["backlog_high_water"] = engine.backlog_high_water
+        source_stats["ingestion_window"] = self.config.ingestion_window
         records = [r for p in platforms for r in p.records]
         return Results(
             name=name, outcomes=outcomes,
@@ -110,12 +190,13 @@ class TangramScheduler:
             batch_sizes=[len(inv.canvases) for inv in engine.invocations],
             patches_per_batch=[len(inv.patches)
                                for inv in engine.invocations],
-            bytes_sent=bytes_sent,
+            bytes_sent=stats.bytes_sent,
             total_cost=self.platform.total_cost,
             invocations=len(records),
             exec_seconds=self.platform.meter.busy_seconds,
-            transmission_seconds=trans,
+            transmission_seconds=stats.transmission_seconds,
             mean_consolidation=mean_consolidation(records),
             worker_stats=(executor.worker_stats()
                           if isinstance(executor, WorkerPoolExecutor)
-                          else None))
+                          else None),
+            source_stats=source_stats)

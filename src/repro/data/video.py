@@ -10,11 +10,27 @@ background to almost nothing):
 
 Constants are calibrated so a 3840x2160 frame is ~1.0 MB (0.125 B/px),
 matching the paper's 13-34 Mbps @30fps band for 4K H.264.
+
+Two shaping surfaces over the same FIFO-link model:
+
+* :func:`shape_arrivals` — batch: shape a whole per-camera patch list at
+  once (trace replay, benchmarks);
+* :class:`Uplink` — streaming: one camera's link as an object, shaping
+  patches as they are produced (the live sources in
+  :mod:`repro.sources`).  ``shape_arrivals`` is implemented on top of it,
+  so the two paths cannot drift apart.
+
+:func:`load_frames` reads a recorded frame sequence (``.npy``/``.npz``
+stack, or a directory of per-frame ``.npy`` files) for
+``repro.sources.FileStreamSource``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+import pathlib
+from typing import List, Sequence, Union
+
+import numpy as np
 
 from repro.core.partitioning import Patch
 
@@ -44,6 +60,37 @@ class Arrival:
     n_bytes: float
 
 
+class Uplink:
+    """One camera's FIFO uplink, shaping patches as they are produced.
+
+    The streaming counterpart of :func:`shape_arrivals` (which is built
+    on top of this class): arrival time = max(t_gen, link free) +
+    bytes / bandwidth, patches serialised in send order.  Keeps running
+    byte/transmission totals so live sources can account for bandwidth
+    exactly like the batch path does.
+    """
+
+    def __init__(self, bandwidth_bps: float):
+        if bandwidth_bps <= 0:
+            raise ValueError(f"bandwidth must be positive, got "
+                             f"{bandwidth_bps}")
+        self.byte_rate = bandwidth_bps / 8.0
+        self.link_free = 0.0
+        self.bytes_sent = 0.0
+        self.transmission_seconds = 0.0
+        self.n_sent = 0
+
+    def send(self, p: Patch) -> Arrival:
+        b = patch_bytes(p)
+        start = max(p.t_gen, self.link_free)
+        t_arr = start + b / self.byte_rate
+        self.link_free = t_arr
+        self.bytes_sent += b
+        self.transmission_seconds += t_arr - p.t_gen
+        self.n_sent += 1
+        return Arrival(t_arr, p, b)
+
+
 def shape_arrivals(patches: Sequence[Patch], bandwidth_bps: float
                    ) -> List[Arrival]:
     """FIFO uplink: each camera serialises its patches over one link.
@@ -51,19 +98,45 @@ def shape_arrivals(patches: Sequence[Patch], bandwidth_bps: float
     ``patches`` must be in generation order for a single camera; arrival
     time = max(t_gen, link free) + bytes / bandwidth.
     """
-    byte_rate = bandwidth_bps / 8.0
-    link_free = 0.0
-    out = []
-    for p in patches:
-        b = patch_bytes(p)
-        start = max(p.t_gen, link_free)
-        t_arr = start + b / byte_rate
-        link_free = t_arr
-        out.append(Arrival(t_arr, p, b))
-    return out
+    link = Uplink(bandwidth_bps)
+    return [link.send(p) for p in patches]
 
 
 def merge_arrivals(per_camera: Sequence[List[Arrival]]) -> List[Arrival]:
     out = [a for cam in per_camera for a in cam]
     out.sort(key=lambda a: a.t_arrive)
     return out
+
+
+def load_frames(path: Union[str, pathlib.Path]) -> np.ndarray:
+    """Read a recorded frame sequence into a (T, H, W) float32 stack.
+
+    Accepts a ``.npy`` stack, an ``.npz`` archive (first array, or the
+    one named ``frames``), or a directory of per-frame ``.npy`` files
+    (lexicographic order).  RGB stacks (T, H, W, 3) are collapsed to
+    luminance; integer dtypes are rescaled from [0, 255] to [0, 1].
+    """
+    path = pathlib.Path(path)
+    if path.is_dir():
+        files = sorted(path.glob("*.npy"))
+        if not files:
+            raise ValueError(f"no .npy frames in directory {path}")
+        frames = np.stack([np.load(f) for f in files])
+    elif path.suffix == ".npz":
+        with np.load(path) as z:
+            key = "frames" if "frames" in z.files else z.files[0]
+            frames = z[key]
+    else:
+        frames = np.load(path)
+    frames = np.asarray(frames)
+    if frames.ndim == 2:
+        frames = frames[None]
+    if frames.ndim == 4:                      # RGB -> luminance
+        frames = frames.mean(axis=-1)
+    if frames.ndim != 3:
+        raise ValueError(f"expected (T, H, W[, 3]) frames, got shape "
+                         f"{frames.shape}")
+    frames = frames.astype(np.float32)
+    if frames.max(initial=0.0) > 1.5:         # 8-bit recording
+        frames = frames / 255.0
+    return frames

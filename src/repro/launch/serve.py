@@ -9,6 +9,25 @@ unstitch -> per-frame routing.  Timers fire at their scheduled times
 (not at the next arrival), and the executor's frame store is refcounted:
 a frame is evicted the moment every patch cut from it has been routed.
 
+Where arrivals come from is a ``--source`` choice (:mod:`repro.sources`):
+
+* ``trace`` (default) — the edge pipeline runs up front and the
+  pre-shaped arrivals replay through a
+  :class:`~repro.sources.TraceSource`: the historical batch path.
+* ``synthetic`` — live ingestion: ``--cameras`` synthetic cameras run
+  the edge pipeline *during* serving, each shipping patches over its
+  own FIFO uplink.  With ``--ingestion-window`` the engine's backlog
+  feeds back to the cameras, which respond per ``--overload`` by
+  dropping frames or degrading RoI quality; drop/degrade counts are
+  reported at the end.
+* ``file`` — like ``synthetic`` but frames come from a recorded stack
+  (``--frames-path``, ``.npy``/``.npz`` or a directory of ``.npy``).
+
+The whole pipeline is assembled from named factories —
+``make_executor`` / ``make_clock`` / ``make_placement`` /
+``make_source`` — driven by a :class:`~repro.core.config.ServeConfig`;
+the CLI flags below are a direct projection of its fields.
+
 ``--async-device`` switches the executor to submit/complete mode
 (:class:`~repro.core.engine.AsyncDeviceExecutor`): each fired invocation
 is stitched and *dispatched* without blocking, the device works through
@@ -23,17 +42,11 @@ virtual clock replays the trace as fast as events can be processed.
 is split into N independent mesh slices
 (:func:`~repro.launch.mesh.make_worker_meshes`), each backing its own
 async executor, and every fired invocation is routed to a worker by
-``--placement`` (least-outstanding default; ``round`` round-robin;
-``affinity`` reserves worker 0 for the tightest SLO class).  Completions
-harvest out of order across workers, so one slow batch no longer pins
-finished work on other slices.  ``--online-latency`` wraps the profiled
-table in an :class:`~repro.core.latency.OnlineLatencyTable` shared by
-the invokers and the pool, folding observed per-worker completion times
-back into the firing decision (EWMA), so batching tracks real device
-speed instead of the offline profile.  The flag composes with any
-executor mode — at ``--workers 1`` the chosen sync/async executor is
-wrapped in a 1-worker pool that only adds the feedback loop, never a
-change of execution semantics.
+``--placement``.  ``--online-latency`` wraps the profiled table in an
+:class:`~repro.core.latency.OnlineLatencyTable` shared by the invokers
+and the pool, folding observed per-worker completion times back into the
+firing decision (EWMA), so batching tracks real device speed instead of
+the offline profile.
 
 Multi-device: the detector batch runs under a ``NamedSharding``
 data-parallel layout — the stitched canvas batch is padded to the mesh's
@@ -45,6 +58,8 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --frames 40 --slo 1.0
   PYTHONPATH=src python -m repro.launch.serve --async-device --max-inflight 4
   PYTHONPATH=src python -m repro.launch.serve --workers 2 --online-latency
+  PYTHONPATH=src python -m repro.launch.serve --source synthetic \
+    --ingestion-window 32 --overload degrade
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --frames 16 --workers 4
 """
@@ -55,24 +70,21 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import param as param_lib
 from repro.compat import shardingx
 from repro.config import DetectorConfig
-from repro.core import gmm, partitioning, rois
-from repro.core.clock import VirtualClock, WallClock
-from repro.core.engine import (AsyncDeviceExecutor, DeviceExecutor,
-                               ServingEngine, uniform_pool)
+from repro.core.clock import make_clock
+from repro.core.config import ServeConfig
+from repro.core.engine import (ServingEngine, make_executor, uniform_pool)
 from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
 from repro.core.latency import OnlineLatencyTable, measure
 from repro.core.workers import (WorkerPoolExecutor, device_worker_pool,
                                 make_placement)
-from repro.data.synthetic import Scene, preset
-from repro.data.video import shape_arrivals
 from repro.launch.mesh import make_serve_mesh, make_worker_meshes
 from repro.models import detector as detector_lib
 from repro.sharding import ShardingConfig
+from repro.sources import RateProfile, make_source
 
 
 def build_detector(canvas: int = 256):
@@ -88,29 +100,21 @@ def build_detector(canvas: int = 256):
     return cfg, params, serve_fn, rules
 
 
-def generate_stream(scene: Scene, executor: DeviceExecutor, n_frames: int,
-                    canvas: int, slo: float):
-    """Edge pipeline: GMM -> RoIs -> Alg. 1 patches, frames registered in
-    the executor's refcounted store.  Returns the patch stream in
-    generation order."""
-    state = gmm.init_state(scene.cfg.height, scene.cfg.width)
-    stream = []
-    for t, frame, gt in scene.frames(n_frames):
-        state, fg = gmm.update_jit(state, jnp.asarray(frame))
-        if t < 1.0:
-            continue
-        boxes, valid = rois.extract_rois_jit(jnp.asarray(fg))
-        boxes_np = np.asarray(boxes)[np.asarray(valid)]
-        patches = partitioning.partition_host(
-            boxes_np, scene.cfg.width, scene.cfg.height, 4, 4,
-            frame_id=scene.t, t_gen=t, slo=slo)
-        # enclosing rects can exceed zones; clamp to the canvas tile
-        patches = [partitioning.Patch(
-            p.x0, p.y0, min(p.x1, p.x0 + canvas), min(p.y1, p.y0 + canvas),
-            p.frame_id, p.camera_id, p.t_gen, p.slo) for p in patches]
-        executor.add_frame(scene.t, scene.render_rgb(), len(patches))
-        stream.extend(patches)
-    return stream
+def build_source(args, frame_sink):
+    """CLI -> source, through ``make_source``.  ``trace`` runs the same
+    camera pipeline eagerly (no backpressure — the events pre-date the
+    run) and replays the pre-shaped arrivals."""
+    common = dict(n_frames=args.frames, canvas=args.canvas, slo=args.slo,
+                  bandwidth_bps=args.bandwidth_mbps * 1e6,
+                  overload=args.overload, frame_sink=frame_sink,
+                  rate=RateProfile(fps=args.fps))
+    if args.source == "file":
+        return make_source("file", path=args.frames_path, **common)
+    live = dict(scene=args.scene, n_cameras=args.cameras, **common)
+    if args.source == "synthetic":
+        return make_source("synthetic", **live)
+    cam = make_source("synthetic", **live)
+    return make_source("trace", arrivals=list(cam.events(None)))
 
 
 def main(argv=None):
@@ -119,8 +123,27 @@ def main(argv=None):
     p.add_argument("--slo", type=float, default=1.0)
     p.add_argument("--canvas", type=int, default=256)
     p.add_argument("--scene", type=int, default=0)
+    p.add_argument("--fps", type=float, default=10.0)
     p.add_argument("--bandwidth-mbps", type=float, default=40.0,
                    help="uplink shaping for the virtual arrival clock")
+    p.add_argument("--source", choices=("trace", "synthetic", "file"),
+                   default="trace",
+                   help="arrival source: trace replays a pre-generated "
+                        "edge run; synthetic ingests live from --cameras "
+                        "synthetic cameras; file streams --frames-path")
+    p.add_argument("--cameras", type=int, default=1,
+                   help="number of synthetic cameras (merged stream)")
+    p.add_argument("--frames-path",
+                   help="recorded frame stack for --source file "
+                        "(.npy/.npz or a directory of .npy frames)")
+    p.add_argument("--ingestion-window", type=int, default=None,
+                   help="backlog bound, in patches, that live sources "
+                        "throttle against (advisory; default: unbounded)")
+    p.add_argument("--overload", choices=("drop", "degrade", "none"),
+                   default="drop",
+                   help="live-source response when the backlog fills the "
+                        "ingestion window: drop frames, degrade RoI "
+                        "quality (drops at 2x), or ignore")
     p.add_argument("--use-pallas-stitch", action="store_true",
                    help="assemble canvases with the Pallas kernel "
                         "(interpret mode on CPU)")
@@ -155,11 +178,27 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.workers < 1:
         p.error("--workers must be >= 1")
+    if args.cameras < 1:
+        p.error("--cameras must be >= 1")
+    if args.source == "file" and not args.frames_path:
+        p.error("--source file requires --frames-path")
+
+    # every pipeline choice below is a field of this one record
+    config = ServeConfig(
+        max_canvases=4,
+        executor="async_device" if args.async_device or args.workers > 1
+        else "device",
+        use_pallas=args.use_pallas_stitch,
+        max_inflight=args.max_inflight,
+        clock=args.clock, wall_speed=args.wall_speed,
+        n_workers=args.workers, placement=args.placement,
+        online_latency=args.online_latency,
+        source=args.source, ingestion_window=args.ingestion_window)
 
     cfg, params, serve_fn, rules = build_detector(args.canvas)
     m = n = args.canvas
-    if args.workers > 1:
-        meshes = make_worker_meshes(args.workers)
+    if config.n_workers > 1:
+        meshes = make_worker_meshes(config.n_workers)
     else:
         meshes = [make_serve_mesh()]
     mesh = meshes[0]
@@ -180,71 +219,71 @@ def main(argv=None):
                     sync=jax.block_until_ready)
     print("latency table:",
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
-    if args.online_latency:
+    if config.online_latency:
         # one estimator instance, shared between the invoker pool (reads
         # t_slack) and the worker pool (feeds observations back)
         table = OnlineLatencyTable(table)
 
     t_start = time.time()
-    if args.workers > 1:
+    if config.n_workers > 1:
         # a multi-worker pool overlaps by construction: each worker is an
         # async executor over its own mesh slice, sharing one frame store
         executor = device_worker_pool(
-            args.workers,
-            lambda i: AsyncDeviceExecutor(
-                serve_fn, params, m, n,
-                use_pallas=args.use_pallas_stitch,
+            config.n_workers,
+            lambda i: make_executor(
+                config.executor, serve_fn=serve_fn, params=params,
+                canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
                 mesh=meshes[i], rules=rules,
-                max_inflight=args.max_inflight),
-            placement=make_placement(args.placement),
-            estimator=table if args.online_latency else None)
+                max_inflight=config.max_inflight),
+            placement=make_placement(config.placement),
+            estimator=table if config.online_latency else None)
     else:
-        if args.async_device:
-            executor = AsyncDeviceExecutor(serve_fn, params, m, n,
-                                           use_pallas=args.use_pallas_stitch,
-                                           mesh=mesh, rules=rules,
-                                           max_inflight=args.max_inflight)
-        else:
-            executor = DeviceExecutor(serve_fn, params, m, n,
-                                      use_pallas=args.use_pallas_stitch,
-                                      mesh=mesh, rules=rules)
-        if args.online_latency:
+        executor = make_executor(
+            config.executor, serve_fn=serve_fn, params=params,
+            canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
+            mesh=mesh, rules=rules, max_inflight=config.max_inflight)
+        if config.online_latency:
             # a 1-worker pool only adds the estimator feedback loop: the
             # wrapped executor keeps its sync-vs-async semantics, so the
             # flag never changes execution mode behind the user's back
             executor = WorkerPoolExecutor([executor], estimator=table)
-    scene = Scene(preset(args.scene, width=2 * args.canvas,
-                         height=args.canvas))
-    stream = generate_stream(scene, executor, args.frames, args.canvas,
-                             args.slo)
 
-    pool = uniform_pool(m, n, table, max_canvases=4)
-    clock = (WallClock(speed=args.wall_speed) if args.clock == "wall"
-             else VirtualClock())
-    engine = ServingEngine(pool, executor, clock=clock)
-    outcomes = engine.run(shape_arrivals(stream, args.bandwidth_mbps * 1e6))
+    source = build_source(args, frame_sink=executor.add_frame)
+    pool = uniform_pool(m, n, table, max_canvases=config.max_canvases)
+    engine = ServingEngine(pool, executor,
+                           clock=make_clock(config.clock,
+                                            speed=config.wall_speed),
+                           ingestion_window=config.ingestion_window)
+    outcomes = engine.serve(source)
 
+    stats = source.stats()
     violated = sum(o.violated for o in outcomes)
-    if args.workers > 1:
-        overlap = (f"{args.workers} worker(s), {args.placement} placement, "
-                   f"in-flight high water {engine.inflight_high_water}/"
+    if config.n_workers > 1:
+        overlap = (f"{config.n_workers} worker(s), {config.placement} "
+                   f"placement, in-flight high water "
+                   f"{engine.inflight_high_water}/"
                    f"{getattr(executor, 'max_inflight', '-')}")
     elif args.async_device:
         overlap = (f"async, in-flight high water "
-                   f"{engine.inflight_high_water}/{args.max_inflight}")
+                   f"{engine.inflight_high_water}/{config.max_inflight}")
     else:
         overlap = "sync"
-    if args.online_latency:
+    if config.online_latency:
         overlap += ", online latency"
-    print(f"served {len(stream)} patches in {executor.n_invocations} "
-          f"invocations ({overlap}, {args.clock} clock, "
-          f"{executor.n_sharded} data-parallel over "
+    print(f"served {stats.patches_emitted} patches in "
+          f"{executor.n_invocations} invocations ({overlap}, "
+          f"{config.clock} clock, {executor.n_sharded} data-parallel over "
           f"data={axis_sizes.get('data', 1)}), "
           f"routed {executor.n_detections} detections + "
           f"{executor.evidence_bytes / 1e6:.2f} MB patch evidence back to "
           f"frames, {violated} SLO violations "
           f"({len(executor.frames)} frames still held, "
           f"{time.time()-t_start:.1f}s wall)")
+    print(f"source {stats.kind}: {stats.frames_total} frames, "
+          f"{stats.frames_dropped} dropped, {stats.frames_degraded} "
+          f"degraded, backlog high water {engine.backlog_high_water}"
+          + (f"/{config.ingestion_window}"
+             if config.ingestion_window else ""))
     if isinstance(executor, WorkerPoolExecutor):
         for ws in executor.worker_stats():
             drift = (f", drift {ws['drift']}x" if "drift" in ws else "")

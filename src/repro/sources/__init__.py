@@ -1,0 +1,40 @@
+"""Pluggable arrival sources for the serving engine.
+
+Where arrivals come from is a policy, not a property of the engine:
+trace replay (:class:`TraceSource` — the historical path, event-for-
+event identical to ``shape_arrivals`` + ``merge_arrivals``), live
+synthetic cameras running the full edge pipeline
+(:class:`SyntheticCameraSource`), or recorded frame sequences
+(:class:`FileStreamSource`).  All yield the same
+:class:`~repro.data.video.Arrival` events; the engine's
+``serve(source)`` pulls them and hands the source its backpressure
+handle (``backlog()`` / ``overloaded()`` against the ingestion window).
+
+Construct by name via :func:`make_source` — ``"trace"``,
+``"synthetic"`` (``n_cameras > 1`` merges per-camera streams), or
+``"file"`` — mirroring the other pipeline factories.
+"""
+from repro.sources.base import (MergedSource, Source, SourceStats,
+                                make_source, register_source)
+from repro.sources.camera import (EdgePipeline, LiveSource, RateProfile,
+                                  SyntheticCameraSource, synthetic_source)
+from repro.sources.filestream import FileStreamSource
+from repro.sources.trace import TraceSource
+
+register_source("trace", TraceSource)
+register_source("synthetic", synthetic_source)
+register_source("file", FileStreamSource)
+
+__all__ = [
+    "EdgePipeline",
+    "FileStreamSource",
+    "LiveSource",
+    "MergedSource",
+    "RateProfile",
+    "Source",
+    "SourceStats",
+    "SyntheticCameraSource",
+    "TraceSource",
+    "make_source",
+    "register_source",
+]

@@ -1,0 +1,128 @@
+"""Source protocol, stats record, and the source registry.
+
+A *source* is where arrivals come from: it yields the same
+:class:`~repro.data.video.Arrival` events the serving engine consumes,
+whether they are replayed from a pre-shaped trace
+(:class:`~repro.sources.trace.TraceSource`), produced live by a
+synthetic camera running the full edge pipeline
+(:class:`~repro.sources.camera.SyntheticCameraSource`), or decoded from
+a recorded frame sequence
+(:class:`~repro.sources.filestream.FileStreamSource`).
+
+The contract (:class:`Source`) is deliberately tiny:
+
+* ``events(engine)`` — an iterator of arrivals in non-decreasing
+  ``t_arrive`` order.  The engine passes *itself* in, which is the
+  backpressure channel: a live source reads ``engine.overloaded()`` /
+  ``engine.backlog()`` between frames and throttles (drop frames,
+  degrade RoI quality); a trace source ignores it.
+* ``stats()`` — a :class:`SourceStats` record of what the source did:
+  bandwidth accounting (bytes, transmission seconds) plus the
+  drop/degrade counters that ``Results.summary()`` surfaces.
+
+Sources are constructed by name through :func:`make_source`, mirroring
+``make_placement`` / ``make_clock`` / ``make_executor``, so
+``ServeConfig.source`` stays a serializable named reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, Iterator, List, Protocol, Sequence, \
+    runtime_checkable
+
+from repro.data.video import Arrival
+
+
+@dataclasses.dataclass
+class SourceStats:
+    """What a source did, for ``Results`` assembly and ``summary()``.
+
+    ``frames_total`` counts frames the source *considered* (including
+    dropped ones); ``patches_emitted`` equals the number of arrivals
+    yielded.  For a trace source the frame counters are zero — a trace
+    has no frame loop to drop from.
+    """
+
+    kind: str = "source"
+    arrivals: int = 0
+    bytes_sent: float = 0.0
+    transmission_seconds: float = 0.0
+    frames_total: int = 0
+    frames_dropped: int = 0
+    frames_degraded: int = 0
+    patches_emitted: int = 0
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def add(self, other: "SourceStats") -> None:
+        """Accumulate another source's counters (multi-camera merge)."""
+        self.arrivals += other.arrivals
+        self.bytes_sent += other.bytes_sent
+        self.transmission_seconds += other.transmission_seconds
+        self.frames_total += other.frames_total
+        self.frames_dropped += other.frames_dropped
+        self.frames_degraded += other.frames_degraded
+        self.patches_emitted += other.patches_emitted
+
+
+@runtime_checkable
+class Source(Protocol):
+    """What :meth:`~repro.core.engine.ServingEngine.serve` needs."""
+
+    def events(self, engine) -> Iterator[Arrival]:
+        """Yield arrivals in non-decreasing ``t_arrive`` order.  The
+        engine is the backpressure handle: read ``engine.overloaded()``
+        between frames to throttle under load."""
+
+    def stats(self) -> SourceStats:
+        """Accounting for the run so far (valid mid-stream and after)."""
+
+
+class MergedSource:
+    """Several per-camera sources merged into one arrival stream.
+
+    Each member's event stream is sorted by ``t_arrive`` (a FIFO uplink
+    guarantees that per camera); the merge interleaves them into one
+    globally sorted stream — the streaming counterpart of
+    :func:`~repro.data.video.merge_arrivals`.  Backpressure reaches
+    every member: each receives the engine handle and throttles its own
+    camera independently.
+    """
+
+    def __init__(self, sources: Sequence[Source]):
+        if not sources:
+            raise ValueError("MergedSource needs at least one source")
+        self.sources = list(sources)
+
+    def events(self, engine) -> Iterator[Arrival]:
+        streams = [s.events(engine) for s in self.sources]
+        return heapq.merge(*streams, key=lambda a: a.t_arrive)
+
+    def stats(self) -> SourceStats:
+        total = SourceStats(kind=f"merged[{len(self.sources)}]")
+        for s in self.sources:
+            total.add(s.stats())
+        return total
+
+
+_SOURCES: Dict[str, Callable[..., Source]] = {}
+
+
+def register_source(name: str, factory: Callable[..., Source]) -> None:
+    """Register a source factory under ``name`` for :func:`make_source`
+    (and thus for ``ServeConfig.source`` / ``--source``)."""
+    _SOURCES[name] = factory
+
+
+def make_source(name: str, **cfg) -> Source:
+    """Source-name -> instance (``trace`` | ``synthetic`` | ``file``),
+    mirroring ``make_placement`` / ``make_clock`` / ``make_executor``.
+    ``cfg`` forwards to the registered factory."""
+    try:
+        factory = _SOURCES[name]
+    except KeyError:
+        raise ValueError(f"unknown source {name!r}; "
+                         f"choose from {sorted(_SOURCES)}") from None
+    return factory(**cfg)

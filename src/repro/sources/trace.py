@@ -1,0 +1,58 @@
+"""Trace replay as a source: the historical arrival path, boxed.
+
+``TraceSource`` wraps the exact pipeline ``TangramScheduler.run`` always
+used — :func:`~repro.data.video.shape_arrivals` per camera (FIFO uplink)
+then :func:`~repro.data.video.merge_arrivals` across cameras — behind
+the :class:`~repro.sources.base.Source` protocol.  Replaying a trace
+through ``engine.serve(TraceSource(...))`` is event-for-event identical
+to ``engine.run(merge_arrivals([shape_arrivals(s, bw) for s in
+streams]))``; the boundary-identity test pins this, which is what keeps
+every benchmark number unchanged under the source API.
+
+A trace ignores backpressure by design: the events already happened, and
+replay semantics (virtual clock) require ingesting all of them.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Sequence
+
+from repro.core.partitioning import Patch
+from repro.data.video import (Arrival, merge_arrivals, shape_arrivals)
+from repro.sources.base import SourceStats
+
+
+class TraceSource:
+    """Replay per-camera patch streams (or pre-shaped arrivals).
+
+    Exactly one of:
+
+    * ``streams`` + ``bandwidth_bps`` — per-camera patch lists in
+      generation order, shaped through one FIFO uplink each;
+    * ``arrivals`` — an already-shaped, already-merged arrival list
+      (sorted by ``t_arrive``), replayed verbatim.
+    """
+
+    def __init__(self, streams: Optional[Sequence[Sequence[Patch]]] = None,
+                 bandwidth_bps: Optional[float] = None,
+                 arrivals: Optional[Sequence[Arrival]] = None):
+        if (streams is None) == (arrivals is None):
+            raise ValueError("pass exactly one of streams= or arrivals=")
+        if streams is not None:
+            if bandwidth_bps is None:
+                raise ValueError("streams= requires bandwidth_bps=")
+            per_cam = [shape_arrivals(s, bandwidth_bps) for s in streams]
+            self.arrivals: List[Arrival] = merge_arrivals(per_cam)
+        else:
+            self.arrivals = list(arrivals)
+
+    def events(self, engine) -> Iterator[Arrival]:
+        return iter(self.arrivals)
+
+    def stats(self) -> SourceStats:
+        return SourceStats(
+            kind="trace",
+            arrivals=len(self.arrivals),
+            bytes_sent=sum(a.n_bytes for a in self.arrivals),
+            transmission_seconds=sum(a.t_arrive - a.patch.t_gen
+                                     for a in self.arrivals),
+            patches_emitted=len(self.arrivals))

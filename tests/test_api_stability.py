@@ -1,0 +1,116 @@
+"""Public-API stability: the exported surface is a contract.
+
+A snapshot of the names downstream code (benchmarks, the serve driver,
+sibling PRs) imports from each public module, plus the registry contents
+behind the named-reference factories.  Renaming or dropping any of these
+is a breaking change and must update this file *deliberately* — the test
+failing is the review speed-bump.
+
+New names may be added freely (the assertions are superset checks);
+removals and renames fail.
+"""
+import dataclasses
+
+import pytest
+
+#: module -> names that must stay importable from it
+PUBLIC_API = {
+    "repro.core.engine": {
+        "AsyncDeviceExecutor", "DeviceExecutor", "ExecHandle", "Invocation",
+        "InvokerPool", "PatchOutcome", "Results", "ServingEngine",
+        "SimExecutor", "make_executor", "shard_canvases", "slo_class",
+        "uniform_pool",
+    },
+    "repro.core.scheduler": {
+        "PatchOutcome", "Results", "ServeConfig", "TangramScheduler",
+    },
+    "repro.core.config": {
+        "ServeConfig", "make_classify", "register_classify",
+    },
+    "repro.core.clock": {
+        "Clock", "VirtualClock", "WallClock", "make_clock",
+    },
+    "repro.core.latency": {
+        "LatencyTable", "OnlineLatencyTable", "latency_from_dict",
+        "measure",
+    },
+    "repro.core.workers": {
+        "WorkerPoolExecutor", "device_worker_pool", "make_placement",
+    },
+    "repro.core.rois": {
+        "RoIConfig", "extract_rois", "extract_rois_jit",
+    },
+    "repro.core.adaptive": {
+        "AIMDConfig", "adaptive_uniform_pool",
+    },
+    "repro.data.video": {
+        "Arrival", "Uplink", "load_frames", "merge_arrivals",
+        "patch_bytes", "shape_arrivals",
+    },
+    "repro.sources": {
+        "EdgePipeline", "FileStreamSource", "LiveSource", "MergedSource",
+        "RateProfile", "Source", "SourceStats", "SyntheticCameraSource",
+        "TraceSource", "make_source", "register_source",
+    },
+}
+
+#: factory -> names that must stay registered (ServeConfig's named
+#: references and the CLI choices resolve through these)
+REGISTRIES = {
+    "source": ("trace", "synthetic", "file"),
+    "clock": ("virtual", "wall"),
+    "executor": ("sim", "device", "async_device"),
+    "placement": ("least", "round", "affinity"),
+}
+
+#: the ServeConfig record itself is serialized into benchmark JSON;
+#: field renames/removals break old reports' from_dict
+SERVE_CONFIG_FIELDS = {
+    "max_canvases", "incremental", "classify", "adaptive",
+    "executor", "use_pallas", "max_inflight", "clock", "wall_speed",
+    "check_invariants", "n_workers", "placement", "online_latency",
+    "source", "ingestion_window",
+}
+
+
+@pytest.mark.parametrize("module_name", sorted(PUBLIC_API))
+def test_module_exports(module_name):
+    import importlib
+    mod = importlib.import_module(module_name)
+    missing = {n for n in PUBLIC_API[module_name] if not hasattr(mod, n)}
+    assert not missing, (f"{module_name} lost public names: "
+                         f"{sorted(missing)}")
+
+
+def test_source_registry():
+    from repro.sources.base import _SOURCES
+    assert set(REGISTRIES["source"]) <= set(_SOURCES)
+
+
+def test_clock_registry():
+    from repro.core.clock import _CLOCKS
+    assert set(REGISTRIES["clock"]) <= set(_CLOCKS)
+
+
+def test_executor_registry():
+    from repro.core.engine import _EXECUTORS
+    assert set(REGISTRIES["executor"]) <= set(_EXECUTORS)
+
+
+def test_placement_registry():
+    from repro.core.workers import make_placement
+    for name in REGISTRIES["placement"]:
+        assert make_placement(name) is not None
+
+
+def test_serve_config_fields_stable():
+    from repro.core.config import ServeConfig
+    fields = {f.name for f in dataclasses.fields(ServeConfig)}
+    missing = SERVE_CONFIG_FIELDS - fields
+    assert not missing, f"ServeConfig lost fields: {sorted(missing)}"
+
+
+def test_sources_all_is_accurate():
+    import repro.sources as sources
+    for name in sources.__all__:
+        assert hasattr(sources, name), name

@@ -1,0 +1,194 @@
+"""ServeConfig: the one pipeline record, its shim, and its round-trips.
+
+Covers the api_redesign guarantees:
+
+* the legacy ``TangramScheduler(**kwargs)`` surface still works, warns
+  exactly once per process (DeprecationWarning), and produces runs
+  identical to the equivalent ``config=ServeConfig(...)``;
+* configs and latency tables serialize to plain JSON (named references,
+  no callables/meshes) and rebuild exactly — the benchmark-logging
+  bugfix;
+* the factory quartet (``make_clock`` / ``make_executor`` /
+  ``make_classify`` / ``make_source``) resolves names and rejects
+  unknowns.
+"""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import scheduler as scheduler_mod
+from repro.core.adaptive import AIMDConfig
+from repro.core.clock import VirtualClock, WallClock, make_clock
+from repro.core.config import ServeConfig, make_classify, register_classify
+from repro.core.engine import SimExecutor, make_executor, slo_class
+from repro.core.latency import (LatencyTable, OnlineLatencyTable,
+                                latency_from_dict)
+from repro.core.partitioning import Patch
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform
+
+TABLE = LatencyTable({1: (0.05, 0.005), 2: (0.08, 0.008), 4: (0.12, 0.01)})
+
+
+def streams(n_cams=2, n=20):
+    rng = np.random.default_rng(0)
+    return [[Patch(0, 0, int(rng.integers(16, 96)), int(rng.integers(16, 96)),
+                   frame_id=i, camera_id=cam, t_gen=i * 0.1, slo=1.0)
+             for i in range(n)] for cam in range(n_cams)]
+
+
+@pytest.fixture
+def fresh_warning_flag(monkeypatch):
+    """Each test sees the warn-once machinery as a fresh process."""
+    monkeypatch.setattr(scheduler_mod, "_legacy_warned", False)
+
+
+# -------------------------------------------------------- deprecation shim ----
+
+def test_legacy_kwargs_warn_once_and_forward(fresh_warning_flag):
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        s = TangramScheduler(128, 128, TABLE, Platform(TABLE),
+                             max_canvases=4, classify="slo", n_workers=2)
+        dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+        assert len(dep) == 1
+        assert "ServeConfig" in str(dep[0].message)
+    # forwarded onto the config record
+    assert s.config.max_canvases == 4
+    assert s.config.classify == "slo"
+    assert s.config.n_workers == 2
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        TangramScheduler(128, 128, TABLE, Platform(TABLE), max_canvases=2)
+        assert not [x for x in w
+                    if issubclass(x.category, DeprecationWarning)]
+
+
+def test_legacy_run_identical_to_config_run(fresh_warning_flag):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = TangramScheduler(128, 128, TABLE, Platform(TABLE),
+                               max_canvases=4, classify=slo_class)
+    new = TangramScheduler(128, 128, TABLE, Platform(TABLE),
+                           config=ServeConfig(max_canvases=4,
+                                              classify="slo"))
+    ss = streams()
+    key = lambda r: [(o.patch.frame_id, o.t_arrive, o.t_finish)
+                     for o in r.outcomes]
+    r_old, r_new = old.run(ss, 20e6), new.run(ss, 20e6)
+    assert key(r_old) == key(r_new)
+    assert r_old.invocations == r_new.invocations
+    assert r_old.bytes_sent == r_new.bytes_sent
+
+
+def test_legacy_instance_values_become_overrides(fresh_warning_flag):
+    """Callable classify / Clock instances can't live in a config — the
+    shim honours them as direct overrides instead."""
+    clk = VirtualClock(t0=3.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s = TangramScheduler(128, 128, TABLE, Platform(TABLE),
+                             classify=lambda p: 0, clock=clk)
+    assert s.clock is clk
+    assert s.config.classify is None      # not expressible -> not recorded
+    assert s._clock() is clk
+
+
+def test_unknown_kwarg_raises(fresh_warning_flag):
+    with pytest.raises(TypeError, match="unexpected"):
+        TangramScheduler(128, 128, TABLE, Platform(TABLE), max_canvas=4)
+
+
+# ------------------------------------------------------------ serialization ----
+
+def test_config_json_roundtrip():
+    cfg = ServeConfig(max_canvases=4, classify="slo",
+                      adaptive=AIMDConfig(), executor="async_device",
+                      clock="wall", wall_speed=25.0, n_workers=2,
+                      placement="round", online_latency=True,
+                      source="synthetic", ingestion_window=32)
+    blob = json.dumps(cfg.to_dict())
+    assert ServeConfig.from_dict(json.loads(blob)) == cfg
+    # nothing non-JSON leaks into the record
+    assert all(isinstance(v, (int, float, str, bool, dict, type(None)))
+               for v in cfg.to_dict().values())
+
+
+def test_config_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ServeConfig"):
+        ServeConfig.from_dict({"max_canvases": 4, "max_canvas": 2})
+
+
+def test_config_replace_sweeps():
+    base = ServeConfig()
+    swept = [base.replace(n_workers=n) for n in (1, 2, 4)]
+    assert [c.n_workers for c in swept] == [1, 2, 4]
+    assert base.n_workers == 1            # frozen: base untouched
+    assert dataclasses.replace(base, clock="wall").clock == "wall"
+
+
+def test_config_validation():
+    for bad in (dict(n_workers=0), dict(max_inflight=0),
+                dict(wall_speed=0.0), dict(ingestion_window=0)):
+        with pytest.raises(ValueError):
+            ServeConfig(**bad)
+
+
+def test_latency_table_json_roundtrip():
+    blob = json.dumps(TABLE.to_dict())
+    t2 = latency_from_dict(json.loads(blob))
+    assert isinstance(t2, LatencyTable)
+    assert t2.table == TABLE.table        # int keys restored
+    assert t2.mu_sigma(2) == TABLE.mu_sigma(2)
+
+
+def test_online_latency_table_json_roundtrip():
+    online = OnlineLatencyTable(TABLE)
+    online.observe(2, 0.5)                # learned state is NOT serialized
+    blob = json.dumps(online.to_dict())
+    t2 = latency_from_dict(json.loads(blob))
+    assert isinstance(t2, OnlineLatencyTable)
+    assert t2.seed.table == TABLE.table
+    # deserialized estimator starts at the seed profile
+    assert t2.mu_sigma(2) == TABLE.mu_sigma(2)
+    assert online.mu_sigma(2) != TABLE.mu_sigma(2)
+
+
+def test_latency_from_dict_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="kind"):
+        latency_from_dict({"kind": "mystery"})
+
+
+# ---------------------------------------------------------------- factories ----
+
+def test_make_clock_by_name():
+    assert isinstance(make_clock("virtual"), VirtualClock)
+    w = make_clock("wall", speed=50.0)
+    assert isinstance(w, WallClock) and w.speed == 50.0
+    # one config dict drives either: virtual ignores speed
+    assert isinstance(make_clock("virtual", speed=50.0), VirtualClock)
+    with pytest.raises(ValueError, match="unknown clock"):
+        make_clock("sundial")
+
+
+def test_make_executor_by_name():
+    ex = make_executor("sim", platform=Platform(TABLE))
+    assert isinstance(ex, SimExecutor)
+    # max_inflight is dropped for sync executors (shared config dict)
+    ex2 = make_executor("sim", platform=Platform(TABLE), max_inflight=4)
+    assert isinstance(ex2, SimExecutor)
+    with pytest.raises(ValueError, match="unknown executor"):
+        make_executor("gpu-farm")
+
+
+def test_make_classify_by_name():
+    assert make_classify(None) is None
+    assert make_classify("slo") is slo_class
+    with pytest.raises(ValueError, match="unknown classifier"):
+        make_classify("priority")
+    register_classify("camera", lambda p: p.camera_id)
+    assert make_classify("camera")(Patch(0, 0, 8, 8, camera_id=3)) == 3

@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import gmm, partitioning, rois
 from repro.core.latency import detector_latency_model
-from repro.core.scheduler import TangramScheduler
+from repro.core.scheduler import ServeConfig, TangramScheduler
 from repro.data.synthetic import Scene, preset
 from repro.serverless.platform import Platform, PlatformConfig
 
@@ -37,7 +37,8 @@ def test_full_pipeline_meets_slo_budget():
     model = detector_latency_model(256, 256)
     table = model.build_table(16)
     plat = Platform(table, PlatformConfig())
-    sched = TangramScheduler(256, 256, table, plat, check_invariants=True)
+    sched = TangramScheduler(256, 256, table, plat,
+                             config=ServeConfig(check_invariants=True))
     res = sched.run(streams, bandwidth_bps=20e6)
     assert res.n_patches == sum(len(s) for s in streams)
     assert res.violation_rate <= 0.05          # the paper's headline claim
@@ -69,6 +70,43 @@ def test_serve_driver_worker_pool_online_latency_smoke():
     serve.main(["--frames", "10", "--canvas", "128", "--slo", "5.0",
                 "--workers", "2", "--placement", "least",
                 "--online-latency"])
+
+
+def test_serve_driver_live_synthetic_virtual_clock():
+    """launch/serve.py --source synthetic: live edge ingestion (GMM ->
+    RoIs -> Alg. 1 during serving) against the real jit'd detector, with
+    the ingestion window + degrade policy active, on the virtual clock."""
+    from repro.launch import serve
+    serve.main(["--frames", "12", "--canvas", "128", "--slo", "5.0",
+                "--source", "synthetic", "--ingestion-window", "64",
+                "--overload", "degrade"])
+
+
+def test_serve_driver_live_synthetic_wall_clock():
+    """The same live path on a compressed wall clock with the async
+    executor: arrivals are produced in real (scaled) time while device
+    work overlaps — the end-to-end live serving configuration."""
+    from repro.launch import serve
+    serve.main(["--frames", "10", "--canvas", "128", "--slo", "5.0",
+                "--source", "synthetic", "--async-device",
+                "--max-inflight", "2", "--clock", "wall",
+                "--wall-speed", "50", "--ingestion-window", "64"])
+
+
+def test_serve_driver_live_file_source(tmp_path):
+    """launch/serve.py --source file: a recorded frame stack through the
+    live edge pipeline."""
+    from repro.data.synthetic import Scene, preset
+    from repro.launch import serve
+    sc = Scene(preset(0, width=256, height=128))
+    frames = []
+    for _ in range(10):
+        sc.step()
+        frames.append(sc.render())
+    np.save(tmp_path / "clip.npy", np.stack(frames))
+    serve.main(["--frames", "10", "--canvas", "128", "--slo", "5.0",
+                "--source", "file", "--frames-path",
+                str(tmp_path / "clip.npy")])
 
 
 def test_train_driver_reduced_detector():
