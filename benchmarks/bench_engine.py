@@ -300,6 +300,78 @@ def bench_source_ingestion(smoke: bool) -> dict:
             "config": config.to_dict()}
 
 
+def bench_mixed_model(smoke: bool) -> dict:
+    """Multi-tenant serving economics: two SLO classes on two models,
+    model-affinity placement + per-model warm pools vs model-oblivious
+    least-outstanding on identical platform capacity.
+
+    Each of the two platform shards has exactly one instance, so where
+    a batch lands decides which weights are resident: oblivious routing
+    interleaves both models on both workers and pays a weight swap on
+    nearly every switch, while ``placement="model"`` parks each model
+    on its home worker and loads weights once.  Deterministic tables
+    (sigma 0) keep the comparison exact.
+    """
+    from repro.core.config import ServeConfig
+    from repro.core.models import ModelSpec, register_model
+
+    register_model(ModelSpec(
+        name="bench-fast", canvas_m=CANVAS, canvas_n=CANVAS,
+        weight_bytes=2e9,
+        table=LatencyTable({1: (0.04, 0.0), 4: (0.10, 0.0),
+                            8: (0.16, 0.0)})))
+    register_model(ModelSpec(
+        name="bench-heavy", canvas_m=CANVAS, canvas_n=CANVAS,
+        weight_bytes=8e9,
+        table=LatencyTable({1: (0.25, 0.0), 4: (0.60, 0.0),
+                            8: (1.00, 0.0)})))
+
+    rng = np.random.default_rng(7)
+    n_frames = 15 if smoke else 60
+    streams = []
+    for cam, slo in enumerate((0.5, 2.0)):
+        patches = []
+        for f in range(n_frames):
+            t = f / 10.0
+            for _ in range(int(rng.integers(1, 5))):
+                patches.append(Patch(0, 0, int(rng.integers(16, 160)),
+                                     int(rng.integers(16, 160)),
+                                     frame_id=f, camera_id=cam,
+                                     t_gen=t, slo=slo))
+        streams.append(patches)
+
+    def run(placement):
+        cfg = ServeConfig(classify="slo", n_workers=2, placement=placement,
+                          model_map={"0.5": "bench-fast",
+                                     "2.0": "bench-heavy"})
+        table = LatencyTable({1: (0.1, 0.0)})
+        plat = Platform(table, PlatformConfig(max_instances=2, pre_warm=2,
+                                              keep_alive_s=60.0,
+                                              container_cold_s=0.25))
+        sched = TangramScheduler(CANVAS, CANVAS, table, plat, config=cfg)
+        res = sched.run(streams, bandwidth_bps=20e6)
+        models = res.model_stats or {}
+        return {"placement": placement,
+                "violation_rate": round(res.violation_rate, 4),
+                "cold_starts": sum(r.get("cold_starts", 0)
+                                   for r in models.values()),
+                "weight_loads": sum(r.get("weight_loads", 0)
+                                    for r in models.values()),
+                "load_seconds": round(sum(r.get("load_seconds", 0.0)
+                                          for r in models.values()), 4),
+                "models": models, "config": cfg.to_dict()}
+
+    affinity = run("model")
+    oblivious = run("least")
+    aff_cold = affinity["cold_starts"] + affinity["weight_loads"]
+    obl_cold = oblivious["cold_starts"] + oblivious["weight_loads"]
+    return {"affinity": affinity, "oblivious": oblivious,
+            "cold_plus_loads_saved": obl_cold - aff_cold,
+            "affinity_wins": (aff_cold < obl_cold
+                              and affinity["violation_rate"]
+                              <= oblivious["violation_rate"])}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -346,6 +418,17 @@ def main(argv=None):
               f"({si['dropped']} dropped, {si['degraded']} degraded, "
               f"backlog high water {si['backlog_high_water']}/"
               f"{si['ingestion_window']})")
+
+    report["mixed_model"] = bench_mixed_model(args.smoke)
+    mm = report["mixed_model"]
+    print(f"mixed model: affinity {mm['affinity']['weight_loads']} loads / "
+          f"{mm['affinity']['cold_starts']} colds at "
+          f"{mm['affinity']['violation_rate']} violations vs oblivious "
+          f"{mm['oblivious']['weight_loads']} loads / "
+          f"{mm['oblivious']['cold_starts']} colds at "
+          f"{mm['oblivious']['violation_rate']} "
+          f"(saved {mm['cold_plus_loads_saved']}, "
+          f"wins={mm['affinity_wins']})")
 
     report["worker_scaling"] = bench_worker_scaling(args.smoke)
     ws = report["worker_scaling"]

@@ -82,8 +82,10 @@ class AdaptiveInvokerPool(InvokerPool):
 
     def __init__(self, make_invoker: Callable[[object], SLOAwareInvoker],
                  classify: Callable[[Patch], object] = slo_class,
-                 cfg: Optional[AIMDConfig] = None):
-        super().__init__(make_invoker, classify)
+                 cfg: Optional[AIMDConfig] = None,
+                 model_of: Optional[Callable[[object],
+                                             Optional[str]]] = None):
+        super().__init__(make_invoker, classify, model_of=model_of)
         self.cfg = cfg or AIMDConfig()
         self.state: Dict[object, ClassState] = {}
 
@@ -156,24 +158,30 @@ class ClassSpec:
 def pool_from_specs(specs: Mapping[object, ClassSpec],
                     default: Optional[ClassSpec] = None,
                     classify: Callable[[Patch], object] = slo_class,
-                    adaptive: Optional[AIMDConfig] = None) -> InvokerPool:
+                    adaptive: Optional[AIMDConfig] = None,
+                    model_of: Optional[Callable[[object],
+                                                Optional[str]]] = None
+                    ) -> InvokerPool:
     """Pool with per-class canvas geometry, optionally AIMD-controlled.
 
     ``specs[key]`` builds class ``key``'s invoker; unknown keys fall back
-    to ``default`` (a KeyError surfaces a missing class early when no
-    default is given).  Pass an :class:`AIMDConfig` to put the
-    completion-feedback controller on top of every class.
+    to ``default`` (the unified unknown-name ``ValueError`` surfaces a
+    missing class early when no default is given).  Pass an
+    :class:`AIMDConfig` to put the completion-feedback controller on top
+    of every class; ``model_of`` tags fired invocations with their
+    class's registry model (see :class:`~repro.core.engine.InvokerPool`).
     """
     def make(key):
         spec = specs.get(key, default)
         if spec is None:
-            raise KeyError(f"no ClassSpec for SLO class {key!r} "
-                           f"and no default given")
+            from repro.core.registry import unknown_name
+            raise unknown_name("SLO class", key, specs)
         return spec.build()
 
     if adaptive is not None:
-        return AdaptiveInvokerPool(make, classify, adaptive)
-    return InvokerPool(make, classify)
+        return AdaptiveInvokerPool(make, classify, adaptive,
+                                   model_of=model_of)
+    return InvokerPool(make, classify, model_of=model_of)
 
 
 def adaptive_uniform_pool(canvas_m: int, canvas_n: int,

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import time
 from typing import Callable, Protocol, runtime_checkable
+from repro.core.registry import lookup
 
 
 @runtime_checkable
@@ -108,11 +109,7 @@ def make_clock(name: str, **cfg) -> Clock:
     constructor (e.g. ``make_clock("wall", speed=100.0)``); ``speed`` is
     accepted—and ignored—for the virtual clock so one config dict can
     drive either name."""
-    try:
-        cls = _CLOCKS[name]
-    except KeyError:
-        raise ValueError(f"unknown clock {name!r}; "
-                         f"choose from {sorted(_CLOCKS)}") from None
+    cls = lookup("clock", _CLOCKS, name)
     if cls is VirtualClock:
         cfg = {k: v for k, v in cfg.items() if k != "speed"}
     return cls(**cfg)

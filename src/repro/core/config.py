@@ -8,10 +8,10 @@ designed so a config can be **logged into benchmark JSON and rebuilt**
 from it:
 
 * every field is a plain value or a *named reference* — classifiers,
-  placements, clocks, executors and sources are referred to by their
-  registry names (``make_classify`` / ``make_placement`` /
-  ``make_clock`` / ``make_executor`` / ``make_source`` resolve them),
-  never by callables or meshes;
+  placements, clocks, executors, sources and models are referred to by
+  their registry names (``make_classify`` / ``make_placement`` /
+  ``make_clock`` / ``make_executor`` / ``make_source`` /
+  ``make_model`` resolve them), never by callables or meshes;
 * ``to_dict()`` / ``from_dict()`` round-trip through ``json`` exactly
   (nested ``AIMDConfig`` included), and ``dataclasses.replace`` works
   for one-field sweeps.
@@ -22,10 +22,11 @@ The old keyword arguments still work through a deprecation shim on
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 from repro.core.adaptive import AIMDConfig
 from repro.core.partitioning import Patch
+from repro.core.registry import lookup
 
 #: classifier registry: named references for the `classify` field.  None
 #: (the paper's single shared queue) is spelled as the name ``None`` /
@@ -47,11 +48,7 @@ def make_classify(name: Optional[str]
     if not _CLASSIFIERS:
         from repro.core.engine import slo_class
         _CLASSIFIERS["slo"] = slo_class
-    try:
-        return _CLASSIFIERS[name]
-    except KeyError:
-        raise ValueError(f"unknown classifier {name!r}; "
-                         f"choose from {sorted(_CLASSIFIERS)}") from None
+    return lookup("classifier", _CLASSIFIERS, name)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +75,16 @@ class ServeConfig:
 
     # --- worker pool ----------------------------------------------------
     n_workers: int = 1
-    placement: Optional[str] = None  # least | round | affinity (None: least)
+    placement: Optional[str] = None  # least | round | affinity | model
+                                     # (None: least)
+
+    # --- models (registry names; see repro.core.models) -----------------
+    model: Optional[str] = None      # default model for every class (None:
+                                     # the implicit single-model pipeline)
+    model_map: Optional[Dict[str, str]] = None
+                                     # SLO class (as str) -> model name;
+                                     # classes not in the map fall back to
+                                     # ``model``
 
     # --- latency estimator ----------------------------------------------
     online_latency: bool = False     # OnlineLatencyTable feedback loop
@@ -102,6 +108,31 @@ class ServeConfig:
 
     def replace(self, **changes) -> "ServeConfig":
         return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------ model routing ----
+
+    @property
+    def multi_model(self) -> bool:
+        """True when model identity is threaded explicitly (a default
+        model and/or a class->model map is configured)."""
+        return self.model is not None or bool(self.model_map)
+
+    def resolve_model(self, key: object) -> Optional[str]:
+        """SLO class key -> registry model name.  Class keys are matched
+        against ``model_map`` by their ``str()`` (JSON object keys are
+        strings); misses fall back to the default ``model``."""
+        if self.model_map:
+            name = self.model_map.get(str(key))
+            if name is not None:
+                return name
+        return self.model
+
+    def model_names(self) -> list:
+        """Every registry model this config references (sorted)."""
+        names = set(self.model_map.values()) if self.model_map else set()
+        if self.model is not None:
+            names.add(self.model)
+        return sorted(names)
 
     # ------------------------------------------------------ serialization ----
 

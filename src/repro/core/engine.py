@@ -106,6 +106,7 @@ class PatchOutcome:
     t_arrive: float
     t_submit: float
     t_finish: float
+    model: Optional[str] = None   # registry model that served the patch
 
     @property
     def latency(self) -> float:
@@ -139,6 +140,9 @@ class Results:
                                       # (repro.sources SourceStats.to_dict():
                                       # frames dropped/degraded under
                                       # backpressure, arrivals, bytes)
+    model_stats: Optional[dict] = None  # per-model platform/cache counters
+                                      # (Platform.model_stats() merged with
+                                      # WorkerPoolExecutor.model_cache_stats())
 
     @property
     def n_patches(self) -> int:
@@ -188,6 +192,29 @@ class Results:
             for slo, outs in sorted(by.items(), key=lambda kv: str(kv[0]))
         }
 
+    def model_breakdown(self) -> dict:
+        """Per-model rows: outcome accounting (violations, latency) merged
+        with the platform/cache counters in ``model_stats`` (batches,
+        cold starts, weight loads, weight-cache hit rate) — the debugging
+        surface for mixed-model runs."""
+        by: Dict[str, List[PatchOutcome]] = {}
+        for o in self.outcomes:
+            if o.model is not None:
+                by.setdefault(o.model, []).append(o)
+        rows: Dict[str, dict] = {}
+        for model, outs in sorted(by.items()):
+            rows[model] = {
+                "patches": len(outs),
+                "violations": sum(o.violated for o in outs),
+                "violation_rate": round(
+                    sum(o.violated for o in outs) / len(outs), 4),
+                "mean_latency_s": round(
+                    sum(o.latency for o in outs) / len(outs), 4),
+            }
+        for model, st in sorted((self.model_stats or {}).items()):
+            rows.setdefault(model, {}).update(st)
+        return rows
+
     def summary(self) -> dict:
         out = {
             "name": self.name,
@@ -204,6 +231,9 @@ class Results:
             "mean_consolidation": round(self.mean_consolidation, 2),
             "class_violations": self.class_breakdown(),
         }
+        models = self.model_breakdown()
+        if models:
+            out["models"] = models
         if self.worker_stats is not None:
             # horizon = span of delivered work; utilization is each
             # worker's busy time over it, so placement-policy skew shows
@@ -227,6 +257,8 @@ class Completion:
     record: object = None     # platform ExecutionRecord (SimExecutor)
     outputs: object = None    # routed device outputs (DeviceExecutor)
     worker: int = 0           # pool worker that ran it (0 outside a pool)
+    model: Optional[str] = None  # registry model that ran it (filled from
+                              # the invocation at delivery when unset)
 
 
 @dataclasses.dataclass
@@ -253,6 +285,10 @@ class ExecHandle:
     payload: object = None            # executor-private in-flight state
     worker: int = 0
     seq: int = -1
+    model: Optional[str] = None       # invocation's model key (engine-set)
+    load_s: float = 0.0               # weight-cache load cost still to be
+                                      # added to t_finish at resolve (async
+                                      # handles; 0 once applied)
 
 
 # ----------------------------------------------------------- invoker pool ----
@@ -269,13 +305,19 @@ class InvokerPool:
     pass e.g. ``lambda p: (p.slo, p.camera_id // 4)`` to also group
     cameras).  ``make_invoker(key)`` builds the class's invoker on first
     use, so each class can have its own canvas geometry and latency
-    table.  Every fired ``Invocation`` is tagged with its class ``key``.
+    table.  Every fired ``Invocation`` is tagged with its class ``key``,
+    and — when ``model_of`` is given — with the registry model name its
+    class resolves to (``model_of(key)``), so executors, placement, and
+    the platform model all see which network the batch runs.
     """
 
     def __init__(self, make_invoker: Callable[[object], SLOAwareInvoker],
-                 classify: Callable[[Patch], object] = slo_class):
+                 classify: Callable[[Patch], object] = slo_class,
+                 model_of: Optional[Callable[[object],
+                                             Optional[str]]] = None):
         self.make_invoker = make_invoker
         self.classify = classify
+        self.model_of = model_of
         self.invokers: Dict[object, SLOAwareInvoker] = {}
 
     def _invoker(self, key: object) -> SLOAwareInvoker:
@@ -284,10 +326,12 @@ class InvokerPool:
             inv = self.invokers[key] = self.make_invoker(key)
         return inv
 
-    @staticmethod
-    def _tag(fired, key):
+    def _tag(self, fired, key):
+        model = self.model_of(key) if self.model_of is not None else None
         for f in fired:
             f.key = key
+            if f.model is None:
+                f.model = model
         return fired
 
     def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
@@ -317,31 +361,35 @@ class InvokerPool:
         _, key = min(due, key=lambda x: x[0])
         fired = self.invokers[key].poll(t_now)
         if fired is not None:
-            fired.key = key
+            self._tag([fired], key)
         return fired
 
     def flush(self, t_now: float) -> Optional[Invocation]:
         for key, inv in self.invokers.items():
             fired = inv.flush(t_now)
             if fired is not None:
-                fired.key = key
+                self._tag([fired], key)
                 return fired
         return None
 
 
 def uniform_pool(canvas_m: int, canvas_n: int, latency, max_canvases: int = 8,
                  incremental: bool = True,
-                 classify: Optional[Callable[[Patch], object]] = None
+                 classify: Optional[Callable[[Patch], object]] = None,
+                 model_of: Optional[Callable[[object],
+                                             Optional[str]]] = None
                  ) -> InvokerPool:
     """Pool where every class shares one geometry/latency spec.
 
     ``classify=None`` gives the paper's single shared queue (every patch
     maps to one class); pass :func:`slo_class` for per-SLO pools.
+    ``model_of`` tags fired invocations with their class's registry
+    model name (see :class:`InvokerPool`).
     """
     return InvokerPool(
         lambda key: SLOAwareInvoker(canvas_m, canvas_n, latency,
                                     max_canvases, incremental=incremental),
-        classify=classify or (lambda p: None))
+        classify=classify or (lambda p: None), model_of=model_of)
 
 
 # -------------------------------------------------------------- executors ----
@@ -353,17 +401,37 @@ class SimExecutor:
     known immediately and the engine schedules delivery on the event
     heap — the simulation analogue of "the device will interrupt us at
     t_finish".
+
+    Multi-model serving: ``model_loads`` maps a registry model name to
+    its weight-load seconds and ``model_tables`` to its latency table
+    (both typically from :class:`~repro.core.models.ModelSpec`).  A
+    model-tagged invocation is then submitted with its own execution
+    profile and load cost, and the platform's per-model warm pools make
+    an instance warm for model A cold for model B.  Untagged invocations
+    (or an empty mapping) keep the historical single-model behaviour
+    byte-for-byte.
     """
 
-    def __init__(self, platform: Platform):
+    def __init__(self, platform: Platform,
+                 model_loads: Optional[Dict[str, float]] = None,
+                 model_tables: Optional[Dict[str, object]] = None):
         self.platform = platform
+        self.model_loads = model_loads or {}
+        self.model_tables = model_tables or {}
 
     def submit(self, inv: Invocation) -> ExecHandle:
         size = (inv.cost_canvases if inv.cost_canvases is not None
                 else len(inv.canvases))
-        rec = self.platform.submit(inv.t_submit, size,
-                                   n_patches=len(inv.patches))
-        comp = Completion(inv, rec.t_finish, record=rec)
+        if inv.model is None:
+            rec = self.platform.submit(inv.t_submit, size,
+                                       n_patches=len(inv.patches))
+        else:
+            rec = self.platform.submit(
+                inv.t_submit, size, n_patches=len(inv.patches),
+                model=inv.model,
+                model_load_s=self.model_loads.get(inv.model, 0.0),
+                latency=self.model_tables.get(inv.model))
+        comp = Completion(inv, rec.t_finish, record=rec, model=inv.model)
         return ExecHandle(inv, t_finish=rec.t_finish, completion=comp)
 
     def resolve(self, handle: ExecHandle) -> Completion:
@@ -384,6 +452,20 @@ def _leaf_ready(x) -> bool:
         return bool(probe())
     except TypeError:           # is_ready is a property on some types
         return bool(probe)
+
+
+@dataclasses.dataclass
+class ModelRuntime:
+    """One servable model on the device path: the jit'd function, its
+    params, and the canvas geometry / sharding it runs under.  The
+    values of :class:`DeviceExecutor`'s ``models`` mapping (or zero-arg
+    callables returning one, for lazy builds through the registry)."""
+    serve_fn: Callable
+    params: object
+    canvas_m: int
+    canvas_n: int
+    mesh: object = None
+    rules: object = None
 
 
 class DeviceExecutor:
@@ -409,12 +491,21 @@ class DeviceExecutor:
     ``sync`` joins dispatched device work (default
     ``jax.block_until_ready``); tests and benchmarks substitute a hook
     that also joins non-JAX future-likes.
+
+    Multi-model serving: ``models`` maps a registry model name to a
+    :class:`ModelRuntime` — or to a zero-arg callable returning one,
+    resolved and cached on first use so unused models are never built.
+    A model-tagged invocation runs its own jit'd function, params, and
+    canvas geometry; untagged invocations (and tags missing from the
+    mapping) run the default runtime built from the positional ctor
+    arguments, which keeps every single-model call site unchanged.
     """
 
     def __init__(self, serve_fn, params, canvas_m: int, canvas_n: int, *,
                  use_pallas: bool = False, mesh=None, rules=None,
                  clock: Callable[[], float] = time.perf_counter,
-                 sync: Optional[Callable[[object], None]] = None):
+                 sync: Optional[Callable[[object], None]] = None,
+                 models: Optional[Dict[str, object]] = None):
         self.serve_fn = serve_fn
         self.params = params
         self.m, self.n = canvas_m, canvas_n
@@ -423,12 +514,32 @@ class DeviceExecutor:
         self.rules = rules
         self.clock = clock
         self.sync = sync
+        self.models = dict(models) if models else {}
+        self._runtimes: Dict[Optional[str], ModelRuntime] = {}
         self.frames: Dict[object, np.ndarray] = {}
         self._refs: Dict[object, int] = {}
         self.n_invocations = 0
         self.n_detections = 0
         self.n_sharded = 0
         self.evidence_bytes = 0
+
+    def _runtime(self, model: Optional[str]) -> ModelRuntime:
+        """Resolve an invocation's model tag to its runtime (default
+        runtime for ``None`` or unmapped tags); lazy entries are built
+        once and cached."""
+        rt = self._runtimes.get(model)
+        if rt is not None:
+            return rt
+        entry = self.models.get(model) if model is not None else None
+        if entry is None:
+            rt = ModelRuntime(self.serve_fn, self.params, self.m, self.n,
+                              mesh=self.mesh, rules=self.rules)
+        elif callable(entry):
+            rt = entry()
+        else:
+            rt = entry
+        self._runtimes[model] = rt
+        return rt
 
     # ------------------------------------------------------- frame store ----
 
@@ -468,6 +579,7 @@ class DeviceExecutor:
         from repro.kernels.stitch import ops as stitch_ops
 
         t0 = self.clock()
+        rt = self._runtime(inv.model)
         plan = inv.batch_plan()
         crops = []
         for patch in inv.patches:
@@ -480,12 +592,12 @@ class DeviceExecutor:
         records = jnp.asarray(plan.records)
         impl = "pallas_interpret" if self.use_pallas else "xla"
         canvases = stitch_ops.stitch_canvases(
-            jnp.asarray(slots), records, self.m, self.n, impl=impl)
+            jnp.asarray(slots), records, rt.canvas_m, rt.canvas_n, impl=impl)
         sharded = False
-        if self.mesh is not None:
-            canvases, sharded = shard_canvases(canvases, self.mesh,
-                                               self.rules)
-        obj, boxes = self.serve_fn(self.params, canvases)
+        if rt.mesh is not None:
+            canvases, sharded = shard_canvases(canvases, rt.mesh,
+                                               rt.rules)
+        obj, boxes = rt.serve_fn(rt.params, canvases)
         # inverse gather, grouped by source frame alongside the routed
         # detections.  The box head has no pixel-space output, so the
         # canvases stand in for a per-pixel head (e.g. segmentation): the
@@ -525,7 +637,8 @@ class DeviceExecutor:
         self.evidence_bytes += sum(
             a.nbytes for v in per_frame_pixels.values() for a in v)
         return Completion(inv, inv.t_submit + wall,
-                          outputs=(per_frame, per_frame_pixels))
+                          outputs=(per_frame, per_frame_pixels),
+                          model=inv.model)
 
     def submit(self, inv: Invocation) -> ExecHandle:
         comp = self._finalize(inv, self._launch(inv))
@@ -613,19 +726,22 @@ def make_executor(name: str, **cfg):
     mirroring ``make_placement`` / ``make_clock`` / ``make_source``.
 
     ``cfg`` forwards to the executor constructor: ``sim`` takes
-    ``platform=``; the device executors take the pipeline arguments
-    (``serve_fn, params, canvas_m, canvas_n, ...``).  ``max_inflight`` is
-    accepted—and dropped—for the sync executors so one config dict can
-    drive any name.
+    ``platform=`` (plus ``model_loads=`` / ``model_tables=``); the
+    device executors take the pipeline arguments (``serve_fn, params,
+    canvas_m, canvas_n, ...``, plus ``models=``).  ``max_inflight`` and
+    the other-substrate model kwargs are accepted—and dropped—where they
+    do not apply, so one config dict can drive any name.
     """
-    try:
-        cls = _EXECUTORS[name]
-    except KeyError:
-        raise ValueError(f"unknown executor {name!r}; "
-                         f"choose from {sorted(_EXECUTORS)}") from None
-    if cls is not AsyncDeviceExecutor:
-        cfg = {k: v for k, v in cfg.items() if k != "max_inflight"}
-    return cls(**cfg)
+    from repro.core.registry import lookup
+
+    cls = lookup("executor", _EXECUTORS, name)
+    if cls is SimExecutor:
+        drop = {"max_inflight", "models"}
+    elif cls is AsyncDeviceExecutor:
+        drop = {"model_loads", "model_tables"}
+    else:
+        drop = {"max_inflight", "model_loads", "model_tables"}
+    return cls(**{k: v for k, v in cfg.items() if k not in drop})
 
 
 # ------------------------------------------------------------ event loop ----
@@ -807,6 +923,8 @@ class ServingEngine:
         handle = self._submit(inv)
         self._event_seq += 1
         handle.seq = self._event_seq
+        if handle.model is None:
+            handle.model = inv.model
         if handle.t_finish is not None:
             heapq.heappush(self._scheduled,
                            (handle.t_finish, self._event_seq, handle))
@@ -886,6 +1004,8 @@ class ServingEngine:
         if on_complete is not None:
             on_complete(comp)
         inv = comp.invocation
+        if comp.model is None:
+            comp.model = inv.model
         for p in inv.patches:
             seq = self._seq_of.pop(id(p), None)
             if seq is None:
@@ -893,7 +1013,8 @@ class ServingEngine:
             else:
                 _, t_arrive = self._arrivals.pop(seq)
             self.outcomes.append(
-                PatchOutcome(p, t_arrive, inv.t_submit, comp.t_finish))
+                PatchOutcome(p, t_arrive, inv.t_submit, comp.t_finish,
+                             model=comp.model))
         on_result = getattr(self.pool, "on_result", None)
         if on_result is not None:
             on_result(inv, comp.t_finish)

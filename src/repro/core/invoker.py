@@ -37,6 +37,8 @@ class Invocation:
     plan: Optional[BatchPlan] = None   # built lazily by batch_plan()
     key: object = None          # SLO class, when fired via an InvokerPool
     cost_canvases: Optional[float] = None  # billing override (baselines)
+    model: Optional[str] = None  # registry model name (InvokerPool's
+                                # model_of; None: the implicit single model)
 
     @property
     def batch_size(self) -> int:

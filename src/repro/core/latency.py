@@ -164,14 +164,19 @@ class OnlineLatencyTable:
         return self._clamped(self._ratio)
 
     def observe(self, batch: int, elapsed: float,
-                worker: Optional[object] = None) -> bool:
+                worker: Optional[object] = None,
+                model: Optional[str] = None) -> bool:
         """Fold one delivered completion in.  Returns False (and changes
         nothing) for observations that are non-finite, non-positive, or
         for empty batches.  Valid observations are clamped into
         ``ratio_bounds`` times the seed estimate before the EWMA update,
         so a single wild measurement moves the table by at most the
         configured drift range and every internal statistic stays finite
-        (no overflow through the EWMA recurrences)."""
+        (no overflow through the EWMA recurrences).
+
+        ``model`` is accepted (and ignored) so this single-model
+        estimator and the per-model :class:`LatencyBank` are drop-in
+        interchangeable behind the worker pool's feedback hook."""
         try:
             elapsed = float(elapsed)
         except (TypeError, ValueError):
@@ -244,15 +249,92 @@ class OnlineLatencyTable:
                    ratio_bounds=tuple(d.get("ratio_bounds", (0.05, 50.0))))
 
 
+class LatencyBank:
+    """Per-model latency estimates behind one estimator interface.
+
+    ``tables`` maps a registry model name to its estimator — a
+    :class:`LatencyTable` or (for the feedback loop) an
+    :class:`OnlineLatencyTable` per model.  The bank duck-types the
+    worker pool's ``estimator`` contract (``observe`` / ``drift``):
+    observations route to the invocation's model's table, so two SLO
+    classes running different networks each track their *own* device
+    speed and ``t_slack`` / AIMD stay correct per model — a heavy
+    model's drift never pollutes a light model's firing decision.
+
+    ``observe`` with ``model=None`` (an untagged invocation) routes to
+    the ``default`` table — the sole entry when the bank holds exactly
+    one, else nowhere (returns False): attributing an unattributed
+    observation to an arbitrary model would corrupt that model's EWMA.
+    """
+
+    def __init__(self, tables: Dict[str, object],
+                 default: Optional[str] = None):
+        if not tables:
+            raise ValueError("LatencyBank needs at least one table")
+        self.tables: Dict[str, object] = dict(tables)
+        if default is not None and default not in self.tables:
+            from repro.core.registry import unknown_name
+            raise unknown_name("model", default, self.tables)
+        if default is None and len(self.tables) == 1:
+            default = next(iter(self.tables))
+        self.default = default
+
+    def table(self, model: Optional[str]):
+        """The estimator for one model (``None``: the default table)."""
+        from repro.core.registry import lookup
+        if model is None:
+            model = self.default
+        return lookup("model", self.tables, model)
+
+    def observe(self, batch: int, elapsed: float,
+                worker: Optional[object] = None,
+                model: Optional[str] = None) -> bool:
+        name = model if model is not None else self.default
+        tbl = self.tables.get(name)
+        observe = getattr(tbl, "observe", None)
+        if observe is None:
+            return False
+        return observe(batch, elapsed, worker=worker)
+
+    def drift(self, worker: Optional[object] = None,
+              model: Optional[str] = None) -> float:
+        """One model's drift, or (``model=None``) the mean drift over
+        models that track one — the pool-diagnostics aggregate."""
+        if model is not None:
+            tbl = self.table(model)
+            drift = getattr(tbl, "drift", None)
+            return drift(worker=worker) if drift is not None else 1.0
+        drifts = [t.drift(worker=worker) for t in self.tables.values()
+                  if hasattr(t, "drift")]
+        if not drifts:
+            return 1.0
+        return sum(drifts) / len(drifts)
+
+    # ------------------------------------------------------ serialization ----
+
+    def to_dict(self) -> dict:
+        return {"kind": "bank",
+                "default": self.default,
+                "tables": {name: t.to_dict()
+                           for name, t in sorted(self.tables.items())}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LatencyBank":
+        return cls({name: latency_from_dict(t)
+                    for name, t in d["tables"].items()},
+                   default=d.get("default"))
+
+
 def latency_from_dict(d: dict):
-    """Inverse of ``LatencyTable.to_dict`` / ``OnlineLatencyTable.to_dict``
-    keyed on the embedded ``kind`` tag."""
+    """Inverse of the latency ``to_dict`` family, keyed on the embedded
+    ``kind`` tag (``profile`` | ``online`` | ``bank``)."""
+    from repro.core.registry import lookup
+
     kind = d.get("kind", "profile")
-    if kind == "online":
-        return OnlineLatencyTable.from_dict(d)
-    if kind == "profile":
-        return LatencyTable.from_dict(d)
-    raise ValueError(f"unknown latency spec kind {kind!r}")
+    loaders = {"profile": LatencyTable.from_dict,
+               "online": OnlineLatencyTable.from_dict,
+               "bank": LatencyBank.from_dict}
+    return lookup("latency spec kind", loaders, kind)(d)
 
 
 @dataclasses.dataclass(frozen=True)

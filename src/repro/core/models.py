@@ -1,0 +1,235 @@
+"""Model registry: named :class:`ModelSpec` records behind ``make_model``.
+
+The serving spine used to hard-code one detector built once in
+``launch/serve.py``; every layer that matters to multi-tenant serving —
+invoker latency tables, worker placement, the serverless platform's
+warm pools — needs to know *which* model an invocation runs.  This
+module is the single source of that identity:
+
+* a :class:`ModelSpec` names a servable model: its detector trunk
+  config, canvas geometry, a weight-size estimate (what a serverless
+  instance must load before it can serve the model), and optionally an
+  explicit latency profile;
+* ``register_model`` / ``make_model`` mirror the factory quartet
+  (``make_classify`` / ``make_clock`` / ``make_executor`` /
+  ``make_source``): ``ServeConfig.model_map`` values resolve here, with
+  the unified unknown-name error;
+* the registry is seeded from the configs zoo — the paper's own
+  ``tangram`` detector plus ``vit_s16`` and ``efficientnet_b7`` backed
+  variants — and tests/benchmarks register their own small specs.
+
+A spec separates three concerns so every consumer gets what it needs
+without building the others:
+
+* **economics** — ``weight_bytes`` / ``load_s`` feed the platform's
+  per-model warm pools and the worker pool's weight caches;
+* **latency** — :meth:`ModelSpec.latency_table` serves the per-model
+  profile ``t_slack`` fires against (explicit ``table`` wins, else the
+  analytical roofline model over the trunk dims);
+* **execution** — :meth:`ModelSpec.build` jit-compiles a servable
+  detector through the same path as ``launch/serve.py`` (reduced dims
+  by default so CPU runs stay fast; pass ``reduced=False`` for the full
+  trunk).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Optional, Tuple
+
+from repro.config import DetectorConfig
+from repro.core.latency import LatencyTable, detector_latency_model
+from repro.core.registry import lookup
+
+__all__ = ["ModelSpec", "make_model", "register_model", "model_names"]
+
+#: bytes per parameter by param dtype (weight-size estimates)
+_DTYPE_BYTES = {"bfloat16": 2, "float16": 2, "float32": 4}
+
+#: default host->accelerator weight-load bandwidth (PCIe gen4 x16-ish);
+#: load_s = weight_bytes / load_bw is the modeled per-model cold cost
+_DEFAULT_LOAD_BW = 12.5e9
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """One servable model: identity, geometry, economics, and builders.
+
+    ``canvas_m`` / ``canvas_n`` / ``weight_bytes`` default from ``arch``
+    when one is given (canvas geometry from its canvas size, weight
+    bytes from its param count and dtype); specs without an ``arch``
+    (pure-simulation models in tests/benchmarks) must state geometry and
+    weight size explicitly and carry an explicit ``table``.
+    """
+
+    name: str
+    arch: Optional[DetectorConfig] = None
+    canvas_m: Optional[int] = None
+    canvas_n: Optional[int] = None
+    weight_bytes: Optional[float] = None
+    table: Optional[LatencyTable] = None
+    load_bw: float = _DEFAULT_LOAD_BW
+    description: str = ""
+
+    def __post_init__(self):
+        if self.arch is not None:
+            if self.canvas_m is None:
+                object.__setattr__(self, "canvas_m", self.arch.canvas)
+            if self.canvas_n is None:
+                object.__setattr__(self, "canvas_n", self.arch.canvas)
+            if self.weight_bytes is None:
+                per_param = _DTYPE_BYTES.get(self.arch.param_dtype, 4)
+                object.__setattr__(self, "weight_bytes",
+                                   float(self.arch.n_params * per_param))
+        if self.canvas_m is None or self.canvas_n is None:
+            raise ValueError(f"ModelSpec {self.name!r} needs canvas "
+                             f"geometry (canvas_m/canvas_n or an arch)")
+        if self.weight_bytes is None:
+            raise ValueError(f"ModelSpec {self.name!r} needs weight_bytes "
+                             f"(explicit or derivable from an arch)")
+        if self.table is None and self.arch is None:
+            raise ValueError(f"ModelSpec {self.name!r} needs a latency "
+                             f"source (an explicit table or an arch)")
+        if self.load_bw <= 0:
+            raise ValueError(f"load_bw must be positive, got {self.load_bw}")
+
+    # ------------------------------------------------------- economics ----
+
+    @property
+    def load_s(self) -> float:
+        """Modeled seconds to move the weights onto an accelerator — the
+        per-model half of a serverless cold start."""
+        return float(self.weight_bytes) / self.load_bw
+
+    # --------------------------------------------------------- latency ----
+
+    def latency_table(self, max_batch: int = 16,
+                      slack_sigmas: float = 3.0) -> LatencyTable:
+        """The per-model profile ``t_slack`` fires against: the explicit
+        ``table`` when given, else the analytical roofline model over the
+        trunk dims at this spec's canvas geometry."""
+        if self.table is not None:
+            return self.table
+        a = self.arch
+        return detector_latency_model(
+            self.canvas_m, self.canvas_n, patch=a.patch,
+            n_layers=a.n_layers, d_model=a.d_model, d_ff=a.d_ff,
+        ).build_table(max_batch, slack_sigmas=slack_sigmas)
+
+    # ------------------------------------------------------- execution ----
+
+    def reduced_arch(self, canvas: int) -> DetectorConfig:
+        """A small, CPU-runnable stand-in for the trunk: same family and
+        patching, dims scaled down (distinct per source trunk, so two
+        specs' jitted functions genuinely differ)."""
+        a = self.arch
+        if a is None:
+            raise ValueError(f"ModelSpec {self.name!r} has no arch to build")
+        patch = a.patch if canvas % a.patch == 0 else 32
+        while canvas % patch:
+            patch //= 2
+        d_model = max(32, a.d_model // 12)
+        return DetectorConfig(
+            name=f"{self.name}-reduced", canvas=canvas, patch=patch,
+            n_layers=max(1, a.n_layers // 6), d_model=d_model,
+            n_heads=4, d_ff=2 * d_model,
+            param_dtype="float32", compute_dtype="float32")
+
+    def build(self, canvas: Optional[int] = None, reduced: bool = True):
+        """Jit-compile a servable detector for this spec.
+
+        Returns ``(cfg, params, serve_fn, rules)`` exactly like the
+        historical ``launch.serve.build_detector``.  ``reduced=True``
+        (default) serves the scaled-down trunk at ``canvas`` (default
+        256) so drivers and tests run on CPU; ``reduced=False`` builds
+        the full trunk at the spec's native canvas.  Params are seeded
+        per model name, so two models' weights differ deterministically.
+        """
+        import jax
+
+        from repro import param as param_lib
+        from repro.models import detector as detector_lib
+        from repro.sharding import ShardingConfig
+
+        if reduced:
+            cfg = self.reduced_arch(canvas or 256)
+        else:
+            cfg = (self.arch if canvas is None
+                   else dataclasses.replace(self.arch, canvas=canvas))
+        rules = ShardingConfig.make().rules
+        seed = zlib.crc32(self.name.encode()) & 0x7FFFFFFF
+        params = param_lib.init_params(jax.random.PRNGKey(seed),
+                                       detector_lib.param_specs(cfg))
+        serve_fn = jax.jit(lambda p, x: detector_lib.serve(cfg, p, x, rules))
+        return cfg, params, serve_fn, rules
+
+
+# ------------------------------------------------------------- registry ----
+
+_MODELS: Dict[str, ModelSpec] = {}
+_seeded = False
+
+
+def register_model(spec: ModelSpec) -> ModelSpec:
+    """Register (or replace — last registration wins) a named spec."""
+    _MODELS[spec.name] = spec
+    return spec
+
+
+def _ensure_seeded():
+    """Seed the registry from the configs zoo on first use (imports of
+    this module stay cheap; the zoo configs import the model stack)."""
+    global _seeded
+    if _seeded:
+        return
+    _seeded = True
+
+    from repro.configs import efficientnet_b7, tangram_detector, vit_s16
+    from repro.models.efficientnet import count_params
+
+    # the paper's own serving model: ViT-B/32 trunk on 1024^2 canvases
+    register_model(ModelSpec(
+        name="tangram", arch=tangram_detector.ARCH,
+        description="the paper's detector (ViT-B/32 trunk, 1024^2 canvas)"))
+
+    # a lighter detector on the ViT-S/16 trunk (finer patching, ~4x
+    # fewer trunk params): the natural choice for tight SLO classes
+    v = vit_s16.ARCH
+    register_model(ModelSpec(
+        name="vit_s16",
+        arch=DetectorConfig(
+            name="vit-s16-det", canvas=1024, patch=v.patch,
+            n_layers=v.n_layers, d_model=v.d_model, n_heads=v.n_heads,
+            d_ff=v.d_ff, param_dtype="bfloat16", compute_dtype="bfloat16"),
+        description="detector on the ViT-S/16 trunk (light, fine patches)"))
+
+    # EfficientNet-B7-class detector.  The repo's detector head runs on
+    # a ViT trunk, so the servable build uses a transformer substitute
+    # sized to B7's compute class; the weight economics (what a
+    # serverless instance must load) come from the real conv net's
+    # param count.
+    e = efficientnet_b7.ARCH
+    register_model(ModelSpec(
+        name="efficientnet_b7",
+        arch=DetectorConfig(
+            name="efficientnet-b7-det", canvas=1024, patch=32,
+            n_layers=18, d_model=512, n_heads=8, d_ff=2048,
+            param_dtype="bfloat16", compute_dtype="bfloat16"),
+        weight_bytes=float(count_params(e)
+                           * _DTYPE_BYTES.get(e.param_dtype, 4)),
+        description="EfficientNet-B7-class detector (conv-net weight "
+                    "economics, transformer substitute trunk)"))
+
+
+def make_model(name: str) -> ModelSpec:
+    """Model-name -> :class:`ModelSpec`, mirroring ``make_classify`` /
+    ``make_clock`` / ``make_executor`` / ``make_source`` — the named-
+    reference resolution for ``ServeConfig.model`` / ``model_map``."""
+    _ensure_seeded()
+    return lookup("model", _MODELS, name)
+
+
+def model_names() -> Tuple[str, ...]:
+    """Registered model names (seeds the zoo on first call)."""
+    _ensure_seeded()
+    return tuple(sorted(_MODELS))

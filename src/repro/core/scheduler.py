@@ -39,15 +39,19 @@ from __future__ import annotations
 import warnings
 from typing import Callable, Optional, Sequence
 
-from repro.core.adaptive import adaptive_uniform_pool
+from repro.core.adaptive import AdaptiveInvokerPool, adaptive_uniform_pool
 from repro.core.clock import Clock, make_clock
 from repro.core.config import ServeConfig, make_classify
-from repro.core.engine import (PatchOutcome, Results, ServingEngine,
-                               SimExecutor, uniform_pool)
-from repro.core.latency import LatencyTable, OnlineLatencyTable
+from repro.core.engine import (InvokerPool, PatchOutcome, Results,
+                               ServingEngine, SimExecutor, uniform_pool)
+from repro.core.invoker import SLOAwareInvoker
+from repro.core.latency import LatencyBank, LatencyTable, OnlineLatencyTable
+from repro.core.models import make_model
 from repro.core.partitioning import Patch
+from repro.core.registry import unknown_name
 from repro.core.workers import WorkerPoolExecutor, make_placement
 from repro.serverless.platform import (Platform, mean_consolidation,
+                                       model_stats as records_model_stats,
                                        split_platform)
 
 __all__ = ["PatchOutcome", "Results", "ServeConfig", "TangramScheduler"]
@@ -81,8 +85,10 @@ class TangramScheduler:
 
     def __init__(self, canvas_m: int, canvas_n: int, latency: LatencyTable,
                  platform: Platform,
-                 config: Optional[ServeConfig] = None, **legacy):
+                 config: Optional[ServeConfig] = None,
+                 executor: object = None, **legacy):
         config = config if config is not None else ServeConfig()
+        self._executor_override = executor
         # -------------------------------------------- deprecation shim ----
         # Old keyword arguments forward onto the config.  Values that a
         # config cannot express (callables / instances) become direct
@@ -113,19 +119,60 @@ class TangramScheduler:
         self.config = config
         classify = (classify_override if classify_override is not None
                     else make_classify(config.classify))
-        self.estimator: Optional[OnlineLatencyTable] = None
-        if config.online_latency:
-            latency = self.estimator = OnlineLatencyTable(latency)
-        if config.adaptive is not None:
-            self.pool = adaptive_uniform_pool(
-                canvas_m, canvas_n, latency, config.max_canvases,
-                incremental=config.incremental, classify=classify,
-                cfg=config.adaptive)
+        self.estimator = None          # OnlineLatencyTable | LatencyBank
+        self._model_specs: dict = {}
+        self._model_tables: dict = {}  # base tables (platform sampling)
+        if config.multi_model:
+            # ---- multi-model: registry specs drive geometry + latency ----
+            # The ctor's canvas_m/canvas_n/latency become the legacy
+            # single-model fallback and are ignored here: each class's
+            # invoker takes its model's canvas geometry and latency table
+            # straight off the ModelSpec, so t_slack is per-model.
+            specs = {n: make_model(n) for n in config.model_names()}
+            self._model_specs = specs
+            base = {n: (s.table if s.table is not None
+                        else s.latency_table())
+                    for n, s in specs.items()}
+            self._model_tables = base
+            if config.online_latency:
+                online = {n: OnlineLatencyTable(t) for n, t in base.items()}
+                self.estimator = LatencyBank(online)
+                invoker_tables = online
+            else:
+                invoker_tables = dict(base)
+
+            def make_invoker(key):
+                model = config.resolve_model(key)
+                if model is None:
+                    raise unknown_name("SLO class", key,
+                                       config.model_map or {})
+                spec = specs[model]
+                return SLOAwareInvoker(spec.canvas_m, spec.canvas_n,
+                                       invoker_tables[model],
+                                       config.max_canvases,
+                                       incremental=config.incremental)
+
+            pool_classify = classify or (lambda p: None)
+            if config.adaptive is not None:
+                self.pool = AdaptiveInvokerPool(
+                    make_invoker, pool_classify, config.adaptive,
+                    model_of=config.resolve_model)
+            else:
+                self.pool = InvokerPool(make_invoker, pool_classify,
+                                        model_of=config.resolve_model)
         else:
-            self.pool = uniform_pool(canvas_m, canvas_n, latency,
-                                     config.max_canvases,
-                                     incremental=config.incremental,
-                                     classify=classify)
+            if config.online_latency:
+                latency = self.estimator = OnlineLatencyTable(latency)
+            if config.adaptive is not None:
+                self.pool = adaptive_uniform_pool(
+                    canvas_m, canvas_n, latency, config.max_canvases,
+                    incremental=config.incremental, classify=classify,
+                    cfg=config.adaptive)
+            else:
+                self.pool = uniform_pool(canvas_m, canvas_n, latency,
+                                         config.max_canvases,
+                                         incremental=config.incremental,
+                                         classify=classify)
         self.platform = platform
         self.n_workers = config.n_workers
         self.placement = (placement_override
@@ -145,14 +192,28 @@ class TangramScheduler:
             return None
         return make_clock(self.config.clock, speed=self.config.wall_speed)
 
+    def _sim_executor(self, platform: Platform) -> SimExecutor:
+        """A SimExecutor over ``platform``, multi-model aware: each
+        model's submissions carry its weight-load cost and sample from
+        its own base latency table (per-model warm-pool economics)."""
+        if not self._model_specs:
+            return SimExecutor(platform)
+        loads = {n: s.load_s for n, s in self._model_specs.items()}
+        return SimExecutor(platform, model_loads=loads,
+                           model_tables=self._model_tables)
+
     def _executor(self):
         """One SimExecutor, or a worker pool over platform capacity
-        shards (shared cost meter: billing aggregates unchanged)."""
+        shards (shared cost meter: billing aggregates unchanged).  A
+        ctor-supplied ``executor`` (e.g. a device worker pool) is used
+        as-is — the platform then only carries the cost meter."""
+        if self._executor_override is not None:
+            return self._executor_override, [self.platform]
         if self.n_workers == 1 and self.estimator is None:
-            return SimExecutor(self.platform), [self.platform]
+            return self._sim_executor(self.platform), [self.platform]
         platforms = (split_platform(self.platform, self.n_workers)
                      if self.n_workers > 1 else [self.platform])
-        pool = WorkerPoolExecutor([SimExecutor(p) for p in platforms],
+        pool = WorkerPoolExecutor([self._sim_executor(p) for p in platforms],
                                   placement=self.placement,
                                   estimator=self.estimator)
         return pool, platforms
@@ -183,6 +244,11 @@ class TangramScheduler:
         source_stats["backlog_high_water"] = engine.backlog_high_water
         source_stats["ingestion_window"] = self.config.ingestion_window
         records = [r for p in platforms for r in p.records]
+        model_stats = records_model_stats(records)
+        cache_stats = (executor.model_cache_stats()
+                       if hasattr(executor, "model_cache_stats") else {})
+        for model, row in cache_stats.items():
+            model_stats.setdefault(model, {}).update(row)
         return Results(
             name=name, outcomes=outcomes,
             canvas_efficiencies=[c.efficiency for inv in engine.invocations
@@ -199,4 +265,5 @@ class TangramScheduler:
             worker_stats=(executor.worker_stats()
                           if isinstance(executor, WorkerPoolExecutor)
                           else None),
-            source_stats=source_stats)
+            source_stats=source_stats,
+            model_stats=model_stats or None)

@@ -18,9 +18,12 @@ platform shard) behind one submit/complete facade:
   same pool semantics.
 * Placement policies: :class:`LeastOutstandingPlacement` (default — the
   worker with the fewest unresolved invocations wins, index breaks
-  ties), :class:`RoundRobinPlacement`, and
+  ties), :class:`RoundRobinPlacement`,
   :class:`ClassAffinityPlacement` (tight-SLO classes get reserved
-  workers; everything else spreads over the rest).
+  workers; everything else spreads over the rest), and
+  :class:`ModelAffinityPlacement` (same-model batches co-locate so
+  weights stay resident — see :class:`WeightCache`, the per-worker LRU
+  weight cache with a modeled swap-in cost).
 * The engine harvests completions **out of order** across all workers'
   in-flight work (a slow batch on worker 0 no longer pins completed
   batches on worker 1), with delivery ties pinned to ``(worker index,
@@ -39,11 +42,111 @@ workers routed them).
 """
 from __future__ import annotations
 
+import collections
 import math
-from typing import Callable, List, Mapping, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.engine import Completion, ExecHandle
 from repro.core.invoker import Invocation
+from repro.core.registry import lookup
+
+
+# ----------------------------------------------------- weight cache ----
+
+class WeightCache:
+    """Per-worker model-weight residency: LRU over a byte budget.
+
+    The single-model pipeline kept its detector implicitly
+    always-resident; with multiple models a worker holds whichever
+    weights fit in ``capacity_bytes`` and pays a modeled load cost to
+    swap one in.  ``models`` maps a registry model name to
+    ``(weight_bytes, load_s)`` (both straight off a
+    :class:`~repro.core.models.ModelSpec`).
+
+    :meth:`ensure` is the one mutation: it returns the load seconds the
+    caller must add to the invocation's finish time — ``0.0`` on a hit —
+    touching the entry MRU and evicting least-recently-used residents
+    until the new weights fit.  A model larger than the whole budget
+    still loads (it runs resident alone, everything else evicted), the
+    same semantics as a platform instance hosting one oversized model.
+    Unknown or untagged models cost nothing and are not cached — the
+    legacy single-model path goes through unchanged.
+
+    Deterministic by construction (no clock, no randomness): eviction
+    order is pinned by the access sequence alone, which is what the
+    eviction regression test relies on.
+    """
+
+    def __init__(self, capacity_bytes: float,
+                 models: Mapping[str, Tuple[float, float]]):
+        if capacity_bytes <= 0:
+            raise ValueError(
+                f"capacity_bytes must be positive, got {capacity_bytes}")
+        self.capacity_bytes = float(capacity_bytes)
+        self.models = {name: (float(size), float(load))
+                       for name, (size, load) in models.items()}
+        self._resident: "collections.OrderedDict[str, float]" = \
+            collections.OrderedDict()          # name -> weight_bytes
+        self.used_bytes = 0.0
+        self.hits: Dict[str, int] = {}
+        self.misses: Dict[str, int] = {}
+        self.evictions = 0
+        self.load_seconds = 0.0
+
+    def holds(self, model: Optional[str]) -> bool:
+        return model in self._resident
+
+    def resident(self) -> List[str]:
+        """Resident model names, LRU first (the next eviction victim
+        leads)."""
+        return list(self._resident)
+
+    @property
+    def n_hits(self) -> int:
+        return sum(self.hits.values())
+
+    @property
+    def n_misses(self) -> int:
+        return sum(self.misses.values())
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.n_hits + self.n_misses
+        return self.n_hits / total if total else 0.0
+
+    def ensure(self, model: Optional[str]) -> float:
+        """Make ``model`` resident; returns the modeled load seconds
+        (0.0 on a hit, or for untagged/unknown models)."""
+        if model is None or model not in self.models:
+            return 0.0
+        if model in self._resident:
+            self._resident.move_to_end(model)
+            self.hits[model] = self.hits.get(model, 0) + 1
+            return 0.0
+        size, load_s = self.models[model]
+        while self._resident and self.used_bytes + size > self.capacity_bytes:
+            _, evicted = self._resident.popitem(last=False)
+            self.used_bytes -= evicted
+            self.evictions += 1
+        self._resident[model] = size
+        self.used_bytes += size
+        self.misses[model] = self.misses.get(model, 0) + 1
+        self.load_seconds += load_s
+        return load_s
+
+    def stats(self) -> dict:
+        return {"hits": self.n_hits, "misses": self.n_misses,
+                "hit_rate": round(self.hit_rate, 4),
+                "evictions": self.evictions,
+                "load_s": round(self.load_seconds, 4),
+                "resident": self.resident()}
+
+
+def weight_caches(n_workers: int, capacity_bytes: float,
+                  models: Mapping[str, Tuple[float, float]]
+                  ) -> List[WeightCache]:
+    """One independent :class:`WeightCache` per pool worker."""
+    return [WeightCache(capacity_bytes, models) for _ in range(n_workers)]
 
 
 # ------------------------------------------------------- placement ----
@@ -127,20 +230,62 @@ class ClassAffinityPlacement:
         return min(allowed, key=lambda i: (pool.outstanding[i], i))
 
 
+class ModelAffinityPlacement:
+    """Co-locate batches of the same model so weights stay resident.
+
+    An invocation tagged with a registry model (``inv.model``, set by
+    the :class:`~repro.core.engine.InvokerPool`'s ``model_of``) prefers
+    workers that already hold that model's weights:
+
+    * with pool :class:`WeightCache`\\ s, the least-outstanding worker
+      whose cache holds the model wins (real residency);
+    * otherwise each model gets a sticky **home worker** assigned
+      round-robin on first sight, so an N-model workload spreads over
+      the pool while every model's traffic stays on one worker — the
+      sim-platform analogue, where each worker's platform shard then
+      keeps its instances warm for exactly one model.
+
+    Untagged invocations fall back to least-outstanding.  The pool's
+    per-worker in-flight bound still wins over affinity (overflow
+    re-routes, as for every policy) — a resident model is worth a warm
+    start, not an unbounded queue.
+    """
+
+    def __init__(self):
+        self._home: Dict[str, int] = {}
+        self._next = 0
+
+    def choose(self, inv: Invocation, pool: "WorkerPoolExecutor") -> int:
+        model = getattr(inv, "model", None)
+        if model is None:
+            return min(range(pool.n_workers),
+                       key=lambda i: (pool.outstanding[i], i))
+        caches = pool.weight_caches
+        if caches is not None:
+            resident = [i for i in range(pool.n_workers)
+                        if caches[i].holds(model)]
+            if resident:
+                return min(resident,
+                           key=lambda i: (pool.outstanding[i], i))
+        home = self._home.get(model)
+        if home is None:
+            home = self._home[model] = self._next % pool.n_workers
+            self._next += 1
+        return home
+
+
 _PLACEMENTS = {
     "least": LeastOutstandingPlacement,
     "round": RoundRobinPlacement,
     "affinity": lambda: ClassAffinityPlacement(reserve_tightest=1),
+    "model": ModelAffinityPlacement,
 }
 
 
 def make_placement(name: str):
-    """CLI-name -> policy instance (``least`` | ``round`` | ``affinity``)."""
-    try:
-        return _PLACEMENTS[name]()
-    except KeyError:
-        raise ValueError(f"unknown placement {name!r}; "
-                         f"choose from {sorted(_PLACEMENTS)}") from None
+    """CLI-name -> policy instance
+    (``least`` | ``round`` | ``affinity`` | ``model``)."""
+    return lookup("placement", _PLACEMENTS, name)()
 
 
 # ------------------------------------------------------------ pool ----
@@ -167,12 +312,19 @@ class WorkerPoolExecutor:
     """
 
     def __init__(self, workers: Sequence[object], placement=None,
-                 estimator=None):
+                 estimator=None,
+                 weight_caches: Optional[Sequence[WeightCache]] = None):
         if not workers:
             raise ValueError("WorkerPoolExecutor needs at least one worker")
         self.workers = list(workers)
         self.placement = placement or LeastOutstandingPlacement()
         self.estimator = estimator
+        if weight_caches is not None and len(weight_caches) != len(workers):
+            raise ValueError(
+                f"weight_caches has {len(weight_caches)} entries "
+                f"for {len(workers)} workers")
+        self.weight_caches = (list(weight_caches)
+                              if weight_caches is not None else None)
         n = len(self.workers)
         self.outstanding = [0] * n       # unresolved invocations per worker
         self.n_submitted = [0] * n
@@ -209,6 +361,20 @@ class WorkerPoolExecutor:
                 idx = min(room, key=lambda i: (self.outstanding[i], i))
         handle = self.workers[idx].submit(inv)
         handle.worker = idx
+        if self.weight_caches is not None:
+            # charge the weight-swap cost at submit (residency is decided
+            # by where the batch lands, i.e. here, not inside the worker)
+            load_s = self.weight_caches[idx].ensure(
+                getattr(inv, "model", None))
+            if load_s:
+                if handle.t_finish is not None:
+                    handle.t_finish += load_s
+                    if handle.completion is not None:
+                        handle.completion.t_finish += load_s
+                else:
+                    # async worker: finish time unknown until resolve;
+                    # remember the debit and apply it there
+                    handle.load_s += load_s
         self.outstanding[idx] += 1
         self.n_submitted[idx] += 1
         self.n_patches[idx] += len(inv.patches)
@@ -224,6 +390,9 @@ class WorkerPoolExecutor:
         comp = self.workers[handle.worker].resolve(handle)
         w = handle.worker
         comp.worker = w
+        if handle.load_s:
+            comp.t_finish += handle.load_s
+            handle.load_s = 0.0
         self.outstanding[w] -= 1
         elapsed = comp.t_finish - comp.invocation.t_submit
         if math.isfinite(elapsed) and elapsed > 0:
@@ -240,7 +409,14 @@ class WorkerPoolExecutor:
             # t_slack must cover for the firing decision to be safe
             batch = (len(comp.invocation.canvases)
                      or len(comp.invocation.patches))
-            self.estimator.observe(batch, elapsed, worker=w)
+            model = getattr(comp.invocation, "model", None)
+            if model is not None:
+                # pass the model only when tagged: duck-typed estimators
+                # predating multi-model need not accept the kwarg
+                self.estimator.observe(batch, elapsed, worker=w,
+                                       model=model)
+            else:
+                self.estimator.observe(batch, elapsed, worker=w)
         return comp
 
     def on_complete(self, comp: Completion):
@@ -290,8 +466,28 @@ class WorkerPoolExecutor:
                   "busy_s": round(self.busy_s[i], 4)}
             if self.estimator is not None:
                 ws["drift"] = round(self.estimator.drift(worker=i), 3)
+            if self.weight_caches is not None:
+                ws["weights"] = self.weight_caches[i].stats()
             stats.append(ws)
         return stats
+
+    def model_cache_stats(self) -> Dict[str, dict]:
+        """Pool-wide per-model weight-cache counters (empty without
+        caches): hits/misses aggregated over every worker's cache."""
+        if self.weight_caches is None:
+            return {}
+        out: Dict[str, dict] = {}
+        for cache in self.weight_caches:
+            for name in set(cache.hits) | set(cache.misses):
+                row = out.setdefault(name, {"weight_hits": 0,
+                                            "weight_misses": 0})
+                row["weight_hits"] += cache.hits.get(name, 0)
+                row["weight_misses"] += cache.misses.get(name, 0)
+        for row in out.values():
+            total = row["weight_hits"] + row["weight_misses"]
+            row["weight_hit_rate"] = (round(row["weight_hits"] / total, 4)
+                                      if total else 0.0)
+        return out
 
 
 def share_frame_store(executors: Sequence[object]) -> None:
@@ -311,11 +507,14 @@ def share_frame_store(executors: Sequence[object]) -> None:
 
 
 def device_worker_pool(n_workers: int, make_executor: Callable[[int], object],
-                       placement=None, estimator=None) -> WorkerPoolExecutor:
+                       placement=None, estimator=None,
+                       weight_caches: Optional[Sequence[WeightCache]] = None
+                       ) -> WorkerPoolExecutor:
     """Build a device pool: ``make_executor(i)`` constructs worker ``i``
     (typically an ``AsyncDeviceExecutor`` over mesh slice ``i``); the
     frame stores are shared and the pool assembled."""
     workers = [make_executor(i) for i in range(n_workers)]
     share_frame_store(workers)
     return WorkerPoolExecutor(workers, placement=placement,
-                              estimator=estimator)
+                              estimator=estimator,
+                              weight_caches=weight_caches)

@@ -75,12 +75,15 @@ from repro import param as param_lib
 from repro.compat import shardingx
 from repro.config import DetectorConfig
 from repro.core.clock import make_clock
-from repro.core.config import ServeConfig
-from repro.core.engine import (ServingEngine, make_executor, uniform_pool)
+from repro.core.config import ServeConfig, make_classify
+from repro.core.engine import (InvokerPool, ModelRuntime, ServingEngine,
+                               make_executor, uniform_pool)
 from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
-from repro.core.latency import OnlineLatencyTable, measure
+from repro.core.invoker import SLOAwareInvoker
+from repro.core.latency import LatencyBank, OnlineLatencyTable, measure
+from repro.core.models import make_model
 from repro.core.workers import (WorkerPoolExecutor, device_worker_pool,
-                                make_placement)
+                                make_placement, weight_caches)
 from repro.launch.mesh import make_serve_mesh, make_worker_meshes
 from repro.models import detector as detector_lib
 from repro.sharding import ShardingConfig
@@ -100,11 +103,13 @@ def build_detector(canvas: int = 256):
     return cfg, params, serve_fn, rules
 
 
-def build_source(args, frame_sink):
+def build_source(args, frame_sink, slos):
     """CLI -> source, through ``make_source``.  ``trace`` runs the same
     camera pipeline eagerly (no backpressure — the events pre-date the
-    run) and replays the pre-shaped arrivals."""
-    common = dict(n_frames=args.frames, canvas=args.canvas, slo=args.slo,
+    run) and replays the pre-shaped arrivals.  Multiple ``--slo`` values
+    run one camera per class (distinct camera ids keep frame ids unique
+    in the shared store) merged into one trace."""
+    common = dict(n_frames=args.frames, canvas=args.canvas, slo=slos[0],
                   bandwidth_bps=args.bandwidth_mbps * 1e6,
                   overload=args.overload, frame_sink=frame_sink,
                   rate=RateProfile(fps=args.fps))
@@ -113,14 +118,24 @@ def build_source(args, frame_sink):
     live = dict(scene=args.scene, n_cameras=args.cameras, **common)
     if args.source == "synthetic":
         return make_source("synthetic", **live)
-    cam = make_source("synthetic", **live)
-    return make_source("trace", arrivals=list(cam.events(None)))
+    if len(slos) == 1:
+        cam = make_source("synthetic", **live)
+        return make_source("trace", arrivals=list(cam.events(None)))
+    events = []
+    for i, slo in enumerate(slos):
+        per = dict(live, slo=slo, scene=args.scene + i, n_cameras=1,
+                   camera_id=i)
+        events.extend(make_source("synthetic", **per).events(None))
+    events.sort(key=lambda a: a.t_arrive)
+    return make_source("trace", arrivals=events)
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--frames", type=int, default=40)
-    p.add_argument("--slo", type=float, default=1.0)
+    p.add_argument("--slo", default="1.0",
+                   help="SLO seconds; a comma list (e.g. 0.5,2.0) runs one "
+                        "camera per class and shards the invoker per SLO")
     p.add_argument("--canvas", type=int, default=256)
     p.add_argument("--scene", type=int, default=0)
     p.add_argument("--fps", type=float, default=10.0)
@@ -164,12 +179,24 @@ def main(argv=None):
                         "split into this many independent mesh slices, "
                         "each an overlapped (async) executor, and "
                         "concurrent invocations are routed across them")
-    p.add_argument("--placement", choices=("least", "round", "affinity"),
+    p.add_argument("--placement",
+                   choices=("least", "round", "affinity", "model"),
                    default="least",
                    help="worker placement policy with --workers > 1: "
-                        "least-outstanding (default), round-robin, or "
+                        "least-outstanding (default), round-robin, "
                         "class-affinity (tightest SLO class gets worker 0 "
-                        "once a second class appears)")
+                        "once a second class appears), or model-affinity "
+                        "(same-model batches co-locate so weights stay "
+                        "resident)")
+    p.add_argument("--model", default=None,
+                   help="registry model to serve (repro.core.models; "
+                        "default: the historical tiny built-in detector)")
+    p.add_argument("--model-map", action="append", default=None,
+                   metavar="CLASS=MODEL",
+                   help="route an SLO class to a registry model, e.g. "
+                        "--model-map 0.5=vit_s16 --model-map 2.0=tangram; "
+                        "repeatable; classes not mapped fall back to "
+                        "--model")
     p.add_argument("--online-latency", action="store_true",
                    help="fold observed per-worker completion times back "
                         "into the latency table (EWMA) so firing decisions "
@@ -182,10 +209,23 @@ def main(argv=None):
         p.error("--cameras must be >= 1")
     if args.source == "file" and not args.frames_path:
         p.error("--source file requires --frames-path")
+    try:
+        slos = [float(s) for s in str(args.slo).split(",")]
+    except ValueError:
+        p.error(f"--slo must be a float or comma list, got {args.slo!r}")
+    if len(slos) > 1 and args.source != "trace":
+        p.error("multiple --slo classes need --source trace")
+    model_map = None
+    if args.model_map:
+        try:
+            model_map = dict(kv.split("=", 1) for kv in args.model_map)
+        except ValueError:
+            p.error("--model-map entries must look like CLASS=MODEL")
 
     # every pipeline choice below is a field of this one record
     config = ServeConfig(
         max_canvases=4,
+        classify="slo" if (model_map or len(slos) > 1) else None,
         executor="async_device" if args.async_device or args.workers > 1
         else "device",
         use_pallas=args.use_pallas_stitch,
@@ -193,10 +233,23 @@ def main(argv=None):
         clock=args.clock, wall_speed=args.wall_speed,
         n_workers=args.workers, placement=args.placement,
         online_latency=args.online_latency,
-        source=args.source, ingestion_window=args.ingestion_window)
+        source=args.source, ingestion_window=args.ingestion_window,
+        model=args.model, model_map=model_map)
 
-    cfg, params, serve_fn, rules = build_detector(args.canvas)
     m = n = args.canvas
+    if config.multi_model:
+        # lazy registry builds: each referenced model jit-compiles its
+        # (reduced) trunk at the CLI canvas, with per-name weight seeds
+        specs = {name: make_model(name) for name in config.model_names()}
+        builds = {name: spec.build(canvas=args.canvas)
+                  for name, spec in specs.items()}
+        default_model = config.model or sorted(builds)[0]
+        cfg, params, serve_fn, rules = builds[default_model]
+        print(f"models: {', '.join(sorted(builds))} "
+              f"(default {default_model})")
+    else:
+        specs, builds, default_model = {}, {}, None
+        cfg, params, serve_fn, rules = build_detector(args.canvas)
     if config.n_workers > 1:
         meshes = make_worker_meshes(config.n_workers)
     else:
@@ -211,18 +264,47 @@ def main(argv=None):
     # offline profiling (the paper's 1000-iteration stage, scaled down)
     # under the same data-parallel layout execution will use; the sync
     # hook keeps jit's async dispatch inside the timed region
-    def run_batch(b):
-        x = jnp.zeros((b, m, n, 3), jnp.float32)
-        x, _ = shard_canvases(x, mesh, rules)
-        return serve_fn(params, x)
-    table = measure(run_batch, batch_sizes=(1, 2, 4), iters=5, warmup=1,
-                    sync=jax.block_until_ready)
+    def profile(fn, pr, rl):
+        def run_batch(b):
+            x = jnp.zeros((b, m, n, 3), jnp.float32)
+            x, _ = shard_canvases(x, mesh, rl)
+            return fn(pr, x)
+        return measure(run_batch, batch_sizes=(1, 2, 4), iters=5, warmup=1,
+                       sync=jax.block_until_ready)
+
+    table = profile(serve_fn, params, rules)
     print("latency table:",
           {k: (round(v[0], 4), round(v[1], 4)) for k, v in table.table.items()})
+    model_tables = {}
+    for name, (_, pr, fn, rl) in builds.items():
+        model_tables[name] = (table if name == default_model
+                              else profile(fn, pr, rl))
     if config.online_latency:
         # one estimator instance, shared between the invoker pool (reads
-        # t_slack) and the worker pool (feeds observations back)
+        # t_slack) and the worker pool (feeds observations back); with
+        # models it is a LatencyBank routing observations per model
         table = OnlineLatencyTable(table)
+        model_tables = {name: (table if name == default_model
+                               else OnlineLatencyTable(t))
+                        for name, t in model_tables.items()}
+    estimator = None
+    if config.online_latency:
+        estimator = (LatencyBank(model_tables) if config.multi_model
+                     else table)
+
+    def runtimes(mesh_i):
+        """Per-model device runtimes on one worker's mesh slice."""
+        return {name: ModelRuntime(fn, pr, m, n, mesh=mesh_i, rules=rl)
+                for name, (_, pr, fn, rl) in builds.items()}
+
+    caches = None
+    if config.multi_model and len(specs) > 1:
+        # each worker holds the largest single model: swaps are real and
+        # model-affinity placement is what avoids paying them repeatedly
+        caches = weight_caches(
+            config.n_workers,
+            max(s.weight_bytes for s in specs.values()),
+            {name: (s.weight_bytes, s.load_s) for name, s in specs.items()})
 
     t_start = time.time()
     if config.n_workers > 1:
@@ -234,22 +316,40 @@ def main(argv=None):
                 config.executor, serve_fn=serve_fn, params=params,
                 canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
                 mesh=meshes[i], rules=rules,
-                max_inflight=config.max_inflight),
+                max_inflight=config.max_inflight,
+                models=runtimes(meshes[i]) if builds else None),
             placement=make_placement(config.placement),
-            estimator=table if config.online_latency else None)
+            estimator=estimator, weight_caches=caches)
     else:
         executor = make_executor(
             config.executor, serve_fn=serve_fn, params=params,
             canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
-            mesh=mesh, rules=rules, max_inflight=config.max_inflight)
-        if config.online_latency:
-            # a 1-worker pool only adds the estimator feedback loop: the
-            # wrapped executor keeps its sync-vs-async semantics, so the
-            # flag never changes execution mode behind the user's back
-            executor = WorkerPoolExecutor([executor], estimator=table)
+            mesh=mesh, rules=rules, max_inflight=config.max_inflight,
+            models=runtimes(mesh) if builds else None)
+        if config.online_latency or caches is not None:
+            # a 1-worker pool only adds the estimator feedback loop and
+            # weight-cache accounting: the wrapped executor keeps its
+            # sync-vs-async semantics, so the flags never change
+            # execution mode behind the user's back
+            executor = WorkerPoolExecutor([executor], estimator=estimator,
+                                          weight_caches=caches)
 
-    source = build_source(args, frame_sink=executor.add_frame)
-    pool = uniform_pool(m, n, table, max_canvases=config.max_canvases)
+    source = build_source(args, frame_sink=executor.add_frame, slos=slos)
+    if config.multi_model:
+        # per-class invokers: each SLO class fires against its model's
+        # own latency table, so t_slack is per-model (Eqn. 8 per tenant)
+        def make_invoker(key):
+            name = config.resolve_model(key) or default_model
+            return SLOAwareInvoker(m, n, model_tables[name],
+                                   max_canvases=config.max_canvases)
+
+        pool = InvokerPool(
+            make_invoker,
+            classify=make_classify(config.classify) or (lambda p: None),
+            model_of=lambda key: config.resolve_model(key) or default_model)
+    else:
+        pool = uniform_pool(m, n, table, max_canvases=config.max_canvases,
+                            classify=make_classify(config.classify))
     engine = ServingEngine(pool, executor,
                            clock=make_clock(config.clock,
                                             speed=config.wall_speed),
@@ -290,6 +390,24 @@ def main(argv=None):
             print(f"  worker {ws['worker']}: {ws['invocations']} "
                   f"invocations, {ws['patches']} patches, "
                   f"busy {ws['busy_s']:.3f}s{drift}")
+    by_model = {}
+    for o in outcomes:
+        if o.model is not None:
+            row = by_model.setdefault(o.model, [0, 0])
+            row[0] += 1
+            row[1] += int(o.violated)
+    if by_model:
+        cache_stats = (executor.model_cache_stats()
+                       if hasattr(executor, "model_cache_stats") else {})
+        for name in sorted(by_model):
+            served, viol = by_model[name]
+            extra = ""
+            cs = cache_stats.get(name)
+            if cs:
+                extra = (f", weight hits {cs['weight_hits']}/"
+                         f"{cs['weight_hits'] + cs['weight_misses']}")
+            print(f"  model {name}: {served} patches, "
+                  f"{viol} violations{extra}")
 
 
 if __name__ == "__main__":

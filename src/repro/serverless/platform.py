@@ -21,6 +21,13 @@ from repro.core.latency import LatencyTable
 @dataclasses.dataclass(frozen=True)
 class PlatformConfig:
     cold_start_s: float = 0.25       # container + weights to accelerator
+    container_cold_s: Optional[float] = None
+                                     # multi-model decomposition: the
+                                     # container-only share of a cold start
+                                     # (weights billed separately per model
+                                     # via submit's model_load_s).  None:
+                                     # cold_start_s covers the container and
+                                     # the model load rides on top.
     keep_alive_s: float = 60.0
     max_instances: int = 64
     concurrency: int = 1             # paper setting
@@ -62,6 +69,8 @@ class PlatformConfig:
 class _Instance:
     free_at: float = 0.0
     warm_until: float = -1.0
+    model: Optional[str] = None      # weights currently resident (None:
+                                     # nothing loaded / single-model legacy)
 
 
 @dataclasses.dataclass
@@ -79,6 +88,9 @@ class ExecutionRecord:
     backup_instance: int = -1    # hedged backup's instance (-1: none)
     backup_t_start: float = 0.0
     backup_exec_s: float = 0.0
+    model: Optional[str] = None  # registry model the batch ran
+    load_s: float = 0.0          # weight-load seconds paid (0.0: warm hit)
+    weight_loaded: bool = False  # the instance swapped weights in
 
 
 class Platform:
@@ -95,8 +107,10 @@ class Platform:
 
     # ----------------------------------------------------------- sampling ----
 
-    def _sample_exec(self, batch_size: int) -> Tuple[float, bool]:
-        mu, sigma = self.latency.mu_sigma(batch_size)
+    def _sample_exec(self, batch_size: int,
+                     table: Optional[LatencyTable] = None
+                     ) -> Tuple[float, bool]:
+        mu, sigma = (table or self.latency).mu_sigma(batch_size)
         t = mu + abs(float(self._rng.normal())) * sigma  # one-sided jitter
         straggler = bool(self._rng.random() < self.cfg.straggler_prob)
         if straggler:
@@ -105,39 +119,76 @@ class Platform:
 
     # ---------------------------------------------------------- placement ----
 
-    def _acquire(self, t: float) -> Tuple[_Instance, float, bool]:
+    @property
+    def _container_cold_s(self) -> float:
+        cc = self.cfg.container_cold_s
+        return self.cfg.cold_start_s if cc is None else cc
+
+    def _acquire(self, t: float, model: Optional[str] = None,
+                 load_s: float = 0.0
+                 ) -> Tuple[_Instance, float, bool, bool]:
         """Pick a warm free instance, else scale up (cold start), else
-        queue on the earliest-free instance.
+        queue on the earliest-free instance.  Returns ``(instance, start,
+        cold, loaded)``.
 
         Among warm free instances the *most recently used* one (max
         ``warm_until``) wins: traffic concentrates on a small hot set, so
         the idle tail cools and falls out of keep-alive instead of every
         instance's lease being refreshed round-robin by stray requests.
+
+        Multi-model economics: an instance warm for model A is *not* warm
+        for model B — a warm-free instance holding the right ``model``
+        beats one holding another model, which still saves the container
+        cold start but pays ``load_s`` to swap weights in.  A genuine
+        scale-up pays the container share (``container_cold_s``, falling
+        back to ``cold_start_s``) plus ``load_s``.  With ``model=None``
+        every instance matches (all start at model ``None``) and the
+        behaviour is exactly the legacy single-model path.
         """
         warm_free = [i for i in self.instances
                      if i.free_at <= t and i.warm_until >= t]
         if warm_free:
-            return max(warm_free, key=lambda i: i.warm_until), t, False
+            same = [i for i in warm_free if i.model == model]
+            if same:
+                return max(same, key=lambda i: i.warm_until), t, False, False
+            # warm container, wrong weights: swap in
+            inst = max(warm_free, key=lambda i: i.warm_until)
+            return inst, t + load_s, False, load_s > 0
         if len(self.instances) < self.cfg.max_instances:
             inst = _Instance()
             self.instances.append(inst)
-            return inst, t + self.cfg.cold_start_s, True
+            return (inst, t + self._container_cold_s + load_s, True,
+                    load_s > 0)
         inst = min(self.instances, key=lambda i: i.free_at)
         start = max(t, inst.free_at)
         cold = inst.warm_until < start
+        loaded = False
         if cold:
-            start += self.cfg.cold_start_s
-        return inst, start, cold
+            start += self._container_cold_s + load_s
+            loaded = load_s > 0
+        elif inst.model != model:
+            start += load_s
+            loaded = load_s > 0
+        return inst, start, cold, loaded
 
     # ------------------------------------------------------------- submit ----
 
     def submit(self, t_submit: float, batch_size: int,
-               n_patches: int = 0) -> ExecutionRecord:
-        inst, t_start, cold = self._acquire(t_submit)
-        exec_s, straggler = self._sample_exec(batch_size)
+               n_patches: int = 0, model: Optional[str] = None,
+               model_load_s: float = 0.0,
+               latency: Optional[LatencyTable] = None) -> ExecutionRecord:
+        """Run one batch.  ``model``/``model_load_s`` opt into per-model
+        warm pools (see :meth:`_acquire`); ``latency`` overrides the
+        platform table for this submission (each model samples from its
+        own profile).  The defaults reproduce the single-model platform
+        exactly."""
+        inst, t_start, cold, loaded = self._acquire(t_submit, model=model,
+                                                    load_s=model_load_s)
+        table = latency or self.latency
+        exec_s, straggler = self._sample_exec(batch_size, table)
 
         hedged = False
-        mu, sigma = self.latency.mu_sigma(batch_size)
+        mu, sigma = table.mu_sigma(batch_size)
         threshold = mu + self.cfg.backup_after_sigma * sigma
         t_finish = t_start + exec_s
         cost = self.meter.charge(exec_s)
@@ -149,17 +200,20 @@ class Platform:
         # instance (double-billed warm time, utilization > 1 possible)
         inst.free_at = t_start + exec_s
         inst.warm_until = inst.free_at + self.cfg.keep_alive_s
+        inst.model = model
 
         b_instance, b_start, backup_exec = -1, 0.0, 0.0
         if exec_s > threshold:
             # hedged backup on a second instance, fired at the threshold
             hedged = True
-            backup_exec, _ = self._sample_exec(batch_size)
-            inst2, b_start, b_cold = self._acquire(t_start + threshold)
+            backup_exec, _ = self._sample_exec(batch_size, table)
+            inst2, b_start, b_cold, _ = self._acquire(
+                t_start + threshold, model=model, load_s=model_load_s)
             t_finish = min(t_finish, b_start + backup_exec)
             cost += self.meter.charge(backup_exec)
             inst2.free_at = b_start + backup_exec
             inst2.warm_until = inst2.free_at + self.cfg.keep_alive_s
+            inst2.model = model
             b_instance = self.instances.index(inst2)
 
         rec = ExecutionRecord(t_submit, t_start, t_finish, exec_s,
@@ -168,7 +222,10 @@ class Platform:
                               instance=self.instances.index(inst),
                               backup_instance=b_instance,
                               backup_t_start=b_start,
-                              backup_exec_s=backup_exec)
+                              backup_exec_s=backup_exec,
+                              model=model,
+                              load_s=model_load_s if loaded else 0.0,
+                              weight_loaded=loaded)
         self.records.append(rec)
         return rec
 
@@ -207,6 +264,36 @@ class Platform:
         if not self.instances or horizon <= 0:
             return 0.0
         return self.meter.busy_seconds / (len(self.instances) * horizon)
+
+    def model_stats(self) -> dict:
+        """Per-model platform economics over this platform's records
+        (empty when no record was model-tagged): invocations, patches,
+        cold starts, weight loads + seconds, and the weight warm-hit
+        rate ``1 - weight_loads / invocations``."""
+        return model_stats(self.records)
+
+
+def model_stats(records: List[ExecutionRecord]) -> dict:
+    """Aggregate per-model counters from execution records (shared by
+    :meth:`Platform.model_stats` and multi-shard scheduler assembly)."""
+    out: dict = {}
+    for r in records:
+        if r.model is None:
+            continue
+        row = out.setdefault(r.model, {
+            "invocations": 0, "patches": 0, "cold_starts": 0,
+            "weight_loads": 0, "load_seconds": 0.0})
+        row["invocations"] += 1
+        row["patches"] += r.n_patches
+        row["cold_starts"] += int(r.cold)
+        row["weight_loads"] += int(r.weight_loaded)
+        row["load_seconds"] += r.load_s
+    for row in out.values():
+        n = row["invocations"]
+        row["load_seconds"] = round(row["load_seconds"], 4)
+        row["weight_hit_rate"] = (round(1.0 - row["weight_loads"] / n, 4)
+                                  if n else 0.0)
+    return out
 
 
 def mean_consolidation(records: List[ExecutionRecord]) -> float:

@@ -32,6 +32,7 @@ from typing import Callable, Dict, Iterator, List, Protocol, Sequence, \
     runtime_checkable
 
 from repro.data.video import Arrival
+from repro.core.registry import lookup
 
 
 @dataclasses.dataclass
@@ -120,9 +121,5 @@ def make_source(name: str, **cfg) -> Source:
     """Source-name -> instance (``trace`` | ``synthetic`` | ``file``),
     mirroring ``make_placement`` / ``make_clock`` / ``make_executor``.
     ``cfg`` forwards to the registered factory."""
-    try:
-        factory = _SOURCES[name]
-    except KeyError:
-        raise ValueError(f"unknown source {name!r}; "
-                         f"choose from {sorted(_SOURCES)}") from None
+    factory = lookup("source", _SOURCES, name)
     return factory(**cfg)

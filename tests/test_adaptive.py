@@ -156,7 +156,7 @@ def test_pool_from_specs_per_class_geometry():
 def test_pool_from_specs_default_and_missing():
     specs = {TIGHT: ClassSpec(128, 128, table())}
     pool = pool_from_specs(specs, classify=slo_class)
-    with pytest.raises(KeyError):
+    with pytest.raises(ValueError, match="unknown SLO class"):
         pool.on_patch(0.0, patch(0.0, slo=LOOSE))
     pool = pool_from_specs(specs, default=ClassSpec(64, 64, table()),
                            classify=slo_class)

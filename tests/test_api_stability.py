@@ -17,9 +17,9 @@ import pytest
 PUBLIC_API = {
     "repro.core.engine": {
         "AsyncDeviceExecutor", "DeviceExecutor", "ExecHandle", "Invocation",
-        "InvokerPool", "PatchOutcome", "Results", "ServingEngine",
-        "SimExecutor", "make_executor", "shard_canvases", "slo_class",
-        "uniform_pool",
+        "InvokerPool", "ModelRuntime", "PatchOutcome", "Results",
+        "ServingEngine", "SimExecutor", "make_executor", "shard_canvases",
+        "slo_class", "uniform_pool",
     },
     "repro.core.scheduler": {
         "PatchOutcome", "Results", "ServeConfig", "TangramScheduler",
@@ -31,11 +31,15 @@ PUBLIC_API = {
         "Clock", "VirtualClock", "WallClock", "make_clock",
     },
     "repro.core.latency": {
-        "LatencyTable", "OnlineLatencyTable", "latency_from_dict",
-        "measure",
+        "LatencyBank", "LatencyTable", "OnlineLatencyTable",
+        "latency_from_dict", "measure",
     },
     "repro.core.workers": {
-        "WorkerPoolExecutor", "device_worker_pool", "make_placement",
+        "WeightCache", "WorkerPoolExecutor", "device_worker_pool",
+        "make_placement", "weight_caches",
+    },
+    "repro.core.models": {
+        "ModelSpec", "make_model", "model_names", "register_model",
     },
     "repro.core.rois": {
         "RoIConfig", "extract_rois", "extract_rois_jit",
@@ -60,7 +64,8 @@ REGISTRIES = {
     "source": ("trace", "synthetic", "file"),
     "clock": ("virtual", "wall"),
     "executor": ("sim", "device", "async_device"),
-    "placement": ("least", "round", "affinity"),
+    "placement": ("least", "round", "affinity", "model"),
+    "model": ("tangram", "vit_s16", "efficientnet_b7"),
 }
 
 #: the ServeConfig record itself is serialized into benchmark JSON;
@@ -69,7 +74,7 @@ SERVE_CONFIG_FIELDS = {
     "max_canvases", "incremental", "classify", "adaptive",
     "executor", "use_pallas", "max_inflight", "clock", "wall_speed",
     "check_invariants", "n_workers", "placement", "online_latency",
-    "source", "ingestion_window",
+    "source", "ingestion_window", "model", "model_map",
 }
 
 
@@ -101,6 +106,11 @@ def test_placement_registry():
     from repro.core.workers import make_placement
     for name in REGISTRIES["placement"]:
         assert make_placement(name) is not None
+
+
+def test_model_registry():
+    from repro.core.models import model_names
+    assert set(REGISTRIES["model"]) <= set(model_names())
 
 
 def test_serve_config_fields_stable():

@@ -181,12 +181,12 @@ class TestPlatform:
         at the end (the idle tail cools instead of being churned)."""
         class FirstFreePlatform(Platform):
             # the pre-MRU policy, kept here as the comparison arm
-            def _acquire(self, t):
+            def _acquire(self, t, model=None, load_s=0.0):
                 warm_free = [i for i in self.instances
                              if i.free_at <= t and i.warm_until >= t]
                 if warm_free:
-                    return warm_free[0], t, False
-                return super()._acquire(t)
+                    return warm_free[0], t, False, False
+                return super()._acquire(t, model=model, load_s=load_s)
 
         bursts = [(2.259, 1), (2.358, 1), (3.924, 1), (4.034, 1), (4.14, 2),
                   (5.705, 1), (5.72, 1), (5.823, 1), (5.917, 1), (5.932, 1),

@@ -184,6 +184,65 @@ def test_sim_and_device_executors_share_invocation_boundaries():
     assert dev_exec.n_invocations == len(dev.invocations)
 
 
+def test_two_model_scheduler_sim_and_device_share_boundaries():
+    """Same identity property under a two-model ServeConfig: with each
+    SLO class mapped to its own registry model, the sim run (per-model
+    warm pools + load costs on the platform) and the device run (a
+    DeviceExecutor with per-model runtimes) group patches into the same
+    invocations, and every outcome carries the model its class maps
+    to."""
+    from repro.core.config import ServeConfig
+    from repro.core.engine import ModelRuntime
+    from repro.core.models import ModelSpec, register_model
+    from repro.core.scheduler import TangramScheduler
+
+    register_model(ModelSpec(name="eng-fast", canvas_m=64, canvas_n=64,
+                             weight_bytes=1e9, table=table(mu=0.05, sigma=0)))
+    register_model(ModelSpec(name="eng-heavy", canvas_m=64, canvas_n=64,
+                             weight_bytes=4e9, table=table(mu=0.3, sigma=0)))
+    cfg = ServeConfig(classify="slo",
+                      model_map={"0.6": "eng-fast", "2.0": "eng-heavy"})
+    trace = trace_for_device()
+    lat = table()
+    calls = {"eng-fast": 0, "eng-heavy": 0}
+
+    def counting(name):
+        def fn(params, x):
+            calls[name] += 1
+            return fake_serve_fn(params, x)
+        return fn
+
+    def run(executor=None):
+        sched = TangramScheduler(64, 64, lat,
+                                 Platform(lat, PlatformConfig()),
+                                 config=cfg, executor=executor)
+        res = sched.run([trace], bandwidth_bps=1e12)
+        groups = {}
+        for o in res.outcomes:
+            groups.setdefault((o.model, round(o.t_submit, 9)),
+                              set()).add(idx[id(o.patch)])
+        return res, groups
+
+    idx = {id(p): i for i, p in enumerate(trace)}
+    sim_res, sim_groups = run()
+    dev = DeviceExecutor(
+        fake_serve_fn, None, 64, 64,
+        models={"eng-fast": ModelRuntime(counting("eng-fast"), None, 64, 64),
+                "eng-heavy": ModelRuntime(counting("eng-heavy"),
+                                          None, 64, 64)})
+    dev_res, dev_groups = run(executor=dev)
+
+    assert sim_groups == dev_groups
+    for res in (sim_res, dev_res):
+        for o in res.outcomes:
+            assert o.model == ("eng-fast" if o.patch.slo == 0.6
+                               else "eng-heavy")
+        assert set(res.summary()["models"]) >= {"eng-fast", "eng-heavy"}
+    # the device run routed every invocation through its model's runtime
+    assert calls["eng-fast"] > 0 and calls["eng-heavy"] > 0
+    assert sum(calls.values()) == dev.n_invocations
+
+
 # ---------------------------------------------- event ordering at ties ----
 
 class RecordingPool:

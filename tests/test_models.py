@@ -1,0 +1,395 @@
+"""Model identity end-to-end: registry, weight caches, placement,
+per-model platform economics, and the latency bank.
+
+Covers the multi-model PR acceptance criteria:
+
+* ``ModelSpec`` / ``make_model`` — arch-derived defaults (canvas
+  geometry, weight bytes, load seconds), explicit-table precedence,
+  the unified unknown-name error;
+* ``WeightCache`` — deterministic LRU eviction and load-cost
+  accounting, including through a ``WorkerPoolExecutor`` (sync and
+  async workers);
+* ``ModelAffinityPlacement`` — same-model batches co-locate (cache
+  residency when caches exist, sticky homes otherwise);
+* platform per-model warm pools — an instance warm for model A is cold
+  for model B; cold starts decompose into container + weight load; the
+  ``model=None`` path is byte-identical to the legacy single-model
+  platform;
+* ``LatencyBank`` — per-model observation routing so ``t_slack`` and
+  AIMD adapt per model;
+* a two-class two-model ``TangramScheduler`` run: per-model latency
+  feeds ``t_slack``, model-affinity placement loads each model's
+  weights once while model-oblivious placement keeps swapping.
+"""
+import math
+
+import pytest
+
+from repro.core.config import ServeConfig
+from repro.core.engine import Completion, ExecHandle
+from repro.core.invoker import Invocation
+from repro.core.latency import LatencyBank, LatencyTable, OnlineLatencyTable
+from repro.core.models import ModelSpec, make_model, model_names, \
+    register_model
+from repro.core.partitioning import Patch
+from repro.core.scheduler import TangramScheduler
+from repro.core.workers import (ModelAffinityPlacement, WeightCache,
+                                WorkerPoolExecutor, make_placement,
+                                weight_caches)
+from repro.serverless.platform import Platform, PlatformConfig
+
+
+def table(mu=0.1, sigma=0.0, n=16):
+    return LatencyTable({b: (mu * b, sigma) for b in range(1, n + 1)},
+                        slack_sigmas=3.0)
+
+
+def _inv(model=None, key=None, t=0.0, n_patches=1):
+    ps = [Patch(0, 0, 16, 16, t_gen=t, slo=1.0) for _ in range(n_patches)]
+    return Invocation(t, [], ps, 0.0, "timer", key=key, model=model)
+
+
+# ------------------------------------------------------------ registry ----
+
+class TestRegistry:
+    def test_zoo_is_seeded(self):
+        assert {"tangram", "vit_s16", "efficientnet_b7"} <= set(model_names())
+
+    def test_unknown_model_unified_error(self):
+        with pytest.raises(ValueError, match="unknown model 'nope'"):
+            make_model("nope")
+
+    def test_register_last_wins(self):
+        register_model(ModelSpec(name="dup", canvas_m=32, canvas_n=32,
+                                 weight_bytes=1.0, table=table()))
+        register_model(ModelSpec(name="dup", canvas_m=64, canvas_n=64,
+                                 weight_bytes=2.0, table=table()))
+        assert make_model("dup").canvas_m == 64
+
+    def test_arch_derived_defaults(self):
+        spec = make_model("tangram")
+        a = spec.arch
+        assert (spec.canvas_m, spec.canvas_n) == (a.canvas, a.canvas)
+        per_param = 2 if a.param_dtype in ("bfloat16", "float16") else 4
+        assert spec.weight_bytes == pytest.approx(a.n_params * per_param)
+        assert spec.load_s == pytest.approx(spec.weight_bytes / spec.load_bw)
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="canvas geometry"):
+            ModelSpec(name="bad", weight_bytes=1.0, table=table())
+        with pytest.raises(ValueError, match="weight_bytes"):
+            ModelSpec(name="bad", canvas_m=32, canvas_n=32, table=table())
+        with pytest.raises(ValueError, match="latency source"):
+            ModelSpec(name="bad", canvas_m=32, canvas_n=32, weight_bytes=1.0)
+
+    def test_explicit_table_wins_and_arch_builds_one(self):
+        t = table(mu=0.5)
+        spec = ModelSpec(name="tabled", canvas_m=32, canvas_n=32,
+                         weight_bytes=1.0, table=t)
+        assert spec.latency_table() is t
+        derived = make_model("tangram").latency_table(max_batch=4)
+        assert derived.t_slack(1) > 0
+
+    def test_reduced_archs_differ_per_trunk(self):
+        r1 = make_model("tangram").reduced_arch(256)
+        r2 = make_model("vit_s16").reduced_arch(256)
+        assert r1.name != r2.name
+        assert (r1.d_model, r1.n_layers) != (r2.d_model, r2.n_layers) or \
+            r1.patch != r2.patch
+
+
+# -------------------------------------------------------- weight cache ----
+
+class TestWeightCache:
+    MODELS = {"a": (60.0, 1.0), "b": (60.0, 2.0), "c": (50.0, 0.5)}
+
+    def test_lru_eviction_is_deterministic(self):
+        c = WeightCache(120.0, self.MODELS)
+        assert c.ensure("a") == 1.0          # miss: load
+        assert c.ensure("b") == 2.0          # fits alongside a
+        assert c.resident() == ["a", "b"]
+        assert c.ensure("a") == 0.0          # hit touches a MRU
+        assert c.resident() == ["b", "a"]
+        assert c.ensure("c") == 0.5          # evicts b (LRU), not a
+        assert c.resident() == ["a", "c"]
+        assert c.evictions == 1
+        # replay is bit-identical: no clock, no randomness
+        c2 = WeightCache(120.0, self.MODELS)
+        for m in ("a", "b", "a", "c"):
+            c2.ensure(m)
+        assert c2.resident() == c.resident()
+        assert c2.used_bytes == c.used_bytes
+
+    def test_load_cost_accounting(self):
+        c = WeightCache(60.0, self.MODELS)
+        total = sum(c.ensure(m) for m in ("a", "b", "a", "b"))
+        # capacity for one model: every switch reloads
+        assert total == pytest.approx(1.0 + 2.0 + 1.0 + 2.0)
+        assert c.load_seconds == pytest.approx(total)
+        assert c.n_hits == 0 and c.n_misses == 4
+        assert c.hit_rate == 0.0
+
+    def test_untagged_and_unknown_are_free(self):
+        c = WeightCache(100.0, self.MODELS)
+        assert c.ensure(None) == 0.0
+        assert c.ensure("unknown") == 0.0
+        assert c.resident() == []
+
+    def test_oversized_model_still_loads_alone(self):
+        c = WeightCache(10.0, {"big": (100.0, 3.0)})
+        assert c.ensure("big") == 3.0
+        assert c.resident() == ["big"]
+        assert c.ensure("big") == 0.0        # resident despite oversize
+
+    def test_weight_caches_are_independent(self):
+        cs = weight_caches(2, 100.0, self.MODELS)
+        cs[0].ensure("a")
+        assert cs[0].holds("a") and not cs[1].holds("a")
+
+
+# ----------------------------------------------- model-affinity placement ----
+
+class _InstantWorker:
+    """Sync worker: completion known at submit (SimExecutor-shaped)."""
+
+    def __init__(self, service_s=0.1):
+        self.service_s = service_s
+
+    def submit(self, inv):
+        comp = Completion(inv, inv.t_submit + self.service_s)
+        return ExecHandle(inv, t_finish=comp.t_finish, completion=comp)
+
+    def resolve(self, handle):
+        return handle.completion
+
+
+class _DeferredWorker:
+    """Async worker: finish time unknown until resolve."""
+
+    def submit(self, inv):
+        return ExecHandle(inv, t_finish=None)
+
+    def resolve(self, handle):
+        return Completion(handle.invocation, handle.invocation.t_submit + 0.1)
+
+
+class TestModelAffinityPlacement:
+    def test_registered_in_factory(self):
+        assert isinstance(make_placement("model"), ModelAffinityPlacement)
+
+    def test_cache_residency_wins(self):
+        caches = weight_caches(2, 100.0, {"m": (50.0, 1.0)})
+        pool = WorkerPoolExecutor([_InstantWorker(), _InstantWorker()],
+                                  placement=ModelAffinityPlacement(),
+                                  weight_caches=caches)
+        caches[1].ensure("m")                # worker 1 already holds m
+        assert pool.placement.choose(_inv(model="m"), pool) == 1
+
+    def test_sticky_homes_spread_round_robin(self):
+        pool = WorkerPoolExecutor([_InstantWorker(), _InstantWorker()],
+                                  placement=ModelAffinityPlacement())
+        p = pool.placement
+        assert p.choose(_inv(model="x"), pool) == 0
+        assert p.choose(_inv(model="y"), pool) == 1
+        # homes are sticky across repeats
+        assert p.choose(_inv(model="x"), pool) == 0
+        assert p.choose(_inv(model="y"), pool) == 1
+
+    def test_untagged_falls_back_to_least_outstanding(self):
+        pool = WorkerPoolExecutor([_InstantWorker(), _InstantWorker()],
+                                  placement=ModelAffinityPlacement())
+        pool.outstanding[0] = 3
+        assert pool.placement.choose(_inv(), pool) == 1
+
+    def test_pool_charges_load_cost_once_per_worker(self):
+        caches = weight_caches(1, 100.0, {"m": (50.0, 1.0)})
+        pool = WorkerPoolExecutor([_InstantWorker(service_s=0.1)],
+                                  placement=ModelAffinityPlacement(),
+                                  weight_caches=caches)
+        h1 = pool.submit(_inv(model="m", t=0.0))
+        h2 = pool.submit(_inv(model="m", t=5.0))
+        # first touch pays the load on the known finish time; second hits
+        assert pool.resolve(h1).t_finish == pytest.approx(0.0 + 0.1 + 1.0)
+        assert pool.resolve(h2).t_finish == pytest.approx(5.0 + 0.1)
+        assert caches[0].stats()["load_s"] == pytest.approx(1.0)
+
+    def test_async_worker_load_cost_applies_at_resolve(self):
+        caches = weight_caches(1, 100.0, {"m": (50.0, 1.0)})
+        pool = WorkerPoolExecutor([_DeferredWorker()],
+                                  weight_caches=caches)
+        h = pool.submit(_inv(model="m", t=0.0))
+        assert h.load_s == pytest.approx(1.0)
+        comp = pool.resolve(h)
+        assert comp.t_finish == pytest.approx(0.0 + 0.1 + 1.0)
+        assert h.load_s == 0.0               # debit applied exactly once
+
+    def test_worker_and_model_cache_stats(self):
+        caches = weight_caches(2, 100.0, {"m": (50.0, 1.0)})
+        pool = WorkerPoolExecutor([_InstantWorker(), _InstantWorker()],
+                                  placement=ModelAffinityPlacement(),
+                                  weight_caches=caches)
+        for t in (0.0, 1.0, 2.0):
+            pool.resolve(pool.submit(_inv(model="m", t=t)))
+        ws = pool.worker_stats()
+        assert any("weights" in w for w in ws)
+        ms = pool.model_cache_stats()["m"]
+        assert ms["weight_misses"] == 1 and ms["weight_hits"] == 2
+        assert ms["weight_hit_rate"] == pytest.approx(2 / 3, abs=1e-4)
+
+
+# -------------------------------------- platform per-model warm pools ----
+
+class TestPlatformModelEconomics:
+    def test_warm_for_a_is_cold_for_b(self):
+        p = Platform(table(), PlatformConfig(pre_warm=1, max_instances=1))
+        r1 = p.submit(0.0, 1, model="a", model_load_s=0.3)
+        r2 = p.submit(1.0, 1, model="a", model_load_s=0.3)
+        r3 = p.submit(2.0, 1, model="b", model_load_s=0.4)
+        assert r1.weight_loaded and r1.load_s == pytest.approx(0.3)
+        assert not r2.weight_loaded and r2.load_s == 0.0
+        assert r2.t_start == pytest.approx(1.0)      # warm same-model
+        assert r3.weight_loaded
+        assert r3.t_start == pytest.approx(2.0 + 0.4)  # swap, no container
+        assert not r3.cold
+
+    def test_cold_start_decomposes_into_container_plus_load(self):
+        cfg = PlatformConfig(pre_warm=0, max_instances=1,
+                             cold_start_s=0.25, container_cold_s=0.1)
+        p = Platform(table(), cfg)
+        r = p.submit(0.0, 1, model="a", model_load_s=0.5)
+        assert r.cold and r.weight_loaded
+        assert r.t_start == pytest.approx(0.1 + 0.5)
+
+    def test_container_cold_defaults_to_cold_start(self):
+        p = Platform(table(), PlatformConfig(pre_warm=0, max_instances=1,
+                                             cold_start_s=0.25))
+        r = p.submit(0.0, 1, model="a", model_load_s=0.5)
+        assert r.t_start == pytest.approx(0.25 + 0.5)
+
+    def test_untagged_path_identical_to_legacy(self):
+        cfg = PlatformConfig(straggler_prob=0.1, seed=3, pre_warm=1,
+                             max_instances=2)
+        a, b = Platform(table(sigma=0.01), cfg), Platform(table(sigma=0.01),
+                                                          cfg)
+        for i in range(8):
+            ra = a.submit(i * 0.05, 1 + i % 3)
+            rb = b.submit(i * 0.05, 1 + i % 3, model=None, model_load_s=0.0)
+            assert ra == rb
+        assert a.total_cost == pytest.approx(b.total_cost)
+
+    def test_per_model_latency_override_and_stats(self):
+        p = Platform(table(mu=0.1), PlatformConfig(pre_warm=2,
+                                                   max_instances=2))
+        heavy = table(mu=1.0)
+        r = p.submit(0.0, 1, model="h", model_load_s=0.2, latency=heavy)
+        assert r.exec_s == pytest.approx(1.0)        # sigma 0: exact
+        stats = p.model_stats()["h"]
+        assert stats["invocations"] == 1
+        assert stats["weight_loads"] == 1
+        assert stats["load_seconds"] == pytest.approx(0.2)
+        assert stats["weight_hit_rate"] == 0.0
+
+
+# --------------------------------------------------------- latency bank ----
+
+class TestLatencyBank:
+    def test_routes_observations_per_model(self):
+        fast = OnlineLatencyTable(table(mu=0.1))
+        slow = OnlineLatencyTable(table(mu=1.0))
+        bank = LatencyBank({"fast": fast, "slow": slow})
+        for _ in range(64):
+            bank.observe(1, 0.4, model="fast")       # 4x slower than table
+        assert fast.drift() > 2.0
+        assert slow.drift() == pytest.approx(1.0)    # untouched
+        assert bank.table("fast") is fast
+
+    def test_unknown_model_unified_error(self):
+        bank = LatencyBank({"a": OnlineLatencyTable(table())})
+        with pytest.raises(ValueError, match="unknown model"):
+            bank.table("nope")
+
+    def test_sole_table_is_default(self):
+        only = OnlineLatencyTable(table(mu=0.2))
+        bank = LatencyBank({"only": only})
+        bank.observe(1, 0.8)                         # no model: routes there
+        assert only.drift() > 1.0
+
+    def test_round_trip(self):
+        bank = LatencyBank({"a": OnlineLatencyTable(table(mu=0.1)),
+                            "b": OnlineLatencyTable(table(mu=0.2))})
+        rebuilt = LatencyBank.from_dict(bank.to_dict())
+        assert rebuilt.table("a").t_slack(2) == \
+            pytest.approx(bank.table("a").t_slack(2))
+
+
+# ------------------------------------------- two-model scheduler run ----
+
+def _register_pair():
+    register_model(ModelSpec(name="sched-fast", canvas_m=128, canvas_n=128,
+                             weight_bytes=2e9, table=table(mu=0.04)))
+    register_model(ModelSpec(name="sched-heavy", canvas_m=128, canvas_n=128,
+                             weight_bytes=8e9, table=table(mu=0.25)))
+
+
+def _streams(n_frames=30):
+    streams = []
+    for cam, slo in enumerate((0.5, 2.0)):
+        streams.append([Patch(0, 0, 48, 48, frame_id=f, camera_id=cam,
+                              t_gen=f / 10.0, slo=slo)
+                        for f in range(n_frames)])
+    return streams
+
+
+def _run(placement, online=False):
+    _register_pair()
+    cfg = ServeConfig(classify="slo", n_workers=2, placement=placement,
+                      online_latency=online,
+                      model_map={"0.5": "sched-fast", "2.0": "sched-heavy"})
+    lat = table()
+    sched = TangramScheduler(256, 256, lat,
+                             Platform(lat, PlatformConfig(max_instances=2,
+                                                          pre_warm=2)),
+                             config=cfg)
+    return sched, sched.run(_streams(), bandwidth_bps=1e9)
+
+
+class TestTwoModelScheduler:
+    def test_per_model_t_slack(self):
+        sched, res = _run("model")
+        fast = sched.pool.invokers[0.5]
+        heavy = sched.pool.invokers[2.0]
+        assert fast.latency.t_slack(1) < heavy.latency.t_slack(1)
+        # and the per-model estimates came from the registry tables
+        assert fast.latency.t_slack(1) == pytest.approx(0.04)
+        assert heavy.latency.t_slack(1) == pytest.approx(0.25)
+
+    def test_outcomes_and_summary_carry_model_identity(self):
+        _, res = _run("model")
+        assert all(o.model is not None for o in res.outcomes)
+        for o in res.outcomes:
+            want = "sched-fast" if o.patch.slo == 0.5 else "sched-heavy"
+            assert o.model == want
+        rows = res.summary()["models"]
+        assert set(rows) == {"sched-fast", "sched-heavy"}
+        for row in rows.values():
+            assert {"patches", "violations", "invocations",
+                    "weight_loads", "weight_hit_rate"} <= set(row)
+
+    def test_affinity_loads_each_model_once(self):
+        _, res = _run("model")
+        loads = {m: r["weight_loads"]
+                 for m, r in res.summary()["models"].items()}
+        assert loads == {"sched-fast": 1, "sched-heavy": 1}
+
+    def test_oblivious_placement_swaps_more(self):
+        _, affinity = _run("model")
+        _, oblivious = _run("least")
+        n_loads = lambda r: sum(row["weight_loads"]
+                                for row in r.summary()["models"].values())
+        assert n_loads(affinity) < n_loads(oblivious)
+        assert affinity.violation_rate <= oblivious.violation_rate
+
+    def test_online_latency_uses_a_bank(self):
+        sched, res = _run("model", online=True)
+        assert isinstance(sched.estimator, LatencyBank)
+        assert res.n_patches == sum(len(s) for s in _streams())
