@@ -117,6 +117,9 @@ class ViTConfig:
     remat: bool = True
     scan_layers: bool = True
     fused_qkv: bool = False
+    # int8-resident encoder weights (per-output-channel scales); the
+    # patch-embed / pos-embed / norms / head stay full precision
+    quant_weights: bool = False
     # "reshape" (transpose+reshape patchify) or "conv" (strided conv stem)
     patch_embed: str = "reshape"
     family: str = "vision"
@@ -250,6 +253,9 @@ class DetectorConfig:
     compute_dtype: str = "float32"
     remat: bool = False
     scan_layers: bool = True
+    # int8-resident trunk weights (per-output-channel scales) for the
+    # quantized serve path; embed/head/norms stay full precision
+    quant_weights: bool = False
     family: str = "detector"
 
     @property

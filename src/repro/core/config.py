@@ -68,6 +68,12 @@ class ServeConfig:
     # --- execution ------------------------------------------------------
     executor: str = "sim"            # sim | device | async_device
     use_pallas: bool = False         # Pallas stitch kernel on device paths
+    fuse: bool = False               # fused stitch->embed / decode->gather
+                                     # device hot path (fused_embed.py)
+    quantize: bool = False           # serve int8-resident weights: models
+                                     # resolve to their _int8 registry
+                                     # variants, the ad-hoc detector builds
+                                     # quantized
     max_inflight: int = 4            # async in-flight bound (device memory)
     clock: str = "virtual"           # virtual | wall
     wall_speed: float = 1.0          # engine seconds per wall second

@@ -459,13 +459,26 @@ class ModelRuntime:
     """One servable model on the device path: the jit'd function, its
     params, and the canvas geometry / sharding it runs under.  The
     values of :class:`DeviceExecutor`'s ``models`` mapping (or zero-arg
-    callables returning one, for lazy builds through the registry)."""
+    callables returning one, for lazy builds through the registry).
+
+    The optional fused-path fields feed the fused device hot path
+    (``kernels/stitch/fused_embed.py``): ``tokens_fn(params, tokens)``
+    is the detector trunk minus the patch embed (``forward_tokens``),
+    ``embed_kernel`` / ``embed_bias`` the full-precision patch-embed
+    projection the fused stitch kernel applies in VMEM, and ``patch``
+    the detector's patch size (fused token/grid geometry).  When they
+    are absent a ``fuse=True`` executor falls back to the unfused
+    pipeline for this model."""
     serve_fn: Callable
     params: object
     canvas_m: int
     canvas_n: int
     mesh: object = None
     rules: object = None
+    tokens_fn: Optional[Callable] = None
+    embed_kernel: object = None
+    embed_bias: object = None
+    patch: Optional[int] = None
 
 
 class DeviceExecutor:
@@ -502,23 +515,33 @@ class DeviceExecutor:
     """
 
     def __init__(self, serve_fn, params, canvas_m: int, canvas_n: int, *,
-                 use_pallas: bool = False, mesh=None, rules=None,
+                 use_pallas: bool = False, fuse: bool = False,
+                 mesh=None, rules=None,
                  clock: Callable[[], float] = time.perf_counter,
                  sync: Optional[Callable[[object], None]] = None,
-                 models: Optional[Dict[str, object]] = None):
+                 models: Optional[Dict[str, object]] = None,
+                 tokens_fn: Optional[Callable] = None,
+                 embed_kernel=None, embed_bias=None,
+                 patch: Optional[int] = None):
         self.serve_fn = serve_fn
         self.params = params
         self.m, self.n = canvas_m, canvas_n
         self.use_pallas = use_pallas
+        self.fuse = fuse
         self.mesh = mesh
         self.rules = rules
         self.clock = clock
         self.sync = sync
         self.models = dict(models) if models else {}
+        self.tokens_fn = tokens_fn
+        self.embed_kernel = embed_kernel
+        self.embed_bias = embed_bias
+        self.patch = patch
         self._runtimes: Dict[Optional[str], ModelRuntime] = {}
         self.frames: Dict[object, np.ndarray] = {}
         self._refs: Dict[object, int] = {}
         self.n_invocations = 0
+        self.n_fused = 0
         self.n_detections = 0
         self.n_sharded = 0
         self.evidence_bytes = 0
@@ -533,7 +556,10 @@ class DeviceExecutor:
         entry = self.models.get(model) if model is not None else None
         if entry is None:
             rt = ModelRuntime(self.serve_fn, self.params, self.m, self.n,
-                              mesh=self.mesh, rules=self.rules)
+                              mesh=self.mesh, rules=self.rules,
+                              tokens_fn=self.tokens_fn,
+                              embed_kernel=self.embed_kernel,
+                              embed_bias=self.embed_bias, patch=self.patch)
         elif callable(entry):
             rt = entry()
         else:
@@ -591,6 +617,24 @@ class DeviceExecutor:
         slots = stitch_ops.pack_plan_host(crops, plan)
         records = jnp.asarray(plan.records)
         impl = "pallas_interpret" if self.use_pallas else "xla"
+        if self.fuse and rt.tokens_fn is not None \
+                and rt.embed_kernel is not None and rt.patch is not None:
+            # fused hot path: stitch->patch-embed emits the token batch
+            # directly (no canvas batch in HBM), the trunk runs from
+            # tokens, and decode+gather lands straight in per-patch slot
+            # grids — no host round-trip through canvas-space outputs.
+            # The canvas batch never exists, so mesh sharding (which
+            # pads canvases, not records) does not apply here.
+            tokens = stitch_ops.stitch_embed(
+                jnp.asarray(slots), records, rt.embed_kernel,
+                rt.embed_bias, rt.canvas_m, rt.canvas_n, rt.patch,
+                impl=impl)
+            raw = rt.tokens_fn(rt.params, tokens)
+            fused = stitch_ops.unstitch_decode(
+                raw, records, rt.patch, plan.slot_capacity, impl=impl)
+            self.n_invocations += 1
+            self.n_fused += 1
+            return {"plan": plan, "fused": fused, "slots": slots, "t0": t0}
         canvases = stitch_ops.stitch_canvases(
             jnp.asarray(slots), records, rt.canvas_m, rt.canvas_n, impl=impl)
         sharded = False
@@ -620,12 +664,21 @@ class DeviceExecutor:
         from repro.kernels.stitch import ops as stitch_ops
 
         sync = self.sync or jax.block_until_ready
-        sync((payload["obj"], payload["patch_out"]))
         plan = payload["plan"]
-        per_frame = stitch_ops.route_detections(
-            plan, inv.patches, np.asarray(payload["obj"]),
-            np.asarray(payload["boxes"]))
-        evidence = np.asarray(payload["patch_out"])
+        if "fused" in payload:
+            sync(payload["fused"])
+            per_frame = stitch_ops.route_fused(
+                plan, inv.patches, np.asarray(payload["fused"]))
+            # the unfused evidence (gathered slots) equals the input
+            # crops by construction, so the fused path serves it from
+            # the packed slots it already holds on the host
+            evidence = payload["slots"]
+        else:
+            sync((payload["obj"], payload["patch_out"]))
+            per_frame = stitch_ops.route_detections(
+                plan, inv.patches, np.asarray(payload["obj"]),
+                np.asarray(payload["boxes"]))
+            evidence = np.asarray(payload["patch_out"])
         per_frame_pixels: Dict[object, List[np.ndarray]] = {}
         for i, patch in enumerate(inv.patches):
             # copy: a view would pin the whole pow2-padded batch in memory
@@ -683,6 +736,8 @@ class AsyncDeviceExecutor(DeviceExecutor):
         if handle.completion is not None:
             return True
         p = handle.payload
+        if "fused" in p:
+            return _leaf_ready(p["fused"])
         return (_leaf_ready(p["obj"]) and _leaf_ready(p["patch_out"])
                 and _leaf_ready(p["boxes"]))
 
@@ -735,8 +790,10 @@ def make_executor(name: str, **cfg):
     from repro.core.registry import lookup
 
     cls = lookup("executor", _EXECUTORS, name)
+    device_only = {"fuse", "tokens_fn", "embed_kernel", "embed_bias",
+                   "patch"}
     if cls is SimExecutor:
-        drop = {"max_inflight", "models"}
+        drop = {"max_inflight", "models"} | device_only
     elif cls is AsyncDeviceExecutor:
         drop = {"model_loads", "model_tables"}
     else:

@@ -69,16 +69,25 @@ class ModelSpec:
     weight_bytes: Optional[float] = None
     table: Optional[LatencyTable] = None
     load_bw: float = _DEFAULT_LOAD_BW
+    #: serving precision override: None serves the arch's param dtype;
+    #: "int8" serves quantized-resident weights (1 byte/param economics,
+    #: 2x MXU rate + halved weight streaming in the latency default, and
+    #: :meth:`build` quantizes the fp init through models/quantize.py)
+    dtype: Optional[str] = None
     description: str = ""
 
     def __post_init__(self):
+        if self.dtype not in (None, "int8"):
+            raise ValueError(f"ModelSpec {self.name!r}: unsupported dtype "
+                             f"{self.dtype!r} (None or 'int8')")
         if self.arch is not None:
             if self.canvas_m is None:
                 object.__setattr__(self, "canvas_m", self.arch.canvas)
             if self.canvas_n is None:
                 object.__setattr__(self, "canvas_n", self.arch.canvas)
             if self.weight_bytes is None:
-                per_param = _DTYPE_BYTES.get(self.arch.param_dtype, 4)
+                per_param = (1 if self.dtype == "int8" else
+                             _DTYPE_BYTES.get(self.arch.param_dtype, 4))
                 object.__setattr__(self, "weight_bytes",
                                    float(self.arch.n_params * per_param))
         if self.canvas_m is None or self.canvas_n is None:
@@ -111,10 +120,18 @@ class ModelSpec:
         if self.table is not None:
             return self.table
         a = self.arch
-        return detector_latency_model(
+        model = detector_latency_model(
             self.canvas_m, self.canvas_n, patch=a.patch,
-            n_layers=a.n_layers, d_model=a.d_model, d_ff=a.d_ff,
-        ).build_table(max_batch, slack_sigmas=slack_sigmas)
+            n_layers=a.n_layers, d_model=a.d_model, d_ff=a.d_ff)
+        if self.dtype == "int8":
+            # int8 MXU issues at 2x the fp rate and streams half the
+            # weight bytes (1 B/param vs the model's bf16 2 B/param), so
+            # the quantized profile differs whether the trunk is
+            # compute- or memory-bound — it must never reuse the fp mu
+            model = dataclasses.replace(
+                model, flops_per_canvas=model.flops_per_canvas * 0.5,
+                weight_bytes=model.weight_bytes * 0.5)
+        return model.build_table(max_batch, slack_sigmas=slack_sigmas)
 
     # ------------------------------------------------------- execution ----
 
@@ -144,6 +161,13 @@ class ModelSpec:
         256) so drivers and tests run on CPU; ``reduced=False`` builds
         the full trunk at the spec's native canvas.  Params are seeded
         per model name, so two models' weights differ deterministically.
+
+        ``dtype="int8"`` specs initialize the full-precision weights of
+        their base model (seeded by the name minus the ``_int8`` suffix,
+        so ``tangram_int8`` is literally ``tangram`` quantized) and
+        quantize them through ``models/quantize.py``; the returned cfg
+        carries ``quant_weights=True`` and ``serve_fn`` runs the
+        int8-resident trunk.
         """
         import jax
 
@@ -157,10 +181,24 @@ class ModelSpec:
             cfg = (self.arch if canvas is None
                    else dataclasses.replace(self.arch, canvas=canvas))
         rules = ShardingConfig.make().rules
-        seed = zlib.crc32(self.name.encode()) & 0x7FFFFFFF
+        seed_name = (self.name[:-len("_int8")]
+                     if self.dtype == "int8" and self.name.endswith("_int8")
+                     else self.name)
+        seed = zlib.crc32(seed_name.encode()) & 0x7FFFFFFF
+        fp_cfg = dataclasses.replace(cfg, quant_weights=False)
         params = param_lib.init_params(jax.random.PRNGKey(seed),
-                                       detector_lib.param_specs(cfg))
-        serve_fn = jax.jit(lambda p, x: detector_lib.serve(cfg, p, x, rules))
+                                       detector_lib.param_specs(fp_cfg))
+        if self.dtype == "int8":
+            from repro.models import quantize as quantize_lib
+
+            cfg = dataclasses.replace(cfg, quant_weights=True)
+            params = quantize_lib.quantize_params(
+                detector_lib.param_specs(cfg), params)
+        else:
+            cfg = fp_cfg
+        serve_cfg = cfg
+        serve_fn = jax.jit(
+            lambda p, x: detector_lib.serve(serve_cfg, p, x, rules))
         return cfg, params, serve_fn, rules
 
 
@@ -192,16 +230,26 @@ def _ensure_seeded():
         name="tangram", arch=tangram_detector.ARCH,
         description="the paper's detector (ViT-B/32 trunk, 1024^2 canvas)"))
 
+    # its int8-resident variant: same trunk quantized through
+    # models/quantize.py — half the load bytes, a faster latency profile
+    register_model(ModelSpec(
+        name="tangram_int8", arch=tangram_detector.ARCH, dtype="int8",
+        description="tangram with int8-resident trunk weights "
+                    "(quantized serve path)"))
+
     # a lighter detector on the ViT-S/16 trunk (finer patching, ~4x
     # fewer trunk params): the natural choice for tight SLO classes
     v = vit_s16.ARCH
+    vit_s16_det = DetectorConfig(
+        name="vit-s16-det", canvas=1024, patch=v.patch,
+        n_layers=v.n_layers, d_model=v.d_model, n_heads=v.n_heads,
+        d_ff=v.d_ff, param_dtype="bfloat16", compute_dtype="bfloat16")
     register_model(ModelSpec(
-        name="vit_s16",
-        arch=DetectorConfig(
-            name="vit-s16-det", canvas=1024, patch=v.patch,
-            n_layers=v.n_layers, d_model=v.d_model, n_heads=v.n_heads,
-            d_ff=v.d_ff, param_dtype="bfloat16", compute_dtype="bfloat16"),
+        name="vit_s16", arch=vit_s16_det,
         description="detector on the ViT-S/16 trunk (light, fine patches)"))
+    register_model(ModelSpec(
+        name="vit_s16_int8", arch=vit_s16_det, dtype="int8",
+        description="vit_s16 with int8-resident trunk weights"))
 
     # EfficientNet-B7-class detector.  The repo's detector head runs on
     # a ViT trunk, so the servable build uses a transformer substitute

@@ -1,0 +1,244 @@
+"""Fused Pallas TPU kernels for the device hot path (ROADMAP item 3).
+
+Two fusions kill the HBM round-trips that bracket the detector:
+
+``stitch_embed_pallas`` — stitch -> patchify -> patch-embed in one launch.
+Each canvas is assembled in a VMEM scratch buffer while the patch-slot
+stream is double-buffered HBM->VMEM with ``pltpu.make_async_copy`` (two
+DMA buffers + two semaphores; slot k+1 is in flight while slot k is
+composited).  The assembled canvas never leaves VMEM: it is patchified in
+row chunks and multiplied by the patch-embed projection in place, so the
+kernel emits the (B, seq, d_model) token batch directly and the
+(B, M, N, C) canvas batch never materializes in HBM.
+
+``unstitch_decode_pallas`` — head decode + placement gather in one launch.
+The detector's raw (B, side, side, 5) head outputs are decoded in-kernel
+(sigmoid objectness, cell-relative centers, exp box sizes — the same math
+as ``detector.decode_boxes``) and each placement's hits are scattered
+straight to its patch slot.  A decoded center always lies inside its own
+grid cell (both offsets are sigmoids), so masking on center-in-placement
+over the full grid is exact and the canvas-space (obj, boxes) tensors are
+never materialized or round-tripped through the host.
+
+Boxes are stored clipped to the placement rectangle and translated to
+placement-local pixels; ``ops.route_fused`` only adds each patch's frame
+origin.  Invalid records park on the dummy slot past the real patches,
+exactly like ``unstitch_pallas``.
+
+The K placement steps are unrolled in Python (K is the plan's pow2-
+bucketed slots-per-canvas, small and static), which keeps the "prefetch
+slot k+1" control flow out of traced conditionals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: default patch-rows per embed matmul chunk (overridable per-call; the
+#: hillclimb cell "kernel_blocks" searches this)
+DEFAULT_BLOCK_ROWS = 4
+
+
+def _stitch_embed_kernel(records_ref,        # SMEM (B, K, 6) int32
+                         slots_hbm,          # ANY  (P, Hmax, Wmax, C)
+                         wk_ref,             # VMEM (patch*patch*C, d)
+                         bias_ref,           # VMEM (1, d)
+                         out_ref,            # VMEM (1, seq, d)
+                         *, m: int, n: int, patch: int, k_steps: int,
+                         hmax: int, wmax: int, c: int, block_rows: int,
+                         slot_dtype):
+    b = pl.program_id(0)
+
+    def scoped(canvas, scratch, sem):
+        def copy(k, buf):
+            return pltpu.make_async_copy(
+                slots_hbm.at[pl.ds(records_ref[b, k, 1], 1)],
+                scratch.at[buf], sem.at[buf])
+
+        canvas[...] = jnp.zeros_like(canvas)
+        copy(0, 0).start()
+        for k in range(k_steps):
+            buf = k % 2
+            if k + 1 < k_steps:
+                copy(k + 1, (k + 1) % 2).start()
+            copy(k, buf).wait()
+
+            valid = records_ref[b, k, 0]
+            slot_x = records_ref[b, k, 2]
+            slot_y = records_ref[b, k, 3]
+            w = records_ref[b, k, 4]
+            h = records_ref[b, k, 5]
+            img = scratch[buf, 0]                     # (Hmax, Wmax, C)
+            # clamp+roll placement, same as _stitch_kernel; the store is
+            # unconditional with validity folded into the mask so the
+            # unrolled loop carries no traced control flow
+            ys = jnp.clip(slot_y, 0, m - hmax)
+            xs = jnp.clip(slot_x, 0, n - wmax)
+            dy = slot_y - ys
+            dx = slot_x - xs
+            rows = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 0)
+            cols = jax.lax.broadcasted_iota(jnp.int32, (hmax, wmax), 1)
+            mask = ((rows >= dy) & (rows < dy + h)
+                    & (cols >= dx) & (cols < dx + w) & (valid > 0))
+            shifted = jnp.roll(jnp.roll(img, dy, axis=0), dx, axis=1)
+            window = canvas[pl.ds(ys, hmax), pl.ds(xs, wmax), :]
+            canvas[pl.ds(ys, hmax), pl.ds(xs, wmax), :] = (
+                jnp.where(mask[..., None], shifted, window))
+
+        # embed phase: patchify the resident canvas in row chunks and
+        # project each chunk on the MXU (same layout as vit.patchify)
+        side_m, side_n = m // patch, n // patch
+        for r0 in range(0, side_m, block_rows):
+            br = min(block_rows, side_m - r0)
+            px = canvas[pl.ds(r0 * patch, br * patch), :, :]
+            x = px.reshape(br, patch, side_n, patch, c)
+            x = x.transpose(0, 2, 1, 3, 4).reshape(br * side_n,
+                                                   patch * patch * c)
+            y = jnp.dot(x.astype(wk_ref.dtype), wk_ref[...],
+                        preferred_element_type=jnp.float32)
+            y = y + bias_ref[0].astype(jnp.float32)
+            out_ref[0, pl.ds(r0 * side_n, br * side_n), :] = (
+                y.astype(out_ref.dtype))
+
+    pl.run_scoped(
+        scoped,
+        canvas=pltpu.VMEM((m, n, c), slot_dtype),
+        scratch=pltpu.VMEM((2, 1, hmax, wmax, c), slot_dtype),
+        sem=pltpu.SemaphoreType.DMA((2,)))
+
+
+def stitch_embed_pallas(patch_pixels: jnp.ndarray, records: jnp.ndarray,
+                        kernel: jnp.ndarray, bias: jnp.ndarray,
+                        m: int, n: int, patch: int,
+                        *, block_rows: int | None = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Fused stitch -> patchify -> patch-embed.
+
+    patch_pixels: (P, Hmax, Wmax, C); records: (B, K, 6) int32
+    (valid, slot, x, y, w, h); kernel: (patch*patch*C, d); bias: (d,).
+    Returns embedded tokens (B, seq, d) with seq = (m//patch)*(n//patch),
+    numerically equivalent to
+    ``dense(patch_embed, patchify(stitch(...), patch))``.
+    """
+    p_, hmax, wmax, c = patch_pixels.shape
+    b, k, _ = records.shape
+    d = kernel.shape[-1]
+    assert hmax <= m and wmax <= n, "patch slot larger than canvas"
+    assert m % patch == 0 and n % patch == 0, (m, n, patch)
+    assert kernel.shape[0] == patch * patch * c, (kernel.shape, patch, c)
+    side_m, side_n = m // patch, n // patch
+    seq = side_m * side_n
+    if b == 0 or k == 0 or p_ == 0:
+        # empty packing: the embed of an all-zero canvas is just the bias
+        return jnp.broadcast_to(bias.astype(kernel.dtype), (b, seq, d))
+
+    block_rows = min(block_rows or DEFAULT_BLOCK_ROWS, side_m)
+    body = functools.partial(
+        _stitch_embed_kernel, m=m, n=n, patch=patch, k_steps=k,
+        hmax=hmax, wmax=wmax, c=c, block_rows=block_rows,
+        slot_dtype=patch_pixels.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            # the slot array stays in HBM; the kernel DMAs slots itself
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec((patch * patch * c, d), lambda bi, recs: (0, 0)),
+            pl.BlockSpec((1, d), lambda bi, recs: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, seq, d), lambda bi, recs: (bi, 0, 0)),
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, seq, d), kernel.dtype),
+        interpret=interpret,
+    )(records, patch_pixels, kernel, bias.reshape(1, d))
+
+
+def _unstitch_decode_kernel(records_ref,     # SMEM (B, K, 6) int32
+                            raw_ref,         # VMEM (1, side_m, side_n, 5)
+                            out_ref,         # VMEM (1, side_m, side_n, 5)
+                            *, patch: int, side_m: int, side_n: int):
+    b = pl.program_id(0)
+    k = pl.program_id(1)
+
+    valid = records_ref[b, k, 0]
+    x0 = records_ref[b, k, 2].astype(jnp.float32)
+    y0 = records_ref[b, k, 3].astype(jnp.float32)
+    w = records_ref[b, k, 4].astype(jnp.float32)
+    h = records_ref[b, k, 5].astype(jnp.float32)
+
+    raw = raw_ref[0].astype(jnp.float32)              # (side_m, side_n, 5)
+    cell = float(patch)
+    obj = jax.nn.sigmoid(raw[..., 0])
+    gy = jax.lax.broadcasted_iota(jnp.int32, (side_m, side_n), 0)
+    gx = jax.lax.broadcasted_iota(jnp.int32, (side_m, side_n), 1)
+    cx = (gx.astype(jnp.float32) + jax.nn.sigmoid(raw[..., 1])) * cell
+    cy = (gy.astype(jnp.float32) + jax.nn.sigmoid(raw[..., 2])) * cell
+    bw = jnp.exp(jnp.clip(raw[..., 3], -6, 6)) * cell
+    bh = jnp.exp(jnp.clip(raw[..., 4], -6, 6)) * cell
+
+    # center-in-placement assignment over the full grid (sigmoid offsets
+    # keep every center inside its own cell, so no cell outside the
+    # placement can hit), then clip to the rect and shift to
+    # placement-local pixels — the same math route_detections applies
+    # on the host to decode_boxes outputs
+    hit = ((valid > 0)
+           & (cx >= x0) & (cx < x0 + w)
+           & (cy >= y0) & (cy < y0 + h))
+    bx0 = jnp.clip(cx - bw / 2, x0, x0 + w) - x0
+    by0 = jnp.clip(cy - bh / 2, y0, y0 + h) - y0
+    bx1 = jnp.clip(cx + bw / 2, x0, x0 + w) - x0
+    by1 = jnp.clip(cy + bh / 2, y0, y0 + h) - y0
+    dec = jnp.stack([obj, bx0, by0, bx1, by1], axis=-1)
+    out_ref[0] = jnp.where(hit[..., None], dec, jnp.zeros_like(dec))
+
+
+def unstitch_decode_pallas(raw: jnp.ndarray, records: jnp.ndarray,
+                           patch: int, num_patches: int,
+                           *, interpret: bool = False) -> jnp.ndarray:
+    """Fused head decode + placement gather.
+
+    raw: (B, side_m, side_n, 5) raw head outputs; records as in stitch.
+    Returns (num_patches, side_m, side_n, 5) float32 per-slot grids:
+    channel 0 is objectness probability at cells whose decoded center
+    falls inside the slot's placement (0 elsewhere), channels 1:5 the
+    decoded box clipped to the placement in placement-local xyxy pixels.
+    Slots not referenced by any valid record are undefined, exactly as in
+    :func:`unstitch_pallas` — the packer places every queued patch once.
+    """
+    b, side_m, side_n, ch = raw.shape
+    _, k, _ = records.shape
+    assert ch == 5, raw.shape
+    if num_patches == 0 or b == 0 or k == 0:
+        return jnp.zeros((num_patches, side_m, side_n, ch), jnp.float32)
+
+    body = functools.partial(_unstitch_decode_kernel, patch=patch,
+                             side_m=side_m, side_n=side_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            pl.BlockSpec((1, side_m, side_n, ch),
+                         lambda bi, ki, recs: (bi, 0, 0, 0)),
+        ],
+        # invalid records park on the dummy slot, as in unstitch_pallas
+        out_specs=pl.BlockSpec(
+            (1, side_m, side_n, ch),
+            lambda bi, ki, recs: (jnp.where(recs[bi, ki, 0] > 0,
+                                            recs[bi, ki, 1], num_patches),
+                                  0, 0, 0)),
+    )
+    out = pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_patches + 1, side_m, side_n, ch),
+                                       jnp.float32),
+        interpret=interpret,
+    )(records, raw)
+    return out[:num_patches]

@@ -15,7 +15,12 @@ import numpy as np
 
 from repro.core.partitioning import Patch
 from repro.core.stitching import BatchPlan
-from repro.kernels.stitch.ref import stitch_reference, unstitch_reference
+from repro.kernels.stitch.fused_embed import (stitch_embed_pallas,
+                                              unstitch_decode_pallas)
+from repro.kernels.stitch.ref import (stitch_embed_reference,
+                                      stitch_reference,
+                                      unstitch_decode_reference,
+                                      unstitch_reference)
 from repro.kernels.stitch.stitch import stitch_pallas, unstitch_pallas
 
 
@@ -42,6 +47,37 @@ def unstitch_patches(canvases, records, num_patches: int, hmax: int,
         return unstitch_reference(canvases, records, num_patches, hmax, wmax)
     return unstitch_pallas(canvases, records, num_patches, hmax, wmax,
                            interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "n", "patch", "block_rows", "impl"))
+def stitch_embed(patch_pixels, records, kernel, bias, m: int, n: int,
+                 patch: int, block_rows: int = None, impl: str = "xla"):
+    """Fused stitch -> patchify -> patch-embed: slots to (B, seq, d)
+    tokens without materializing the canvas batch in HBM.
+
+    impl: "xla" (reference), "pallas" (TPU kernel),
+          "pallas_interpret" (kernel body on CPU, for tests).
+    """
+    if impl == "xla":
+        return stitch_embed_reference(patch_pixels, records, kernel, bias,
+                                      m, n, patch)
+    return stitch_embed_pallas(patch_pixels, records, kernel, bias, m, n,
+                               patch, block_rows=block_rows,
+                               interpret=(impl == "pallas_interpret"))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("patch", "num_patches", "impl"))
+def unstitch_decode(raw, records, patch: int, num_patches: int,
+                    impl: str = "xla"):
+    """Fused head decode + placement gather: raw (B, s, s, 5) head outputs
+    to per-slot (num_patches, s, s, 5) decoded grids, no host round-trip
+    through canvas-space (obj, boxes)."""
+    if impl == "xla":
+        return unstitch_decode_reference(raw, records, patch, num_patches)
+    return unstitch_decode_pallas(raw, records, patch, num_patches,
+                                  interpret=(impl == "pallas_interpret"))
 
 
 def pack_plan_host(frame_pixels: Sequence[np.ndarray],
@@ -103,4 +139,35 @@ def route_detections(plan: BatchPlan, patches: Sequence[Patch],
             y1 = min(max(float(bx[3]), y), y + h)
             dests.append((float(score),
                           (x0 + dx, y0 + dy, x1 + dx, y1 + dy)))
+    return out
+
+
+def route_fused(plan: BatchPlan, patches: Sequence[Patch],
+                fused: np.ndarray, obj_threshold: float = 0.5
+                ) -> Dict[int, List[Tuple[float, Tuple[float, ...]]]]:
+    """Route :func:`unstitch_decode` outputs back to their source frames.
+
+    fused: (num_patches, s, s, 5) per-slot decoded grids.  The kernel
+    already did the per-placement assignment, clipping, and translation
+    to placement-local pixels, so routing reduces to thresholding each
+    slot's grid and adding the patch's frame origin.  Emits detections in
+    the same per-frame order as :func:`route_detections`.
+    """
+    fused = np.asarray(fused, np.float32)
+    out: Dict[int, List[Tuple[float, Tuple[float, ...]]]] = {}
+    for _, patch_idx, x, y, w, h in plan.placements():
+        if patch_idx >= fused.shape[0]:
+            continue
+        grid = fused[patch_idx]
+        hit = grid[..., 0] >= obj_threshold
+        if not hit.any():
+            continue
+        patch = patches[patch_idx]
+        dx = float(patch.x0)
+        dy = float(patch.y0)
+        dests = out.setdefault(patch.frame_id, [])
+        for row in grid[hit]:
+            dests.append((float(row[0]),
+                          (float(row[1]) + dx, float(row[2]) + dy,
+                           float(row[3]) + dx, float(row[4]) + dy)))
     return out

@@ -80,3 +80,69 @@ def unstitch_reference(canvases: jnp.ndarray, records: jnp.ndarray,
             out = jax.lax.dynamic_update_slice(
                 out, upd[None], (slot, 0, 0, 0))
     return out
+
+
+def stitch_embed_reference(patch_pixels: jnp.ndarray, records: jnp.ndarray,
+                           kernel: jnp.ndarray, bias: jnp.ndarray,
+                           m: int, n: int, patch: int) -> jnp.ndarray:
+    """Oracle for the fused stitch->patch-embed kernel: stitch, patchify
+    (same layout as ``vit.patchify``), project.  Returns (B, seq, d)."""
+    canvases = stitch_reference(patch_pixels, records, m, n)
+    b, _, _, c = canvases.shape
+    side_m, side_n = m // patch, n // patch
+    x = canvases.reshape(b, side_m, patch, side_n, patch, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    x = x.reshape(b, side_m * side_n, patch * patch * c)
+    y = jnp.dot(x.astype(kernel.dtype), kernel,
+                preferred_element_type=jnp.float32)
+    return (y + bias.astype(jnp.float32)).astype(kernel.dtype)
+
+
+def unstitch_decode_reference(raw: jnp.ndarray, records: jnp.ndarray,
+                              patch: int, num_patches: int) -> jnp.ndarray:
+    """Oracle for the fused decode+gather kernel.
+
+    raw: (B, side_m, side_n, 5) raw head outputs.  Decodes objectness and
+    boxes per grid cell (``detector.decode_boxes`` math with cell size =
+    ``patch``), assigns each cell to the placement containing its decoded
+    center, and scatters (obj, box clipped to the placement in
+    placement-local xyxy pixels) to the placement's slot grid; non-hit
+    cells are zero.  Returns (num_patches, side_m, side_n, 5) float32.
+    """
+    b, side_m, side_n, _ = raw.shape
+    _, k, _ = records.shape
+    out = jnp.zeros((num_patches, side_m, side_n, 5), jnp.float32)
+    if num_patches == 0:
+        return out
+
+    cell = float(patch)
+    gy, gx = jnp.meshgrid(jnp.arange(side_m), jnp.arange(side_n),
+                          indexing="ij")
+    for bi in range(b):
+        r = raw[bi].astype(jnp.float32)
+        obj = jax.nn.sigmoid(r[..., 0])
+        cx = (gx + jax.nn.sigmoid(r[..., 1])) * cell
+        cy = (gy + jax.nn.sigmoid(r[..., 2])) * cell
+        bw = jnp.exp(jnp.clip(r[..., 3], -6, 6)) * cell
+        bh = jnp.exp(jnp.clip(r[..., 4], -6, 6)) * cell
+        for ki in range(k):
+            valid, slot, x, y, w, h = (records[bi, ki, i] for i in range(6))
+            x0, y0 = x.astype(jnp.float32), y.astype(jnp.float32)
+            wf, hf = w.astype(jnp.float32), h.astype(jnp.float32)
+            hit = ((valid > 0)
+                   & (cx >= x0) & (cx < x0 + wf)
+                   & (cy >= y0) & (cy < y0 + hf))
+            dec = jnp.stack([
+                obj,
+                jnp.clip(cx - bw / 2, x0, x0 + wf) - x0,
+                jnp.clip(cy - bh / 2, y0, y0 + hf) - y0,
+                jnp.clip(cx + bw / 2, x0, x0 + wf) - x0,
+                jnp.clip(cy + bh / 2, y0, y0 + hf) - y0,
+            ], axis=-1)
+            val = jnp.where(hit[..., None], dec, jnp.zeros_like(dec))
+            prev = jax.lax.dynamic_index_in_dim(out, slot, axis=0,
+                                                keepdims=False)
+            upd = jnp.where(valid > 0, val, prev)
+            out = jax.lax.dynamic_update_slice(
+                out, upd[None], (slot, 0, 0, 0))
+    return out

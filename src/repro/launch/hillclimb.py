@@ -225,18 +225,102 @@ def run_detector_stitch(mesh, hw):
     return rows
 
 
+#: block_rows candidates for the fused stitch->embed kernel's embed
+#: matmul chunking (patch rows per MXU dispatch)
+KERNEL_BLOCK_CANDIDATES = (1, 2, 4, 8)
+
+
+def pick_block_rows(m: int, n: int, patch: int, default=None):
+    """Best fused-embed ``block_rows`` for this canvas geometry from a
+    prior ``--cell kernel_blocks`` run (cached in out/hillclimb.json);
+    ``default`` when the cell never ran for this geometry."""
+    try:
+        rows = json.load(open(OUT))
+    except (OSError, ValueError):
+        return default
+    best = None
+    for r in rows:
+        if (r.get("cell") == "kernel_blocks" and r.get("m") == m
+                and r.get("n") == n and r.get("patch") == patch):
+            if best is None or r["mu_s"] < best["mu_s"]:
+                best = r
+    return best["block_rows"] if best else default
+
+
+def run_kernel_blocks(m: int = 128, n: int = 128, patch: int = 32,
+                      d_model: int = 64, smoke: bool = False):
+    """§Perf: block-shape search for the fused stitch->embed kernel.
+
+    Times the interpret-mode kernel per ``block_rows`` candidate (the
+    embed phase's patch-row chunk) on a packer-built plan; the winning
+    row is what ``benchmarks/roofline.py --kernels`` (and TPU runs)
+    read back through :func:`pick_block_rows`.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.latency import measure
+    from repro.core.partitioning import Patch
+    from repro.core.stitching import build_batch_plan, stitch
+    from repro.kernels.stitch import ops as stitch_ops
+
+    rng = np.random.default_rng(7)
+    patches = [Patch(0, 0, int(rng.integers(patch, n // 2 + 1)),
+                     int(rng.integers(patch, m // 2 + 1)))
+               for _ in range(12)]
+    plan = build_batch_plan(patches, stitch(patches, m, n), m, n)
+    crops = [np.asarray(rng.normal(size=(p.h, p.w, 3)), np.float32)
+             for p in patches]
+    slots = jnp.asarray(stitch_ops.pack_plan_host(crops, plan))
+    records = jnp.asarray(plan.records)
+    kern = jnp.asarray(rng.normal(size=(patch * patch * 3, d_model)),
+                       jnp.float32) * 0.05
+    bias = jnp.zeros((d_model,), jnp.float32)
+
+    rows = []
+    iters = 2 if smoke else 8
+    for cand in KERNEL_BLOCK_CANDIDATES:
+        if cand > m // patch:
+            continue
+        tbl = measure(
+            lambda b, _c=cand: stitch_ops.stitch_embed(
+                slots, records, kern, bias, m, n, patch, block_rows=_c,
+                impl="pallas_interpret"),
+            batch_sizes=(plan.num_canvases,), iters=iters, warmup=1,
+            sync=jax.block_until_ready)
+        mu, sigma = tbl.table[plan.num_canvases]
+        rows.append({"cell": "kernel_blocks", "variant": f"rows{cand}",
+                     "m": m, "n": n, "patch": patch,
+                     "block_rows": cand, "mu_s": mu, "sigma_s": sigma})
+        print(f"kernel_blocks    rows{cand:<2d} "
+              f"mu={mu:.4f}s sigma={sigma:.4f}s "
+              f"(B={plan.num_canvases}, {m}x{n}/p{patch})")
+    return rows
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--cell", default="all",
-                   choices=list(CELLS) + ["all", "detector_stitch"])
+                   choices=list(CELLS) + ["all", "detector_stitch",
+                                          "kernel_blocks"])
     p.add_argument("--variant")
     args = p.parse_args(argv)
 
-    mesh = make_production_mesh()
-    hw = HardwareConfig()
     results = []
     if os.path.exists(OUT):
         results = json.load(open(OUT))
+    if args.cell == "kernel_blocks":
+        rows = run_kernel_blocks()
+        results = [r for r in results if r["cell"] != "kernel_blocks"]
+        results.extend(rows)
+        os.makedirs("out", exist_ok=True)
+        json.dump(results, open(OUT, "w"), indent=1)
+        print(f"wrote {OUT} ({len(results)} rows)")
+        return
+
+    mesh = make_production_mesh()
+    hw = HardwareConfig()
     if args.cell == "detector_stitch":
         rows = run_detector_stitch(mesh, hw)
         results = [r for r in results if r["cell"] != "detector_stitch"]

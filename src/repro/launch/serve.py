@@ -66,6 +66,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -90,13 +91,21 @@ from repro.sharding import ShardingConfig
 from repro.sources import RateProfile, make_source
 
 
-def build_detector(canvas: int = 256):
+def build_detector(canvas: int = 256, quantize: bool = False):
     cfg = DetectorConfig(name="serve-det", canvas=canvas, patch=32,
                          n_layers=2, d_model=64, n_heads=4, d_ff=128,
                          param_dtype="float32", compute_dtype="float32")
     rules = ShardingConfig.make().rules
     params = param_lib.init_params(jax.random.PRNGKey(0),
                                    detector_lib.param_specs(cfg))
+    if quantize:
+        # same weights, int8-resident: quantize the fp init through
+        # models/quantize.py onto the quant spec tree
+        from repro.models import quantize as quantize_lib
+
+        cfg = dataclasses.replace(cfg, quant_weights=True)
+        params = quantize_lib.quantize_params(
+            detector_lib.param_specs(cfg), params)
     serve_fn = jax.jit(lambda p, x: detector_lib.serve(cfg, p, x, rules))
     # the same table the jit-internal logical constraints use: callers
     # must lay inputs out with these rules or force a reshard on entry
@@ -162,6 +171,18 @@ def main(argv=None):
     p.add_argument("--use-pallas-stitch", action="store_true",
                    help="assemble canvases with the Pallas kernel "
                         "(interpret mode on CPU)")
+    p.add_argument("--fuse", action="store_true",
+                   help="fused device hot path: stitch->patch-embed and "
+                        "decode->gather run as single kernels, so the "
+                        "canvas batch never materializes in HBM and "
+                        "detector outputs skip the host round-trip "
+                        "(single-worker mesh; the fused path does not "
+                        "shard the canvas batch)")
+    p.add_argument("--quantize", action="store_true",
+                   help="serve int8-resident weights: registry models "
+                        "resolve to their _int8 variants (with their own "
+                        "latency profiles) and the built-in detector "
+                        "builds quantized through models/quantize.py")
     p.add_argument("--async-device", action="store_true",
                    help="overlap device execution with arrival ingestion "
                         "(submit/complete executor over JAX async dispatch)")
@@ -229,6 +250,7 @@ def main(argv=None):
         executor="async_device" if args.async_device or args.workers > 1
         else "device",
         use_pallas=args.use_pallas_stitch,
+        fuse=args.fuse, quantize=args.quantize,
         max_inflight=args.max_inflight,
         clock=args.clock, wall_speed=args.wall_speed,
         n_workers=args.workers, placement=args.placement,
@@ -237,6 +259,22 @@ def main(argv=None):
         model=args.model, model_map=model_map)
 
     m = n = args.canvas
+    if config.quantize and config.multi_model:
+        # --quantize reroutes every referenced registry model to its
+        # _int8 variant (when one is registered): quantized weights,
+        # economics, and latency profile, same routing keys
+        from repro.core.models import model_names as _registry_names
+
+        have = set(_registry_names())
+
+        def _q(name):
+            return (f"{name}_int8"
+                    if name and f"{name}_int8" in have else name)
+
+        config = config.replace(
+            model=_q(config.model),
+            model_map=({k: _q(v) for k, v in config.model_map.items()}
+                       if config.model_map else None))
     if config.multi_model:
         # lazy registry builds: each referenced model jit-compiles its
         # (reduced) trunk at the CLI canvas, with per-name weight seeds
@@ -249,7 +287,19 @@ def main(argv=None):
               f"(default {default_model})")
     else:
         specs, builds, default_model = {}, {}, None
-        cfg, params, serve_fn, rules = build_detector(args.canvas)
+        cfg, params, serve_fn, rules = build_detector(
+            args.canvas, quantize=config.quantize)
+
+    def fused_kwargs(mcfg, pr, rl):
+        """ModelRuntime fused-path fields (tokens_fn + patch-embed
+        projection) for one built model; empty when fusion is off."""
+        if not config.fuse:
+            return {}
+        ek, eb = detector_lib.embed_params(mcfg, pr)
+        tok = jax.jit(lambda p, t, _c=mcfg, _r=rl:
+                      detector_lib.forward_tokens(_c, p, t, _r))
+        return dict(tokens_fn=tok, embed_kernel=ek, embed_bias=eb,
+                    patch=mcfg.patch)
     if config.n_workers > 1:
         meshes = make_worker_meshes(config.n_workers)
     else:
@@ -294,8 +344,9 @@ def main(argv=None):
 
     def runtimes(mesh_i):
         """Per-model device runtimes on one worker's mesh slice."""
-        return {name: ModelRuntime(fn, pr, m, n, mesh=mesh_i, rules=rl)
-                for name, (_, pr, fn, rl) in builds.items()}
+        return {name: ModelRuntime(fn, pr, m, n, mesh=mesh_i, rules=rl,
+                                   **fused_kwargs(mcfg, pr, rl))
+                for name, (mcfg, pr, fn, rl) in builds.items()}
 
     caches = None
     if config.multi_model and len(specs) > 1:
@@ -315,17 +366,20 @@ def main(argv=None):
             lambda i: make_executor(
                 config.executor, serve_fn=serve_fn, params=params,
                 canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
-                mesh=meshes[i], rules=rules,
+                fuse=config.fuse, mesh=meshes[i], rules=rules,
                 max_inflight=config.max_inflight,
-                models=runtimes(meshes[i]) if builds else None),
+                models=runtimes(meshes[i]) if builds else None,
+                **fused_kwargs(cfg, params, rules)),
             placement=make_placement(config.placement),
             estimator=estimator, weight_caches=caches)
     else:
         executor = make_executor(
             config.executor, serve_fn=serve_fn, params=params,
             canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
-            mesh=mesh, rules=rules, max_inflight=config.max_inflight,
-            models=runtimes(mesh) if builds else None)
+            fuse=config.fuse, mesh=mesh, rules=rules,
+            max_inflight=config.max_inflight,
+            models=runtimes(mesh) if builds else None,
+            **fused_kwargs(cfg, params, rules))
         if config.online_latency or caches is not None:
             # a 1-worker pool only adds the estimator feedback loop and
             # weight-cache accounting: the wrapped executor keeps its
@@ -370,6 +424,10 @@ def main(argv=None):
         overlap = "sync"
     if config.online_latency:
         overlap += ", online latency"
+    if config.fuse:
+        overlap += ", fused"
+    if config.quantize:
+        overlap += ", int8"
     print(f"served {stats.patches_emitted} patches in "
           f"{executor.n_invocations} invocations ({overlap}, "
           f"{config.clock} clock, {executor.n_sharded} data-parallel over "

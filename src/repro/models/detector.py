@@ -26,7 +26,8 @@ def _trunk_cfg(cfg: DetectorConfig) -> ViTConfig:
         n_layers=cfg.n_layers, d_model=cfg.d_model, n_heads=cfg.n_heads,
         d_ff=cfg.d_ff, n_classes=1, param_dtype=cfg.param_dtype,
         compute_dtype=cfg.compute_dtype, remat=cfg.remat,
-        scan_layers=cfg.scan_layers)
+        scan_layers=cfg.scan_layers,
+        quant_weights=getattr(cfg, "quant_weights", False))
 
 
 def param_specs(cfg: DetectorConfig):
@@ -45,18 +46,43 @@ def param_specs(cfg: DetectorConfig):
     }
 
 
-def forward(cfg: DetectorConfig, params, canvases, rules):
-    """canvases: (B, M, N, 3) -> (B, side, side, 5) raw head outputs."""
+def embed_params(cfg: DetectorConfig, params):
+    """The patch-embed projection as plain (kernel, bias) arrays.
+
+    The fused stitch->embed Pallas kernel applies this projection inside
+    the stitch grid, so it needs the raw weights (always full precision —
+    ``param_specs`` never quantizes the patch embed) cast to the compute
+    dtype.
+    """
+    cdt = dtype_of(cfg.compute_dtype)
+    pe = params["trunk"]["patch_embed"]
+    return pe["kernel"].astype(cdt), pe["bias"].astype(cdt)
+
+
+def forward_tokens(cfg: DetectorConfig, params, tokens, rules):
+    """Embedded tokens (B, seq, d_model) -> (B, side, side, 5) raw head.
+
+    The trunk minus the patch embed: entry point for the fused
+    stitch->embed path, which produces the token batch on-device without
+    materializing canvases in HBM.
+    """
     cdt = dtype_of(cfg.compute_dtype)
     t = _trunk_cfg(cfg)
     tp = params["trunk"]
-    x = layers.dense(tp["patch_embed"], vit.patchify(canvases, cfg.patch), cdt)
-    x = x + tp["pos_embed"].astype(cdt)
+    x = tokens.astype(cdt) + tp["pos_embed"].astype(cdt)
     x = with_logical_constraint(x, ("canvas", "seq", "embed"), rules)
     x = vit._encoder(t, tp, x, rules, "xla")
     out = layers.dense(params["det_head"], x, cdt)
     side = cfg.canvas // cfg.patch
-    return out.reshape(canvases.shape[0], side, side, 5)
+    return out.reshape(tokens.shape[0], side, side, 5)
+
+
+def forward(cfg: DetectorConfig, params, canvases, rules):
+    """canvases: (B, M, N, 3) -> (B, side, side, 5) raw head outputs."""
+    cdt = dtype_of(cfg.compute_dtype)
+    tp = params["trunk"]
+    x = layers.dense(tp["patch_embed"], vit.patchify(canvases, cfg.patch), cdt)
+    return forward_tokens(cfg, params, x, rules)
 
 
 def decode_boxes(cfg: DetectorConfig, raw: jnp.ndarray,

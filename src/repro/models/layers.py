@@ -145,12 +145,13 @@ def swiglu(params, x, compute_dtype):
     return dense(params["down"], g * u, compute_dtype)
 
 
-def gelu_mlp_specs(d: int, d_ff: int, dtype, in_axis="embed", out_axis="mlp"):
+def gelu_mlp_specs(d: int, d_ff: int, dtype, in_axis="embed", out_axis="mlp",
+                   quant: bool = False):
     return {
         "fc1": dense_specs(d, d_ff, in_axis=in_axis, out_axis=out_axis,
-                           dtype=dtype, bias=True),
+                           dtype=dtype, bias=True, quant=quant),
         "fc2": dense_specs(d_ff, d, in_axis=out_axis, out_axis=in_axis,
-                           dtype=dtype, bias=True),
+                           dtype=dtype, bias=True, quant=quant),
     }
 
 

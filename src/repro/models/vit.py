@@ -19,13 +19,16 @@ from repro.sharding import with_logical_constraint
 
 
 def _layer_specs(cfg: ViTConfig, dtype):
+    quant = getattr(cfg, "quant_weights", False)
     return {
         "ln1": layers.layernorm_specs(cfg.d_model, dtype),
         "attn": attn.gqa_specs(cfg.d_model, cfg.n_heads, cfg.n_heads,
                                cfg.d_model // cfg.n_heads, dtype,
-                               fused=getattr(cfg, "fused_qkv", False)),
+                               fused=getattr(cfg, "fused_qkv", False),
+                               quant=quant),
         "ln2": layers.layernorm_specs(cfg.d_model, dtype),
-        "mlp": layers.gelu_mlp_specs(cfg.d_model, cfg.d_ff, dtype),
+        "mlp": layers.gelu_mlp_specs(cfg.d_model, cfg.d_ff, dtype,
+                                     quant=quant),
     }
 
 

@@ -65,16 +65,17 @@ REGISTRIES = {
     "clock": ("virtual", "wall"),
     "executor": ("sim", "device", "async_device"),
     "placement": ("least", "round", "affinity", "model"),
-    "model": ("tangram", "vit_s16", "efficientnet_b7"),
+    "model": ("tangram", "vit_s16", "efficientnet_b7",
+              "tangram_int8", "vit_s16_int8"),
 }
 
 #: the ServeConfig record itself is serialized into benchmark JSON;
 #: field renames/removals break old reports' from_dict
 SERVE_CONFIG_FIELDS = {
     "max_canvases", "incremental", "classify", "adaptive",
-    "executor", "use_pallas", "max_inflight", "clock", "wall_speed",
-    "check_invariants", "n_workers", "placement", "online_latency",
-    "source", "ingestion_window", "model", "model_map",
+    "executor", "use_pallas", "fuse", "quantize", "max_inflight",
+    "clock", "wall_speed", "check_invariants", "n_workers", "placement",
+    "online_latency", "source", "ingestion_window", "model", "model_map",
 }
 
 

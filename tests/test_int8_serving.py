@@ -1,0 +1,82 @@
+"""Int8-resident serving through the model registry: spec economics,
+distinct latency profiles, ServeConfig round-trips, and quantized builds
+that track their full-precision base model."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ServeConfig
+from repro.core.latency import LatencyBank, LatencyTable
+from repro.core.models import ModelSpec, make_model
+
+
+def test_int8_specs_registered_with_smaller_weights():
+    for base in ("tangram", "vit_s16"):
+        fp = make_model(base)
+        q = make_model(f"{base}_int8")
+        assert q.dtype == "int8"
+        assert q.weight_bytes < fp.weight_bytes, base
+        # same trunk, same canvas geometry — only residency differs
+        assert (q.canvas_m, q.canvas_n) == (fp.canvas_m, fp.canvas_n)
+
+
+def test_int8_latency_profile_is_distinct():
+    fp = make_model("tangram").latency_table(max_batch=8)
+    q = make_model("tangram_int8").latency_table(max_batch=8)
+    mu_fp, _ = fp.mu_sigma(8)
+    mu_q, _ = q.mu_sigma(8)
+    # 2x MXU rate + halved weight streaming: faster in both regimes
+    assert mu_q < mu_fp
+
+    bank = LatencyBank({"tangram": fp, "tangram_int8": q})
+    assert bank.table("tangram") is not bank.table("tangram_int8")
+    assert bank.table("tangram_int8").mu_sigma(8)[0] < \
+        bank.table("tangram").mu_sigma(8)[0]
+
+
+def test_serve_config_int8_fused_roundtrip():
+    cfg = ServeConfig(executor="device", fuse=True, quantize=True,
+                      classify="slo", model="tangram",
+                      model_map={"0.6": "tangram_int8"})
+    d = json.loads(json.dumps(cfg.to_dict()))
+    back = ServeConfig.from_dict(d)
+    assert back == cfg
+    assert back.fuse and back.quantize
+    assert back.model_names() == ["tangram", "tangram_int8"]
+    assert back.resolve_model(0.6) == "tangram_int8"
+    assert back.resolve_model(2.0) == "tangram"
+
+
+def test_int8_build_is_quantized_base_model():
+    """tangram_int8 builds the tangram weights quantized: int8 leaves in
+    the trunk, quant_weights threaded into the config, and outputs that
+    track the full-precision build closely."""
+    cfg_q, params_q, serve_q, _ = make_model("tangram_int8").build(canvas=128)
+    cfg_fp, params_fp, serve_fp, _ = make_model("tangram").build(canvas=128)
+    assert cfg_q.quant_weights and not cfg_fp.quant_weights
+
+    leaves_q = jax.tree_util.tree_leaves(params_q)
+    assert any(l.dtype == jnp.int8 for l in leaves_q)
+    assert not any(l.dtype == jnp.int8
+                   for l in jax.tree_util.tree_leaves(params_fp))
+    nbytes = lambda ls: sum(np.asarray(l).nbytes for l in ls)
+    assert nbytes(leaves_q) < nbytes(jax.tree_util.tree_leaves(params_fp))
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 128, 128, 3)), jnp.float32)
+    obj_q, _ = serve_q(params_q, x)
+    obj_fp, _ = serve_fp(params_fp, x)
+    a = np.asarray(obj_q, np.float32).ravel()
+    b = np.asarray(obj_fp, np.float32).ravel()
+    corr = np.corrcoef(a, b)[0, 1]
+    assert corr > 0.98, corr
+
+
+def test_modelspec_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="unsupported dtype"):
+        ModelSpec(name="bad-dtype", canvas_m=64, canvas_n=64,
+                  weight_bytes=1e6,
+                  table=LatencyTable({1: (0.1, 0.01)}), dtype="int4")
