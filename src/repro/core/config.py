@@ -84,6 +84,14 @@ class ServeConfig:
     placement: Optional[str] = None  # least | round | affinity | model
                                      # (None: least)
 
+    # --- fleet sharding (core.fleet) ------------------------------------
+    shards: Optional[int] = None     # None: one engine; N: ShardedEngine
+                                     # with N camera-group shards (then
+                                     # n_workers is the TOTAL worker
+                                     # budget split across shards)
+    planner: Optional[str] = None    # cost | equal — shard layout planner
+                                     # (None: "cost" when shards is set)
+
     # --- models (registry names; see repro.core.models) -----------------
     model: Optional[str] = None      # default model for every class (None:
                                      # the implicit single-model pipeline)
@@ -111,6 +119,10 @@ class ServeConfig:
         if self.ingestion_window is not None and self.ingestion_window < 1:
             raise ValueError(f"ingestion_window must be >= 1, got "
                              f"{self.ingestion_window}")
+        if self.shards is not None and self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.planner is not None and self.shards is None:
+            raise ValueError("planner requires shards to be set")
 
     def replace(self, **changes) -> "ServeConfig":
         return dataclasses.replace(self, **changes)

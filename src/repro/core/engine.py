@@ -86,7 +86,7 @@ import dataclasses
 import heapq
 import math
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -143,6 +143,10 @@ class Results:
     model_stats: Optional[dict] = None  # per-model platform/cache counters
                                       # (Platform.model_stats() merged with
                                       # WorkerPoolExecutor.model_cache_stats())
+    shard_stats: Optional[List[dict]] = None  # per-shard fleet rows
+                                      # (ShardedEngine.shard_stats():
+                                      # arrivals, utilization, violations,
+                                      # backlog high water)
 
     @property
     def n_patches(self) -> int:
@@ -246,6 +250,8 @@ class Results:
             ]
         if self.source_stats is not None:
             out["source"] = self.source_stats
+        if self.shard_stats is not None:
+            out["per_shard"] = self.shard_stats
         return out
 
 
@@ -837,14 +843,28 @@ class ServingEngine:
         self.outcomes: List[PatchOutcome] = []
         self.invocations: List[Invocation] = []
         self.completions: List[Completion] = []
-        # arrival bookkeeping is keyed by a per-arrival sequence number;
-        # _seq_of indexes live patches into it (the strong patch ref held
-        # in _arrivals guarantees an id() cannot be recycled while its
-        # entry exists).  Both are evicted when the outcome is recorded,
-        # so a long-lived engine no longer grows without bound.
-        self._arrivals: Dict[int, Tuple[Patch, float]] = {}
-        self._seq_of: Dict[int, int] = {}
-        self._arrival_seq = 0
+        # arrival bookkeeping lives in reused slots: _slot_patch holds the
+        # strong patch ref (so an id() cannot be recycled while its entry
+        # is live) and _slot_t the arrival time; delivered outcomes clear
+        # the slot onto the free list for the next arrival.  The table
+        # therefore stays sized to the *peak backlog*, not the trace
+        # length, and ingestion does one list write per arrival instead
+        # of growing two dicts.
+        self._slot_patch: List[Optional[Patch]] = []
+        self._slot_t: List[float] = []
+        self._free_slots: List[int] = []
+        self._slot_of: Dict[int, int] = {}    # id(patch) -> live slot
+        self.arrivals_total = 0
+        # incremental backlog counters: every offered patch increments
+        # _queued, firing moves its count to _inflight_count, delivery
+        # retires it — so backlog() is O(1) per read instead of walking
+        # the pool queues plus every unresolved invocation on *each*
+        # arrival (the per-event cost that capped fleet-scale ingestion)
+        self._queued = 0
+        self._inflight_count = 0
+        # ready() is resolved once: the per-event getattr on the hot
+        # path was measurable at fleet arrival rates
+        self._ready_probe = getattr(executor, "ready", None)
         self._scheduled: List = []   # heap of (t_finish, seq, ExecHandle)
         self._inflight: collections.deque = collections.deque()
         self._event_seq = 0
@@ -860,8 +880,7 @@ class ServingEngine:
 
     def run(self, arrivals: Sequence[Arrival]) -> List[PatchOutcome]:
         """Drive a whole (sorted-by-``t_arrive``) arrival trace to empty."""
-        for arr in arrivals:
-            self.offer(arr)
+        self.offer_batch(arrivals)
         self.finish()
         return self.outcomes
 
@@ -884,33 +903,81 @@ class ServingEngine:
         """One arrival: first fire everything due strictly before it."""
         self.advance(arrival.t_arrive)
         self.clock.advance_to(arrival.t_arrive)
-        seq = self._arrival_seq
-        self._arrival_seq += 1
-        self._arrivals[seq] = (arrival.patch, arrival.t_arrive)
-        self._seq_of[id(arrival.patch)] = seq
-        for inv in self.pool.on_patch(arrival.t_arrive, arrival.patch):
+        self._ingest(arrival)
+
+    def offer_batch(self, arrivals: Sequence[Arrival]):
+        """Ingest a run of arrivals (sorted by ``t_arrive``) in one call.
+
+        Semantically identical to :meth:`offer` in a loop — pinned by a
+        regression test — but skips the per-arrival event probe
+        (completion harvest + timer scan + heap peek) whenever no timer
+        or scheduled completion is due before the arrival, which is the
+        common case inside a fleet shard.  Arrivals fall back to the
+        full :meth:`offer` path while async work is in flight, where the
+        per-event harvest is load-bearing.
+        """
+        for arr in arrivals:
+            if self._ready_probe is not None and self._inflight:
+                self.offer(arr)
+                continue
+            t = arr.t_arrive
+            if self._next_event() < t:
+                self.advance(t)
+            self.clock.advance_to(t)
+            self._ingest(arr)
+
+    def _ingest(self, arrival: Arrival):
+        """Arrival bookkeeping + batcher feed (clock already advanced)."""
+        patch = arrival.patch
+        if self._free_slots:
+            slot = self._free_slots.pop()
+            self._slot_patch[slot] = patch
+            self._slot_t[slot] = arrival.t_arrive
+        else:
+            slot = len(self._slot_patch)
+            self._slot_patch.append(patch)
+            self._slot_t.append(arrival.t_arrive)
+        self._slot_of[id(patch)] = slot
+        self.arrivals_total += 1
+        self._queued += 1
+        for inv in self.pool.on_patch(arrival.t_arrive, patch):
             self._dispatch(inv)
-        backlog = self.backlog()
+        backlog = self._queued + self._inflight_count
         if backlog > self.backlog_high_water:
             self.backlog_high_water = backlog
+        if self.check_invariants:
+            depth = getattr(self.pool, "queue_depth", None)
+            if depth is not None:
+                assert self._queued == depth(), (self._queued, depth())
+
+    def _next_event(self) -> float:
+        """Engine time of the next due timer or scheduled completion."""
+        t = self.pool.next_timer()
+        if self._scheduled:
+            t_comp = self._scheduled[0][0]
+            if t_comp < t:
+                return t_comp
+        return t
 
     # ------------------------------------------------- ingestion window ----
 
     def queued_patches(self) -> int:
         """Patches accepted but not yet fired (pool queues)."""
-        depth = getattr(self.pool, "queue_depth", None)
-        return depth() if depth is not None else 0
+        return self._queued
 
     def inflight_patches(self) -> int:
         """Patches inside unresolved invocations (scheduled + in flight)."""
-        return (sum(len(h.invocation.patches) for h in self._inflight)
-                + sum(len(h.invocation.patches)
-                      for _, _, h in self._scheduled))
+        return self._inflight_count
 
     def backlog(self) -> int:
         """Total unfinished patches — the backpressure quantity live
-        sources compare against ``ingestion_window``."""
-        return self.queued_patches() + self.inflight_patches()
+        sources compare against ``ingestion_window``.  O(1): maintained
+        incrementally at offer / dispatch / delivery.  The counters
+        assume the batcher contract that every offered patch eventually
+        leaves through a fired invocation (true of every in-repo
+        batcher); ``check_invariants`` cross-checks against the pool's
+        authoritative queue depth on each arrival."""
+        return self._queued + self._inflight_count
 
     def overloaded(self) -> bool:
         """True when the backlog has filled the ingestion window."""
@@ -970,6 +1037,9 @@ class ServingEngine:
                             for p in c.placements)
             assert placed == list(range(len(inv.patches))), placed
         self.invocations.append(inv)
+        n = len(inv.patches)
+        self._queued -= n
+        self._inflight_count += n
         bound = getattr(self.executor, "max_inflight", None)
         if bound is not None:
             # make room before submitting (the submit below may pin
@@ -1012,7 +1082,7 @@ class ServingEngine:
         slow batch at the head must not pin completed later batches in
         flight (head-of-line harvest bug, regression-tested).  Handles
         ready at the same harvest deliver in ``(worker, seq)`` order."""
-        ready = getattr(self.executor, "ready", None)
+        ready = self._ready_probe
         if ready is None:
             return
         while True:
@@ -1026,7 +1096,7 @@ class ServingEngine:
     def _resolve_one(self):
         """Retire one in-flight handle: any already-ready handle first
         (lowest ``(worker, seq)``), else block on the FIFO head."""
-        ready = getattr(self.executor, "ready", None)
+        ready = self._ready_probe
         if ready is not None:
             done = [h for h in self._inflight if ready(h)]
             if done:
@@ -1063,12 +1133,15 @@ class ServingEngine:
         inv = comp.invocation
         if comp.model is None:
             comp.model = inv.model
+        self._inflight_count -= len(inv.patches)
         for p in inv.patches:
-            seq = self._seq_of.pop(id(p), None)
-            if seq is None:
+            slot = self._slot_of.pop(id(p), None)
+            if slot is None:
                 t_arrive = inv.t_submit
             else:
-                _, t_arrive = self._arrivals.pop(seq)
+                t_arrive = self._slot_t[slot]
+                self._slot_patch[slot] = None
+                self._free_slots.append(slot)
             self.outcomes.append(
                 PatchOutcome(p, t_arrive, inv.t_submit, comp.t_finish,
                              model=comp.model))

@@ -39,6 +39,8 @@ class Invocation:
     cost_canvases: Optional[float] = None  # billing override (baselines)
     model: Optional[str] = None  # registry model name (InvokerPool's
                                 # model_of; None: the implicit single model)
+    shard: Optional[int] = None  # fleet shard that fired it (tagged by
+                                # ShardedEngine; None outside a fleet)
 
     @property
     def batch_size(self) -> int:

@@ -34,10 +34,33 @@ class LatencyTable:
 
     table: Dict[int, Tuple[float, float]]
     slack_sigmas: float = 3.0
+    #: interpolation memo — ``mu_sigma`` sits on the per-arrival firing
+    #: path (every probe calls ``t_slack``), and the sorted()-per-miss
+    #: lookup was measurable at fleet arrival rates.  The profile is
+    #: treated as frozen after construction (nothing in-repo mutates
+    #: ``table`` in place); the size guard invalidates the memo if a
+    #: caller nevertheless adds profile points.
+    _miss_cache: Dict[int, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _cache_size: int = dataclasses.field(default=-1, init=False,
+                                         repr=False, compare=False)
 
     def mu_sigma(self, batch: int) -> Tuple[float, float]:
-        if batch in self.table:
-            return self.table[batch]
+        hit = self.table.get(batch)
+        if hit is not None:
+            return hit
+        if self._cache_size == len(self.table):
+            memo = self._miss_cache.get(batch)
+            if memo is not None:
+                return memo
+        else:
+            self._miss_cache.clear()
+            self._cache_size = len(self.table)
+        out = self._interpolate(batch)
+        self._miss_cache[batch] = out
+        return out
+
+    def _interpolate(self, batch: int) -> Tuple[float, float]:
         keys = sorted(self.table)
         if not keys:
             raise ValueError("empty latency table")

@@ -44,12 +44,16 @@ from repro.core.clock import Clock, make_clock
 from repro.core.config import ServeConfig, make_classify
 from repro.core.engine import (InvokerPool, PatchOutcome, Results,
                                ServingEngine, SimExecutor, uniform_pool)
+from repro.core.fleet import (FleetCostModel, FleetInvokerPool, FleetPlan,
+                              ShardedEngine, fleet_uniform_pool,
+                              make_planner)
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import LatencyBank, LatencyTable, OnlineLatencyTable
 from repro.core.models import make_model
 from repro.core.partitioning import Patch
 from repro.core.registry import unknown_name
-from repro.core.workers import WorkerPoolExecutor, make_placement
+from repro.core.workers import (ReservedClassPlacement, WorkerPoolExecutor,
+                                make_placement)
 from repro.serverless.platform import (Platform, mean_consolidation,
                                        model_stats as records_model_stats,
                                        split_platform)
@@ -153,26 +157,38 @@ class TangramScheduler:
                                        incremental=config.incremental)
 
             pool_classify = classify or (lambda p: None)
-            if config.adaptive is not None:
-                self.pool = AdaptiveInvokerPool(
-                    make_invoker, pool_classify, config.adaptive,
-                    model_of=config.resolve_model)
-            else:
-                self.pool = InvokerPool(make_invoker, pool_classify,
-                                        model_of=config.resolve_model)
+
+            def make_pool(fleet: bool = False):
+                # adaptive pools keep the stock O(classes) scan even in
+                # fleet mode (FleetInvokerPool is scan-equivalent, so
+                # this is a speed difference, not a behaviour one)
+                if config.adaptive is not None:
+                    return AdaptiveInvokerPool(
+                        make_invoker, pool_classify, config.adaptive,
+                        model_of=config.resolve_model)
+                cls = FleetInvokerPool if fleet else InvokerPool
+                return cls(make_invoker, pool_classify,
+                           model_of=config.resolve_model)
         else:
             if config.online_latency:
                 latency = self.estimator = OnlineLatencyTable(latency)
-            if config.adaptive is not None:
-                self.pool = adaptive_uniform_pool(
-                    canvas_m, canvas_n, latency, config.max_canvases,
-                    incremental=config.incremental, classify=classify,
-                    cfg=config.adaptive)
-            else:
-                self.pool = uniform_pool(canvas_m, canvas_n, latency,
-                                         config.max_canvases,
-                                         incremental=config.incremental,
-                                         classify=classify)
+
+            def make_pool(fleet: bool = False):
+                if config.adaptive is not None:
+                    return adaptive_uniform_pool(
+                        canvas_m, canvas_n, latency, config.max_canvases,
+                        incremental=config.incremental, classify=classify,
+                        cfg=config.adaptive)
+                fn = fleet_uniform_pool if fleet else uniform_pool
+                return fn(canvas_m, canvas_n, latency, config.max_canvases,
+                          incremental=config.incremental, classify=classify)
+        self._make_pool = make_pool
+        self.pool = make_pool()
+        # the planner's cost model samples one latency table; multi-model
+        # configs use the first registry model's (they only differ in
+        # scale, and the planner wants a trend, not exactness)
+        self._planner_table = (next(iter(self._model_tables.values()))
+                               if self._model_tables else latency)
         self.platform = platform
         self.n_workers = config.n_workers
         self.placement = (placement_override
@@ -228,10 +244,100 @@ class TangramScheduler:
             TraceSource(streams=streams, bandwidth_bps=bandwidth_bps),
             name=name)
 
+    # ------------------------------------------------------ fleet sharding ----
+
+    def _fleet_plan(self, source) -> FleetPlan:
+        """Plan the shard layout for ``config.shards`` shards.  Sources
+        exposing ``camera_rates()`` (e.g. ``FleetCameraSource``) feed the
+        planner; otherwise routing falls back to ``camera_id % shards``
+        with the worker budget split evenly."""
+        config = self.config
+        s = config.shards
+        budget = max(config.n_workers, s)
+        rates = (source.camera_rates()
+                 if hasattr(source, "camera_rates") else None)
+        if not rates:
+            per, extra = divmod(budget, s)
+            return FleetPlan(n_shards=s,
+                             workers=tuple(per + (1 if i < extra else 0)
+                                           for i in range(s)))
+        planner = make_planner(
+            config.planner or "cost",
+            cost_model=FleetCostModel(latency=self._planner_table),
+            worker_budget=budget)
+        class_rates = (source.class_rates()
+                       if hasattr(source, "class_rates") else None)
+        return planner.plan(rates, class_rates=class_rates, n_shards=s)
+
+    def _serve_sharded(self, source, name: str) -> Results:
+        """The ``config.shards`` path of :meth:`serve_source`: plan the
+        layout, build one private engine per shard over its platform
+        slice (worker sub-pools honour the plan's per-class
+        reservations), serve through a :class:`ShardedEngine`, and fold
+        the per-shard rows into ``Results.shard_stats``."""
+        config = self.config
+        plan = self._fleet_plan(source)
+        s_count = plan.n_shards
+        weights = [max(plan.workers_of(s), 1) for s in range(s_count)]
+        shard_platforms = (split_platform(self.platform, s_count,
+                                          weights=weights)
+                           if s_count > 1 else [self.platform])
+        window = (max(1, config.ingestion_window // s_count)
+                  if config.ingestion_window else None)
+        engines = []
+        platforms = []
+        for s in range(s_count):
+            w = plan.workers_of(s)
+            plat = shard_platforms[s]
+            if w > 1:
+                worker_plats = split_platform(plat, w)
+                reserved = (plan.reservations[s]
+                            if plan.reservations else {})
+                placement = (ReservedClassPlacement(reserved) if reserved
+                             else self.placement)
+                executor = WorkerPoolExecutor(
+                    [self._sim_executor(p) for p in worker_plats],
+                    placement=placement, estimator=self.estimator)
+                platforms.extend(worker_plats)
+            else:
+                executor = self._sim_executor(plat)
+                platforms.append(plat)
+            engines.append(ServingEngine(
+                self._make_pool(fleet=True), executor,
+                clock=self._clock(),
+                check_invariants=self.check_invariants,
+                ingestion_window=window))
+        sharded = ShardedEngine(engines, plan.shard_of, plan=plan)
+        outcomes = sharded.serve(source)
+
+        stats = source.stats()
+        source_stats = stats.to_dict()
+        source_stats["backlog_high_water"] = sharded.backlog_high_water
+        source_stats["ingestion_window"] = config.ingestion_window
+        records = [r for p in platforms for r in p.records]
+        invocations = sharded.invocations
+        return Results(
+            name=name, outcomes=outcomes,
+            canvas_efficiencies=[c.efficiency for inv in invocations
+                                 for c in inv.canvases],
+            batch_sizes=[len(inv.canvases) for inv in invocations],
+            patches_per_batch=[len(inv.patches) for inv in invocations],
+            bytes_sent=stats.bytes_sent,
+            total_cost=self.platform.total_cost,
+            invocations=len(records),
+            exec_seconds=self.platform.meter.busy_seconds,
+            transmission_seconds=stats.transmission_seconds,
+            mean_consolidation=mean_consolidation(records),
+            source_stats=source_stats,
+            model_stats=records_model_stats(records) or None,
+            shard_stats=sharded.shard_stats())
+
     def serve_source(self, source, name: str = "tangram") -> Results:
         """Serve any :mod:`repro.sources` source end-to-end and assemble
         the ``Results`` record (bandwidth + drop/degrade accounting from
         ``source.stats()``)."""
+        if self.config.shards is not None:
+            return self._serve_sharded(source, name)
         executor, platforms = self._executor()
         engine = ServingEngine(self.pool, executor,
                                clock=self._clock(),

@@ -230,6 +230,40 @@ class ClassAffinityPlacement:
         return min(allowed, key=lambda i: (pool.outstanding[i], i))
 
 
+class ReservedClassPlacement:
+    """Placement honouring a :class:`~repro.core.fleet.FleetPlan`
+    shard's per-class worker reservations.
+
+    ``reserved`` maps a class key's ``str()`` (the plan's JSON-safe
+    spelling) to a worker count: that class's batches run on the
+    lowest-index workers reserved for it, unmatched classes on whatever
+    is left (everything, when nothing is reserved).  Least-outstanding
+    within the allowed set, lowest index on ties — the same degradation
+    rule as :class:`ClassAffinityPlacement`.
+    """
+
+    def __init__(self, reserved: Mapping[str, int]):
+        self.reserved = dict(reserved)
+        self._ranges: Dict[str, range] = {}
+        start = 0
+        for key in sorted(self.reserved):
+            count = self.reserved[key]
+            self._ranges[key] = range(start, start + count)
+            start += count
+        self._first_free = start
+
+    def choose(self, inv: Invocation, pool: "WorkerPoolExecutor") -> int:
+        allowed = self._ranges.get(str(inv.key))
+        if allowed is None or len(allowed) == 0:
+            allowed = range(self._first_free, pool.n_workers)
+            if len(allowed) == 0:
+                allowed = range(pool.n_workers)
+        allowed = [i for i in allowed if i < pool.n_workers]
+        if not allowed:
+            allowed = list(range(pool.n_workers))
+        return min(allowed, key=lambda i: (pool.outstanding[i], i))
+
+
 class ModelAffinityPlacement:
     """Co-locate batches of the same model so weights stay resident.
 

@@ -83,8 +83,12 @@ from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import LatencyBank, OnlineLatencyTable, measure
 from repro.core.models import make_model
+from repro.core.fleet import (FleetInvokerPool, FleetPlan, FleetCostModel,
+                              ShardedEngine, fleet_uniform_pool,
+                              make_planner)
 from repro.core.workers import (WorkerPoolExecutor, device_worker_pool,
-                                make_placement, weight_caches)
+                                make_placement, share_frame_store,
+                                weight_caches)
 from repro.launch.mesh import make_serve_mesh, make_worker_meshes
 from repro.models import detector as detector_lib
 from repro.sharding import ShardingConfig
@@ -200,6 +204,18 @@ def main(argv=None):
                         "split into this many independent mesh slices, "
                         "each an overlapped (async) executor, and "
                         "concurrent invocations are routed across them")
+    p.add_argument("--shards", type=int, default=None,
+                   help="fleet sharding: partition cameras into this many "
+                        "shard groups, each its own invoker pool + "
+                        "executor over its own mesh slice, under a "
+                        "two-level ShardedEngine (core.fleet); mutually "
+                        "exclusive with --workers > 1")
+    p.add_argument("--planner", choices=("cost", "equal"), default=None,
+                   help="shard layout planner with --shards: cost "
+                        "(default; rate-aware LPT grouping + proportional "
+                        "workers when the source exposes camera rates) or "
+                        "equal (naive contiguous split); sources without "
+                        "rate feeds route camera_id %% shards")
     p.add_argument("--placement",
                    choices=("least", "round", "affinity", "model"),
                    default="least",
@@ -226,6 +242,11 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.workers < 1:
         p.error("--workers must be >= 1")
+    if args.shards is not None and args.shards < 1:
+        p.error("--shards must be >= 1")
+    if args.shards is not None and args.workers > 1:
+        p.error("--shards and --workers > 1 both carve the device set; "
+                "pick one (per-shard worker pools: use the sim scheduler)")
     if args.cameras < 1:
         p.error("--cameras must be >= 1")
     if args.source == "file" and not args.frames_path:
@@ -256,7 +277,8 @@ def main(argv=None):
         n_workers=args.workers, placement=args.placement,
         online_latency=args.online_latency,
         source=args.source, ingestion_window=args.ingestion_window,
-        model=args.model, model_map=model_map)
+        model=args.model, model_map=model_map,
+        shards=args.shards, planner=args.planner)
 
     m = n = args.canvas
     if config.quantize and config.multi_model:
@@ -300,8 +322,9 @@ def main(argv=None):
                       detector_lib.forward_tokens(_c, p, t, _r))
         return dict(tokens_fn=tok, embed_kernel=ek, embed_bias=eb,
                     patch=mcfg.patch)
-    if config.n_workers > 1:
-        meshes = make_worker_meshes(config.n_workers)
+    n_slices = config.shards or config.n_workers
+    if n_slices > 1:
+        meshes = make_worker_meshes(n_slices)
     else:
         meshes = [make_serve_mesh()]
     mesh = meshes[0]
@@ -358,7 +381,24 @@ def main(argv=None):
             {name: (s.weight_bytes, s.load_s) for name, s in specs.items()})
 
     t_start = time.time()
-    if config.n_workers > 1:
+    shard_executors = None
+    if config.shards:
+        # one executor per shard over its own mesh slice; the frame
+        # store is shared so any shard's completions can route evidence
+        # for any camera's frames (cameras pin to shards, frames don't
+        # need to)
+        shard_executors = [
+            make_executor(
+                config.executor, serve_fn=serve_fn, params=params,
+                canvas_m=m, canvas_n=n, use_pallas=config.use_pallas,
+                fuse=config.fuse, mesh=meshes[i % len(meshes)],
+                rules=rules, max_inflight=config.max_inflight,
+                models=runtimes(meshes[i % len(meshes)]) if builds else None,
+                **fused_kwargs(cfg, params, rules))
+            for i in range(config.shards)]
+        share_frame_store(shard_executors)
+        executor = shard_executors[0]
+    elif config.n_workers > 1:
         # a multi-worker pool overlaps by construction: each worker is an
         # async executor over its own mesh slice, sharing one frame store
         executor = device_worker_pool(
@@ -389,30 +429,64 @@ def main(argv=None):
                                           weight_caches=caches)
 
     source = build_source(args, frame_sink=executor.add_frame, slos=slos)
-    if config.multi_model:
-        # per-class invokers: each SLO class fires against its model's
-        # own latency table, so t_slack is per-model (Eqn. 8 per tenant)
-        def make_invoker(key):
-            name = config.resolve_model(key) or default_model
-            return SLOAwareInvoker(m, n, model_tables[name],
-                                   max_canvases=config.max_canvases)
 
-        pool = InvokerPool(
-            make_invoker,
-            classify=make_classify(config.classify) or (lambda p: None),
-            model_of=lambda key: config.resolve_model(key) or default_model)
+    def build_pool(fleet: bool = False):
+        if config.multi_model:
+            # per-class invokers: each SLO class fires against its
+            # model's own latency table, so t_slack is per-model
+            # (Eqn. 8 per tenant)
+            def make_invoker(key):
+                name = config.resolve_model(key) or default_model
+                return SLOAwareInvoker(m, n, model_tables[name],
+                                       max_canvases=config.max_canvases)
+
+            pool_cls = FleetInvokerPool if fleet else InvokerPool
+            return pool_cls(
+                make_invoker,
+                classify=make_classify(config.classify) or (lambda p: None),
+                model_of=lambda key: (config.resolve_model(key)
+                                      or default_model))
+        fn = fleet_uniform_pool if fleet else uniform_pool
+        return fn(m, n, table, max_canvases=config.max_canvases,
+                  classify=make_classify(config.classify))
+
+    if config.shards:
+        window = (max(1, config.ingestion_window // config.shards)
+                  if config.ingestion_window else None)
+        shard_engines = [
+            ServingEngine(build_pool(fleet=True), shard_executors[s],
+                          clock=make_clock(config.clock,
+                                           speed=config.wall_speed),
+                          ingestion_window=window)
+            for s in range(config.shards)]
+        if hasattr(source, "camera_rates"):
+            planner = make_planner(
+                config.planner or "cost",
+                cost_model=FleetCostModel(latency=table),
+                worker_budget=config.shards)
+            plan = planner.plan(source.camera_rates(),
+                                n_shards=config.shards)
+        else:
+            plan = FleetPlan(n_shards=config.shards)
+        engine = ShardedEngine(shard_engines, plan.shard_of, plan=plan)
     else:
-        pool = uniform_pool(m, n, table, max_canvases=config.max_canvases,
-                            classify=make_classify(config.classify))
-    engine = ServingEngine(pool, executor,
-                           clock=make_clock(config.clock,
-                                            speed=config.wall_speed),
-                           ingestion_window=config.ingestion_window)
+        engine = ServingEngine(build_pool(), executor,
+                               clock=make_clock(config.clock,
+                                                speed=config.wall_speed),
+                               ingestion_window=config.ingestion_window)
     outcomes = engine.serve(source)
 
     stats = source.stats()
     violated = sum(o.violated for o in outcomes)
-    if config.n_workers > 1:
+    executors = shard_executors if shard_executors else [executor]
+
+    def _total(attr: str) -> int:
+        return sum(getattr(e, attr, 0) for e in executors)
+
+    if config.shards:
+        overlap = (f"{config.shards} shard(s), "
+                   f"{config.planner or 'cost'} planner")
+    elif config.n_workers > 1:
         overlap = (f"{config.n_workers} worker(s), {config.placement} "
                    f"placement, in-flight high water "
                    f"{engine.inflight_high_water}/"
@@ -429,14 +503,20 @@ def main(argv=None):
     if config.quantize:
         overlap += ", int8"
     print(f"served {stats.patches_emitted} patches in "
-          f"{executor.n_invocations} invocations ({overlap}, "
-          f"{config.clock} clock, {executor.n_sharded} data-parallel over "
+          f"{_total('n_invocations')} invocations ({overlap}, "
+          f"{config.clock} clock, {_total('n_sharded')} data-parallel over "
           f"data={axis_sizes.get('data', 1)}), "
-          f"routed {executor.n_detections} detections + "
-          f"{executor.evidence_bytes / 1e6:.2f} MB patch evidence back to "
+          f"routed {_total('n_detections')} detections + "
+          f"{_total('evidence_bytes') / 1e6:.2f} MB patch evidence back to "
           f"frames, {violated} SLO violations "
           f"({len(executor.frames)} frames still held, "
           f"{time.time()-t_start:.1f}s wall)")
+    if config.shards:
+        for row in engine.shard_stats():
+            print(f"  shard {row['shard']}: {row['arrivals']} arrivals, "
+                  f"{row['invocations']} invocations, "
+                  f"{row['violations']} violations, backlog high water "
+                  f"{row['backlog_high_water']}")
     print(f"source {stats.kind}: {stats.frames_total} frames, "
           f"{stats.frames_dropped} dropped, {stats.frames_degraded} "
           f"degraded, backlog high water {engine.backlog_high_water}"

@@ -306,7 +306,8 @@ def mean_consolidation(records: List[ExecutionRecord]) -> float:
     return sum(counted) / len(counted)
 
 
-def split_platform(platform: Platform, n_workers: int) -> List[Platform]:
+def split_platform(platform: Platform, n_workers: int,
+                   weights: Optional[List[float]] = None) -> List[Platform]:
     """Per-worker capacity shards of one platform (the simulation twin of
     splitting the device mesh into worker slices).
 
@@ -314,8 +315,48 @@ def split_platform(platform: Platform, n_workers: int) -> List[Platform]:
     jitter stream, but all shards **share the source platform's cost
     meter** — total cost / busy seconds aggregate exactly as if one
     platform had served everything, so Results accounting is unchanged
-    by the split."""
+    by the split.
+
+    ``weights`` (optional, one per shard) splits the instance and
+    pre-warm budgets *proportionally* instead of evenly — the fleet
+    planner's per-shard worker allocation — still conserving the totals
+    exactly (largest remainder, at least one instance per shard)."""
+    if weights is None:
+        return [Platform(platform.latency,
+                         platform.cfg.per_worker(n_workers, worker=i),
+                         meter=platform.meter)
+                for i in range(n_workers)]
+    if len(weights) != n_workers:
+        raise ValueError(f"{len(weights)} weights for {n_workers} shards")
+    cfg = platform.cfg
+    if cfg.max_instances < n_workers:
+        raise ValueError(
+            f"cannot shard {cfg.max_instances} instances across "
+            f"{n_workers} workers (a worker needs >= 1)")
+
+    def shares(total: int, floor: int) -> List[int]:
+        scale = sum(weights) or 1.0
+        raw = [w / scale * total for w in weights]
+        out = [max(floor, int(r)) for r in raw]
+        while sum(out) > total:
+            i = max(range(n_workers),
+                    key=lambda j: (out[j] - raw[j], out[j]))
+            if out[i] <= floor:
+                break
+            out[i] -= 1
+        order = sorted(range(n_workers), key=lambda j: raw[j] - out[j],
+                       reverse=True)
+        i = 0
+        while sum(out) < total:
+            out[order[i % n_workers]] += 1
+            i += 1
+        return out
+
+    instances = shares(cfg.max_instances, 1)
+    pre_warm = shares(cfg.pre_warm, 0)
     return [Platform(platform.latency,
-                     platform.cfg.per_worker(n_workers, worker=i),
+                     dataclasses.replace(cfg, max_instances=instances[i],
+                                         pre_warm=pre_warm[i],
+                                         seed=cfg.seed + i),
                      meter=platform.meter)
             for i in range(n_workers)]

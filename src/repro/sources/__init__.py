@@ -19,15 +19,18 @@ from repro.sources.base import (MergedSource, Source, SourceStats,
 from repro.sources.camera import (EdgePipeline, LiveSource, RateProfile,
                                   SyntheticCameraSource, synthetic_source)
 from repro.sources.filestream import FileStreamSource
+from repro.sources.fleet import FleetCameraSource, fleet_source
 from repro.sources.trace import TraceSource
 
 register_source("trace", TraceSource)
 register_source("synthetic", synthetic_source)
 register_source("file", FileStreamSource)
+register_source("fleet", fleet_source)
 
 __all__ = [
     "EdgePipeline",
     "FileStreamSource",
+    "FleetCameraSource",
     "LiveSource",
     "MergedSource",
     "RateProfile",

@@ -98,8 +98,20 @@ class MergedSource:
         self.sources = list(sources)
 
     def events(self, engine) -> Iterator[Arrival]:
-        streams = [s.events(engine) for s in self.sources]
-        return heapq.merge(*streams, key=lambda a: a.t_arrive)
+        # Stable merge key (t_arrive, camera, per-stream seq): keying on
+        # t_arrive alone left same-timestamp arrivals from different
+        # cameras ordered by the *constructor's* source order, so two
+        # MergedSources over the same cameras listed differently replayed
+        # different traces.  The composite key pins tie-breaks to camera
+        # id (then intra-stream order), independent of source order —
+        # regression-tested in test_sources.
+        def keyed(stream):
+            for seq, a in enumerate(stream):
+                yield (a.t_arrive, a.patch.camera_id, seq), a
+
+        streams = [keyed(s.events(engine)) for s in self.sources]
+        for _key, a in heapq.merge(*streams, key=lambda ka: ka[0]):
+            yield a
 
     def stats(self) -> SourceStats:
         total = SourceStats(kind=f"merged[{len(self.sources)}]")

@@ -35,8 +35,13 @@ PUBLIC_API = {
         "latency_from_dict", "measure",
     },
     "repro.core.workers": {
-        "WeightCache", "WorkerPoolExecutor", "device_worker_pool",
-        "make_placement", "weight_caches",
+        "ReservedClassPlacement", "WeightCache", "WorkerPoolExecutor",
+        "device_worker_pool", "make_placement", "weight_caches",
+    },
+    "repro.core.fleet": {
+        "EqualSplitPlanner", "FleetCostModel", "FleetInvokerPool",
+        "FleetPlan", "FleetPlanner", "ReservedClassPlacement",
+        "ShardedEngine", "fleet_uniform_pool", "make_planner",
     },
     "repro.core.models": {
         "ModelSpec", "make_model", "model_names", "register_model",
@@ -52,21 +57,23 @@ PUBLIC_API = {
         "patch_bytes", "shape_arrivals",
     },
     "repro.sources": {
-        "EdgePipeline", "FileStreamSource", "LiveSource", "MergedSource",
-        "RateProfile", "Source", "SourceStats", "SyntheticCameraSource",
-        "TraceSource", "make_source", "register_source",
+        "EdgePipeline", "FileStreamSource", "FleetCameraSource",
+        "LiveSource", "MergedSource", "RateProfile", "Source",
+        "SourceStats", "SyntheticCameraSource", "TraceSource",
+        "make_source", "register_source",
     },
 }
 
 #: factory -> names that must stay registered (ServeConfig's named
 #: references and the CLI choices resolve through these)
 REGISTRIES = {
-    "source": ("trace", "synthetic", "file"),
+    "source": ("trace", "synthetic", "file", "fleet"),
     "clock": ("virtual", "wall"),
     "executor": ("sim", "device", "async_device"),
     "placement": ("least", "round", "affinity", "model"),
     "model": ("tangram", "vit_s16", "efficientnet_b7",
               "tangram_int8", "vit_s16_int8"),
+    "planner": ("cost", "equal"),
 }
 
 #: the ServeConfig record itself is serialized into benchmark JSON;
@@ -76,6 +83,7 @@ SERVE_CONFIG_FIELDS = {
     "executor", "use_pallas", "fuse", "quantize", "max_inflight",
     "clock", "wall_speed", "check_invariants", "n_workers", "placement",
     "online_latency", "source", "ingestion_window", "model", "model_map",
+    "shards", "planner",
 }
 
 
@@ -107,6 +115,11 @@ def test_placement_registry():
     from repro.core.workers import make_placement
     for name in REGISTRIES["placement"]:
         assert make_placement(name) is not None
+
+
+def test_planner_registry():
+    from repro.core.fleet import _PLANNERS
+    assert set(REGISTRIES["planner"]) <= set(_PLANNERS)
 
 
 def test_model_registry():

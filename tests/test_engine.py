@@ -306,20 +306,24 @@ def test_pool_timer_tie_first_registered_class_fires_first():
 
 # ------------------------------------------- arrival bookkeeping (leak) ----
 
-def test_arrival_bookkeeping_seq_keyed_and_evicted_on_outcome():
-    """Regression for the `_arrive_at` leak: entries are keyed by a
-    per-arrival sequence number, hold the patch alive (no id() aliasing),
-    and are evicted the moment the patch's outcome is recorded — a
-    long-lived engine stays bounded."""
+def test_arrival_bookkeeping_slot_reused_and_evicted_on_outcome():
+    """Regression for the `_arrive_at` leak: arrival entries live in
+    reused slots that hold the patch alive (no id() aliasing) and are
+    cleared the moment the patch's outcome is recorded — a long-lived
+    engine's slot table stays sized to the peak backlog, not the trace
+    length."""
     eng = sim_engine()
     eng.offer(Arrival(0.0, patch(0.0), 0.0))
-    assert len(eng._arrivals) == 1 and len(eng._seq_of) == 1
+    assert len(eng._slot_of) == 1 and len(eng._slot_patch) == 1
     # the next offer advances past the first patch's completion (~0.97):
-    # its bookkeeping must already be gone when the new entry is added
+    # its bookkeeping must already be gone when the new entry is added,
+    # and the freed slot must be *reused* (table does not grow)
     eng.offer(Arrival(5.0, patch(5.0), 0.0))
-    assert len(eng._arrivals) == 1 and len(eng._seq_of) == 1
+    assert len(eng._slot_of) == 1
+    assert len(eng._slot_patch) == 1, "retired slot was not reused"
     eng.finish()
-    assert eng._arrivals == {} and eng._seq_of == {}
+    assert eng._slot_of == {}
+    assert all(p is None for p in eng._slot_patch)
     assert [o.t_arrive for o in eng.outcomes] == [0.0, 5.0]
 
 
@@ -330,7 +334,8 @@ def test_outcomes_complete_over_long_streaming_run():
         eng.offer(a)
     eng.finish()
     assert len(eng.outcomes) == 40
-    assert eng._arrivals == {} and eng._seq_of == {}
+    assert eng._slot_of == {}
+    assert all(p is None for p in eng._slot_patch)
     arrived = {id(o.patch): o.t_arrive for o in eng.outcomes}
     assert all(arrived[id(p)] == p.t_gen for p in ps)
 

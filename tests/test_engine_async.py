@@ -205,7 +205,8 @@ def test_bounded_inflight_depth_respected_under_burst():
         "burst never overlapped — the async path ran synchronously"
     assert len(eng.completions) == len(eng.invocations) == stub.n_calls
     assert len(eng.outcomes) == len(ps)
-    assert eng._arrivals == {} and eng._seq_of == {}
+    assert eng._slot_of == {}
+    assert all(p is None for p in eng._slot_patch)
 
 
 def test_async_max_inflight_validation():

@@ -1,0 +1,453 @@
+"""Fleet-scale sharding: equivalence, ordering, planner, and wiring.
+
+The load-bearing guarantees:
+
+* ``FleetInvokerPool`` (event-heap timers) is *decision-identical* to
+  the stock scanning ``InvokerPool`` — same fired invocations in the
+  same order, same ``next_timer`` answers — under randomized arrival /
+  poll / flush sequences;
+* a 1-shard ``ShardedEngine`` is event-identical to driving the inner
+  ``ServingEngine`` directly, and an N-shard split whose camera groups
+  respect the batching classes routes every patch to the *same outcome*
+  as the single engine (deterministic executor);
+* cross-shard completion ties deliver in pinned ``(t_finish, shard
+  index, local order)`` order, so N-shard replays are reproducible;
+* the cost planner's layout beats the naive equal split on a
+  heterogeneous (id-correlated) fleet, and plans round-trip through
+  JSON;
+* the ``ServeConfig.shards`` / ``planner`` path through
+  ``TangramScheduler`` produces per-shard rows in
+  ``Results.summary()``.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.config import ServeConfig
+from repro.core.engine import (InvokerPool, ServingEngine, SimExecutor,
+                               uniform_pool)
+from repro.core.fleet import (EqualSplitPlanner, FleetCostModel,
+                              FleetInvokerPool, FleetPlan, FleetPlanner,
+                              ShardedEngine, fleet_uniform_pool,
+                              make_planner)
+from repro.core.latency import LatencyTable, OnlineLatencyTable
+from repro.core.partitioning import Patch
+from repro.core.scheduler import TangramScheduler
+from repro.core.workers import ReservedClassPlacement
+from repro.data.video import Arrival
+from repro.serverless.platform import Platform, PlatformConfig
+from repro.sources import FleetCameraSource, make_source
+
+TABLE = LatencyTable({1: (0.05, 0.0), 2: (0.08, 0.0), 4: (0.12, 0.0),
+                      8: (0.2, 0.0)})
+GROUP = 4
+
+
+def classify(p):
+    return (p.slo, p.camera_id // GROUP)
+
+
+def det_platform(instances=64, seed=0):
+    """Deterministic platform: sigma-0 table, no cold starts, enough
+    pre-warmed instances that capacity never skews a comparison."""
+    return Platform(TABLE, PlatformConfig(
+        max_instances=instances, pre_warm=instances, cold_start_s=0.0,
+        keep_alive_s=1e9, seed=seed))
+
+
+def fleet_arrivals(n_cameras=40, duration_s=3.0, seed=7, **kw):
+    return FleetCameraSource(n_cameras=n_cameras, duration_s=duration_s,
+                             seed=seed, **kw).arrivals()
+
+
+def outcome_key(o):
+    return (o.patch.camera_id, o.patch.frame_id, o.patch.x0, o.patch.y0,
+            round(o.t_arrive, 9), round(o.t_submit, 9),
+            round(o.t_finish, 9))
+
+
+# ------------------------------------------------- pool equivalence ----
+
+
+def _drive_pools(events):
+    """Run the same event script against both pool types; return the
+    (fired, timers) transcripts."""
+    transcripts = []
+    for make in (lambda: uniform_pool(256, 256, TABLE, classify=classify),
+                 lambda: fleet_uniform_pool(256, 256, TABLE,
+                                            classify=classify)):
+        pool = make()
+        fired, timers = [], []
+        for kind, t, patch in events:
+            if kind == "patch":
+                fired.extend(pool.on_patch(t, patch))
+            else:
+                step = pool.poll if kind == "poll" else pool.flush
+                while True:
+                    inv = step(t)
+                    if inv is None:
+                        break
+                    fired.append(inv)
+            timers.append(pool.next_timer())
+        transcripts.append((fired, timers))
+    return transcripts
+
+
+def test_fleet_pool_decision_identical_to_stock_pool():
+    rng = np.random.default_rng(0)
+    events = []
+    t = 0.0
+    for i in range(400):
+        t += float(rng.uniform(0.0, 0.02))
+        roll = rng.uniform()
+        if roll < 0.70:
+            cam = int(rng.integers(0, 24))
+            slo = (0.2, 0.7)[cam % 2]
+            w = int(rng.integers(16, 120))
+            h = int(rng.integers(16, 120))
+            events.append(("patch", t,
+                           Patch(0, 0, w, h, frame_id=i, camera_id=cam,
+                                 t_gen=t, slo=slo)))
+        elif roll < 0.95:
+            events.append(("poll", t, None))
+        else:
+            events.append(("flush", t, None))
+    (stock_fired, stock_timers), (fleet_fired, fleet_timers) = \
+        _drive_pools(events)
+    assert len(stock_fired) == len(fleet_fired) > 0
+    for a, b in zip(stock_fired, fleet_fired):
+        assert (a.t_submit, a.key, a.reason) == (b.t_submit, b.key, b.reason)
+        assert [p.frame_id for p in a.patches] \
+            == [p.frame_id for p in b.patches]
+    assert stock_timers == fleet_timers
+
+
+def test_fleet_pool_tie_prefers_first_registered_class():
+    # two classes with identical timers: the stock pool's dict-order min
+    # fires the first-registered class first — the heap must reproduce it
+    for make in (lambda: uniform_pool(256, 256, TABLE, classify=classify),
+                 lambda: fleet_uniform_pool(256, 256, TABLE,
+                                            classify=classify)):
+        pool = make()
+        p0 = Patch(0, 0, 32, 32, camera_id=0, t_gen=0.0, slo=1.0)
+        p1 = Patch(0, 0, 32, 32, camera_id=GROUP, t_gen=0.0, slo=1.0)
+        assert pool.on_patch(0.0, p0) == []
+        assert pool.on_patch(0.0, p1) == []
+        fired = []
+        while True:
+            inv = pool.poll(10.0)
+            if inv is None:
+                break
+            fired.append(inv)
+        assert [inv.key for inv in fired] == [classify(p0), classify(p1)]
+
+
+# --------------------------------------------- sharded-engine identity ----
+
+
+def build_sharded(arrivals, n_shards, camera_block=GROUP, n_cameras=40,
+                  window=None):
+    """A ShardedEngine whose camera groups respect the batching classes
+    (contiguous blocks of ``camera_block`` cameras stay together)."""
+    groups = [[] for _ in range(n_shards)]
+    for blk in range((n_cameras + camera_block - 1) // camera_block):
+        cams = range(blk * camera_block,
+                     min((blk + 1) * camera_block, n_cameras))
+        groups[blk % n_shards].extend(cams)
+    plan = FleetPlan(n_shards=n_shards,
+                     camera_groups=tuple(tuple(g) for g in groups))
+    engines = [ServingEngine(
+        fleet_uniform_pool(256, 256, TABLE, classify=classify),
+        SimExecutor(det_platform(seed=s)), ingestion_window=window)
+        for s in range(n_shards)]
+    return ShardedEngine(engines, plan.shard_of, plan=plan)
+
+
+def test_one_shard_identical_to_single_engine():
+    arrivals = fleet_arrivals(burst_prob=0.3, burst_factor=4.0)
+    single = ServingEngine(
+        uniform_pool(256, 256, TABLE, classify=classify),
+        SimExecutor(det_platform()))
+    single.run(arrivals)
+    sharded = build_sharded(arrivals, n_shards=1)
+    sharded.run(arrivals)
+    assert len(sharded.outcomes) == len(single.outcomes) == len(arrivals)
+    for a, b in zip(single.outcomes, sharded.outcomes):
+        assert a.patch is b.patch
+        assert (a.t_arrive, a.t_submit, a.t_finish) \
+            == (b.t_arrive, b.t_submit, b.t_finish)
+    assert len(sharded.invocations) == len(single.invocations)
+    assert all(inv.shard == 0 for inv in sharded.invocations)
+
+
+@pytest.mark.parametrize("n_shards", [2, 5])
+def test_n_shards_route_every_patch_to_the_same_outcome(n_shards):
+    # camera groups aligned to the batching classes: each class's queue
+    # sees the same patches in the same order whether it lives in the
+    # single engine or in its shard, and the deterministic executor
+    # makes t_finish a pure function of (t_submit, batch)
+    arrivals = fleet_arrivals()
+    single = ServingEngine(
+        uniform_pool(256, 256, TABLE, classify=classify),
+        SimExecutor(det_platform()))
+    single.run(arrivals)
+    sharded = build_sharded(arrivals, n_shards=n_shards)
+    sharded.run(arrivals)
+    assert sorted(map(outcome_key, sharded.outcomes)) \
+        == sorted(map(outcome_key, single.outcomes))
+    shards_used = {inv.shard for inv in sharded.invocations}
+    assert len(shards_used) > 1, "trace never exercised a second shard"
+
+
+def test_cross_shard_tie_delivery_order_pinned():
+    # two cameras on two shards emit identical-geometry patches at the
+    # same instant: both complete at the same t_finish, and the merged
+    # stream must order shard 0 before shard 1 — every run
+    def trace():
+        out = []
+        for t in (0.0, 0.5):
+            for cam in (0, 1):
+                p = Patch(0, 0, 32, 32, frame_id=int(t * 10),
+                          camera_id=cam, t_gen=t, slo=0.5)
+                out.append(Arrival(t, p, 0.0))
+        return out
+
+    def run_once():
+        plan = FleetPlan(n_shards=2, camera_groups=((0,), (1,)))
+        engines = [ServingEngine(
+            fleet_uniform_pool(256, 256, TABLE, classify=classify),
+            SimExecutor(det_platform(seed=s))) for s in range(2)]
+        sh = ShardedEngine(engines, plan.shard_of, plan=plan)
+        sh.run(trace())
+        return sh.outcomes
+
+    first = run_once()
+    again = run_once()
+    finishes = [o.t_finish for o in first]
+    assert len(first) == 4
+    # ties exist (same geometry, same deterministic table, same submit)
+    assert finishes[0] == finishes[1] and finishes[2] == finishes[3]
+    assert [o.patch.camera_id for o in first] == [0, 1, 0, 1]
+    assert list(map(outcome_key, first)) == list(map(outcome_key, again))
+
+
+def test_sharded_engine_aggregates_and_stats():
+    arrivals = fleet_arrivals()
+    sharded = build_sharded(arrivals, n_shards=3, window=30)
+    sharded.run(arrivals)
+    assert sharded.arrivals_total == len(arrivals)
+    assert sharded.backlog() == 0 and not sharded.overloaded()
+    assert sharded.ingestion_window == 90      # per-shard windows summed
+    rows = sharded.shard_stats()
+    assert [r["shard"] for r in rows] == [0, 1, 2]
+    assert sum(r["arrivals"] for r in rows) == len(arrivals)
+    assert all(r["backlog_high_water"] >= 0 for r in rows)
+    assert sum(r["violations"] for r in rows) \
+        == sum(o.violated for o in sharded.outcomes)
+    json.dumps(rows)                           # benchmark-JSON safe
+
+
+def test_sharded_engine_requires_shards():
+    with pytest.raises(ValueError):
+        ShardedEngine([], lambda cam: 0)
+
+
+# ----------------------------------------------------------- planner ----
+
+
+def skewed_rates(n=64):
+    """Id-correlated heterogeneous fleet: low ids are hot (cameras
+    numbered by site, busiest first)."""
+    return {c: 8.0 / (1.0 + c) for c in range(n)}
+
+
+def test_planner_balances_and_allocates_proportionally():
+    plan = FleetPlanner(FleetCostModel(latency=TABLE),
+                        worker_budget=16).plan(skewed_rates(), n_shards=4)
+    rates = skewed_rates()
+    loads = [sum(rates[c] for c in g) for g in plan.camera_groups]
+    assert max(loads) < 2.0 * min(loads), \
+        "LPT grouping left the fleet imbalanced"
+    assert sum(plan.workers) == 16
+    # equal split piles the hot low-id cameras onto shard 0
+    eq = EqualSplitPlanner(worker_budget=16).plan(skewed_rates(),
+                                                 n_shards=4)
+    eq_loads = [sum(rates[c] for c in g) for g in eq.camera_groups]
+    assert max(eq_loads) > 2.0 * max(loads)
+
+
+def test_planner_beats_equal_split_on_heterogeneous_fleet():
+    src = FleetCameraSource(n_cameras=64, duration_s=4.0, rate_sigma=1.5,
+                            sorted_by_rate=True, seed=5)
+    arrivals = src.arrivals()
+    rates = src.camera_rates()
+    budget, shards = 4, 2
+
+    def run(plan):
+        engines = []
+        for s in range(plan.n_shards):
+            w = max(plan.workers_of(s), 1)
+            engines.append(ServingEngine(
+                fleet_uniform_pool(256, 256, TABLE, classify=classify),
+                SimExecutor(Platform(TABLE, PlatformConfig(
+                    max_instances=w, pre_warm=w, cold_start_s=0.0,
+                    keep_alive_s=1e9, seed=s)))))
+        sh = ShardedEngine(engines, plan.shard_of, plan=plan)
+        sh.run(arrivals)
+        return sum(o.violated for o in sh.outcomes)
+
+    cost = FleetCostModel(latency=TABLE)
+    planned = FleetPlanner(cost, worker_budget=budget).plan(
+        rates, n_shards=shards, camera_block=GROUP)
+    equal = EqualSplitPlanner(cost, worker_budget=budget).plan(
+        rates, n_shards=shards)
+    # id-correlated load at a tight worker budget: the contiguous equal
+    # split piles the hot sites onto shard 0 while the rate-aware LPT
+    # layout spreads them — strictly fewer deadline misses
+    assert run(planned) < run(equal)
+
+
+def test_planner_camera_block_keeps_classes_together():
+    rates = {c: 1.0 + (c % 3) for c in range(32)}
+    plan = FleetPlanner(FleetCostModel(latency=TABLE),
+                        worker_budget=4).plan(rates, n_shards=4,
+                                              camera_block=GROUP)
+    for group in plan.camera_groups:
+        blocks = {c // GROUP for c in group}
+        for b in blocks:
+            members = [c for c in range(b * GROUP, (b + 1) * GROUP)
+                       if c in rates]
+            assert all(c in group for c in members), \
+                "a batching class was split across shards"
+
+
+def test_planner_search_prefers_one_shard_at_trivial_load():
+    rates = {c: 0.5 for c in range(8)}
+    plan = FleetPlanner(FleetCostModel(latency=TABLE),
+                        worker_budget=8).plan(rates)
+    assert plan.n_shards == 1
+
+
+def test_replan_folds_drift_into_the_cost_model():
+    online = OnlineLatencyTable(TABLE)
+    for _ in range(50):
+        online.observe(4, 3.0 * TABLE.mu_sigma(4)[0])
+    planner = FleetPlanner(FleetCostModel(latency=TABLE), worker_budget=8)
+    rates = {c: 30.0 for c in range(64)}
+    refreshed = planner.replan(rates, online, n_shards=4)
+    baseline = planner.plan(rates, n_shards=4)
+    assert refreshed.predicted["drift"] > 1.5
+    assert baseline.predicted["drift"] == 1.0
+    assert refreshed.predicted["shards"][0]["device_util"] \
+        > baseline.predicted["shards"][0]["device_util"]
+
+
+def test_fleet_plan_round_trips_through_json():
+    plan = FleetPlanner(FleetCostModel(latency=TABLE),
+                        worker_budget=8).plan(
+        skewed_rates(16), class_rates={0.5: 3.0, 2.0: 1.0}, n_shards=2)
+    rebuilt = FleetPlan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert rebuilt == plan
+    assert all(rebuilt.shard_of(c) == plan.shard_of(c) for c in range(16))
+    assert rebuilt.shard_of(999) == 999 % plan.n_shards   # modulo fallback
+
+
+def test_make_planner_registry():
+    assert isinstance(make_planner(
+        "cost", cost_model=FleetCostModel(latency=TABLE)), FleetPlanner)
+    assert isinstance(make_planner("equal"), EqualSplitPlanner)
+    with pytest.raises(ValueError, match="unknown planner"):
+        make_planner("nope")
+
+
+def test_reserved_class_placement_partitions_workers():
+    placement = ReservedClassPlacement({"(0.5, 0)": 2})
+
+    class FakePool:
+        n_workers = 4
+        outstanding = [5, 0, 0, 0]
+
+    class FakeInv:
+        key = (0.5, 0)
+
+    # reserved class stays inside its [0, 2) range despite worker 1
+    # being idle outside it
+    assert placement.choose(FakeInv(), FakePool()) == 1
+    FakeInv.key = (2.0, 1)
+    assert placement.choose(FakeInv(), FakePool()) == 2   # first free
+
+
+# --------------------------------------------------- scheduler wiring ----
+
+
+def test_scheduler_sharded_path_reports_per_shard_rows():
+    cfg = ServeConfig(classify="slo", shards=3, planner="cost",
+                      n_workers=6, source="fleet")
+    sched = TangramScheduler(256, 256, TABLE,
+                             Platform(TABLE, PlatformConfig(
+                                 max_instances=24, pre_warm=12)),
+                             config=cfg)
+    src = make_source("fleet", n_cameras=24, duration_s=2.0, seed=2)
+    res = sched.serve_source(src, name="fleet-test")
+    assert res.n_patches == src.stats().arrivals > 0
+    rows = res.summary()["per_shard"]
+    assert [r["shard"] for r in rows] == [0, 1, 2]
+    assert sum(r["arrivals"] for r in rows) == res.n_patches
+    assert sum(r["workers"] for r in rows) == 6
+    json.dumps(res.summary())
+
+
+def test_scheduler_sharded_equal_planner_and_rateless_fallback():
+    cfg = ServeConfig(shards=2, planner="equal", n_workers=2)
+    sched = TangramScheduler(256, 256, TABLE,
+                             Platform(TABLE, PlatformConfig(
+                                 max_instances=8, pre_warm=4)),
+                             config=cfg)
+    res = sched.serve_source(
+        make_source("fleet", n_cameras=6, duration_s=2.0, seed=3))
+    assert res.n_patches > 0 and len(res.summary()["per_shard"]) == 2
+    # a source with no camera_rates() feed falls back to modulo routing
+    streams = [[Patch(0, 0, 32, 32, frame_id=i, camera_id=cam,
+                      t_gen=i * 0.2, slo=1.0) for i in range(6)]
+               for cam in range(4)]
+    res2 = sched.run(streams, bandwidth_bps=50e6)
+    assert res2.n_patches == 24
+    assert len(res2.summary()["per_shard"]) == 2
+
+
+def test_serve_config_validates_fleet_fields():
+    with pytest.raises(ValueError, match="shards"):
+        ServeConfig(shards=0)
+    with pytest.raises(ValueError, match="planner"):
+        ServeConfig(planner="cost")
+    cfg = ServeConfig(shards=4, planner="equal")
+    assert ServeConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+
+
+# ------------------------------------------------------- fleet source ----
+
+
+def test_fleet_source_deterministic_sorted_and_rated():
+    src = FleetCameraSource(n_cameras=12, duration_s=2.0, seed=9)
+    a = src.arrivals()
+    b = FleetCameraSource(n_cameras=12, duration_s=2.0, seed=9).arrivals()
+    assert [(x.t_arrive, x.patch.camera_id, x.patch.frame_id)
+            for x in a] \
+        == [(x.t_arrive, x.patch.camera_id, x.patch.frame_id) for x in b]
+    times = [x.t_arrive for x in a]
+    assert times == sorted(times)
+    rates = src.camera_rates()
+    assert set(rates) == set(range(12))
+    assert math.isclose(sum(rates.values()), src.total_rate())
+    assert math.isclose(sum(src.class_rates().values()), src.total_rate())
+    assert {x.patch.slo for x in a} == {0.5, 2.0}
+
+
+def test_fleet_source_sorted_by_rate_is_id_correlated():
+    src = FleetCameraSource(n_cameras=50, duration_s=1.0, rate_sigma=1.0,
+                            sorted_by_rate=True, seed=1)
+    fps = list(src.fps)
+    assert fps == sorted(fps, reverse=True)

@@ -19,7 +19,7 @@ from repro.core.engine import ServingEngine, SimExecutor, uniform_pool
 from repro.core.latency import LatencyTable
 from repro.core.partitioning import Patch
 from repro.core.scheduler import TangramScheduler
-from repro.data.video import merge_arrivals, shape_arrivals
+from repro.data.video import Arrival, merge_arrivals, shape_arrivals
 from repro.serverless.platform import Platform, PlatformConfig
 from repro.sources import (MergedSource, RateProfile, SourceStats,
                            SyntheticCameraSource, TraceSource, make_source)
@@ -220,6 +220,36 @@ def test_merged_cameras_yield_sorted_arrivals():
 def test_merged_source_requires_members():
     with pytest.raises(ValueError):
         MergedSource([])
+
+
+def test_merge_order_stable_under_timestamp_ties():
+    # two cameras emitting at the *same instants*: the merge key is
+    # (t_arrive, camera_id, seq), so delivery order at a tie is pinned
+    # to camera id — independent of member listing order (regression:
+    # heapq.merge on t_arrive alone broke ties by member position)
+    def stream(cam):
+        out = []
+        for i, t in enumerate((0.0, 0.0, 0.5, 1.0)):
+            patch = Patch(0, 0, 32 + i, 32, frame_id=(cam << 20) | i,
+                          camera_id=cam, t_gen=t, slo=1.0)
+            out.append(Arrival(t, patch, 0.0))
+        return out
+
+    def build(order):
+        members = [TraceSource(arrivals=stream(cam)) for cam in order]
+        return [(a.t_arrive, a.patch.camera_id, a.patch.frame_id)
+                for a in MergedSource(members).events(None)]
+
+    forward = build([0, 1])
+    backward = build([1, 0])
+    assert forward == backward
+    # at each shared timestamp, camera 0 precedes camera 1, and each
+    # camera's own patches stay in seq order
+    ties = [k for k in forward if k[0] == forward[0][0]]
+    assert [c for _, c, _ in ties] == sorted(c for _, c, _ in ties)
+    for cam in (0, 1):
+        fids = [f for _, c, f in forward if c == cam]
+        assert fids == sorted(fids)
 
 
 # -------------------------------------------------------------- file source ----
