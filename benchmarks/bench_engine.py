@@ -534,6 +534,113 @@ def bench_fleet(smoke: bool) -> dict:
     return report
 
 
+class _PacedSimExecutor:
+    """SimExecutor whose submit also *waits* a fixed wall pace.
+
+    The sim platform answers instantly, so a pure-sim fleet measures
+    only router/scheduler Python time — which the GIL serializes no
+    matter how many shard threads run.  Real shard loops spend most of
+    their wall time in GIL-releasing waits (jit/Pallas dispatch, wall
+    clock sleeps); ``time.sleep`` here is the faithful stand-in, so the
+    sequential arm pays ``pace_s`` per invocation end-to-end while the
+    parallel arm overlaps the waits across shard threads.  Engine-time
+    transcripts are untouched (the sleep happens outside virtual time),
+    so both arms must agree event-for-event.
+    """
+
+    def __init__(self, platform, pace_s: float):
+        from repro.core.engine import SimExecutor
+        self._inner = SimExecutor(platform)
+        self.platform = platform
+        self.pace_s = pace_s
+
+    def submit(self, inv):
+        handle = self._inner.submit(inv)
+        time.sleep(self.pace_s)
+        return handle
+
+    def resolve(self, handle):
+        return self._inner.resolve(handle)
+
+
+def _outcome_key(o):
+    p = o.patch
+    return (p.camera_id, p.frame_id, p.x0, p.y0,
+            round(o.t_arrive, 9), round(o.t_submit, 9),
+            round(o.t_finish, 9))
+
+
+def _fleet_paced_engines(plan, table, pace_s):
+    from repro.core.engine import ServingEngine
+    from repro.core.fleet import fleet_uniform_pool
+
+    engines = []
+    for s in range(plan.n_shards):
+        w = max(plan.workers_of(s), 1)
+        engines.append(ServingEngine(
+            fleet_uniform_pool(CANVAS, CANVAS, table,
+                               classify=_fleet_classify),
+            _PacedSimExecutor(_fleet_platform(table, w, seed=s),
+                              pace_s=pace_s)))
+    return engines
+
+
+def bench_fleet_parallel(smoke: bool) -> dict:
+    """Parallel shard threads vs the sequential ShardedEngine.
+
+    Identical fleet, plan, and per-shard engines on both arms; the only
+    difference is whether the shard loops run on one thread or eight.
+    Per-invocation wall pace (see :class:`_PacedSimExecutor`) models
+    the GIL-releasing device dispatch a real deployment overlaps.
+    Reported: arrivals/sec both arms, the speedup, violation-rate
+    equality, and whether the merged outcome transcripts are identical
+    (the determinism acceptance check, here under wall measurement)."""
+    from repro.core.fleet import (FleetCostModel, FleetPlanner,
+                                  ShardedEngine)
+    from repro.core.parallel import ParallelShardedEngine
+    from repro.sources import FleetCameraSource
+
+    table = LatencyTable(FLEET_TABLE)
+    n_cams, dur, pace_s = ((128, 1.0, 0.003) if smoke
+                           else (512, 2.0, 0.002))
+    shards = 8
+    src = FleetCameraSource(n_cameras=n_cams, duration_s=dur,
+                            rate_sigma=1.2, seed=3)
+    arrivals = src.arrivals()
+    plan = FleetPlanner(FleetCostModel(latency=table),
+                        worker_budget=max(2 * shards, 16)).plan(
+        src.camera_rates(), class_rates=src.class_rates(),
+        classes_per_camera=2, n_shards=shards,
+        camera_block=FLEET_GROUP)
+
+    seq = ShardedEngine(_fleet_paced_engines(plan, table, pace_s),
+                        plan.shard_of, plan=plan)
+    t0 = time.perf_counter()
+    seq.run(arrivals)
+    seq_dt = time.perf_counter() - t0
+    seq_row = _fleet_row(seq.outcomes, len(arrivals), seq_dt)
+
+    par = ParallelShardedEngine(_fleet_paced_engines(plan, table, pace_s),
+                                plan.shard_of, plan=plan)
+    t0 = time.perf_counter()
+    par.run(arrivals)
+    par_dt = time.perf_counter() - t0
+    par_row = _fleet_row(par.outcomes, len(arrivals), par_dt)
+
+    return {
+        "cameras": n_cams, "arrivals": len(arrivals), "duration_s": dur,
+        "shards": shards, "pace_s": pace_s,
+        "sequential": seq_row, "parallel": par_row,
+        "speedup": round(par_row["arrivals_per_s"]
+                         / max(seq_row["arrivals_per_s"], 1e-9), 2),
+        "equal_violation_rate": (par_row["violation_rate"]
+                                 == seq_row["violation_rate"]),
+        "transcripts_identical": (
+            [_outcome_key(o) for o in seq.outcomes]
+            == [_outcome_key(o) for o in par.outcomes]),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -542,6 +649,11 @@ def main(argv=None):
                     help="additionally measure fleet-scale sharding "
                          "(ShardedEngine vs single engine, planner vs "
                          "equal split)")
+    ap.add_argument("--parallel", action="store_true",
+                    help="with --fleet: additionally measure the "
+                         "per-shard-thread ParallelShardedEngine against "
+                         "the sequential sharded engine (paced executors "
+                         "model GIL-releasing device dispatch)")
     ap.add_argument("--source", choices=("trace", "synthetic"),
                     default="trace",
                     help="synthetic: additionally measure live-source "
@@ -602,6 +714,16 @@ def main(argv=None):
         print(f"fleet sharding: max speedup "
               f"{fl['max_speedup_at_no_worse_violation']}x at no worse "
               f"violation rate")
+
+    if args.fleet and args.parallel:
+        report["fleet_parallel"] = bench_fleet_parallel(args.smoke)
+        fp = report["fleet_parallel"]
+        print(f"fleet parallel: seq "
+              f"{fp['sequential']['arrivals_per_s']}/s vs parallel "
+              f"{fp['parallel']['arrivals_per_s']}/s at {fp['shards']} "
+              f"shards -> {fp['speedup']}x "
+              f"(equal violation rate: {fp['equal_violation_rate']}, "
+              f"transcripts identical: {fp['transcripts_identical']})")
 
     report["worker_scaling"] = bench_worker_scaling(args.smoke)
     ws = report["worker_scaling"]

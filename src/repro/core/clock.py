@@ -24,8 +24,9 @@ backwards, and ``now()`` never decreases.
 """
 from __future__ import annotations
 
+import threading
 import time
-from typing import Callable, Protocol, runtime_checkable
+from typing import Callable, List, Protocol, runtime_checkable
 from repro.core.registry import lookup
 
 
@@ -95,6 +96,115 @@ class WallClock:
         # advance_to returns — even if sleep undershot by a scheduler tick
         if t > self._floor:
             self._floor = t
+
+    def shard_view(self) -> "WallClock":
+        """A shard-local view of this wall clock for a runner thread.
+
+        Shares the epoch, speed, and time/sleep functions — so every
+        view reads the *same* engine timeline and sleeps against the
+        same wall — but owns a private monotonicity floor.  ``now()``
+        bumps the floor on every read; sharing one floor across shard
+        threads would be a data race and would let a fast shard's reads
+        drag a slow shard's clock forward.  Engine times stamped through
+        different views stay directly comparable.
+        """
+        view = WallClock.__new__(WallClock)
+        view.speed = self.speed
+        view._time_fn = self._time_fn
+        view._sleep_fn = self._sleep_fn
+        view._epoch = self._epoch
+        view._floor = 0.0
+        return view
+
+
+class _BarrierMember:
+    """One shard's handle on a :class:`BarrierVirtualClock`.
+
+    Behaves exactly like a private :class:`VirtualClock` between sync
+    points (``advance_to`` jumps instantly, no sleeping), so a shard
+    engine's transcript is identical to one driven by a plain virtual
+    clock.  ``sync()`` is the rendezvous: the runner thread calls it at
+    end-of-input, blocking until every member arrives, at which point
+    all member times are lifted to the fleet-wide maximum.
+    """
+
+    virtual = True
+
+    def __init__(self, parent: "BarrierVirtualClock", t0: float):
+        self.parent = parent
+        self._t = t0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance_to(self, t: float) -> None:
+        if t > self._t:
+            self._t = t
+
+    def sync(self) -> None:
+        self.parent._sync()
+
+
+class BarrierVirtualClock:
+    """Virtual time for N shard threads with a barrier rendezvous.
+
+    Each shard gets a member clock (:meth:`clock`) it advances privately
+    — discrete-event semantics, no cross-thread coordination on the hot
+    path.  At end-of-input, threaded runners call ``member.sync()``,
+    which blocks until all ``parties`` members arrive and then lifts
+    every member to the maximum member time; the sequential path calls
+    :meth:`align` instead, which performs the same lift without
+    blocking (a single thread at a barrier would deadlock).  Both paths
+    leave every member at the same engine time, which is what makes
+    ``parallel=True`` and sequential transcripts comparable under
+    deterministic virtual time.
+
+    ``timeout_s`` bounds the barrier wait so a deadlocked or crashed
+    shard thread surfaces as a ``RuntimeError`` instead of hanging the
+    fleet (and the test lane) forever.
+    """
+
+    virtual = True
+
+    def __init__(self, parties: int, t0: float = 0.0,
+                 timeout_s: float = 60.0):
+        if parties < 1:
+            raise ValueError(f"parties must be >= 1, got {parties}")
+        self.parties = parties
+        self.timeout_s = timeout_s
+        self.members: List[_BarrierMember] = [
+            _BarrierMember(self, t0) for _ in range(parties)]
+        self._cv = threading.Condition()
+        self._arrived = 0
+        self._generation = 0
+
+    def clock(self, shard: int) -> _BarrierMember:
+        return self.members[shard]
+
+    def align(self) -> None:
+        """Lift every member to the max member time (non-blocking)."""
+        t = max(m._t for m in self.members)
+        for m in self.members:
+            if t > m._t:
+                m._t = t
+
+    def _sync(self) -> None:
+        with self._cv:
+            gen = self._generation
+            self._arrived += 1
+            if self._arrived == self.parties:
+                self.align()
+                self._arrived = 0
+                self._generation += 1
+                self._cv.notify_all()
+                return
+            if not self._cv.wait_for(
+                    lambda: self._generation != gen,
+                    timeout=self.timeout_s):
+                raise RuntimeError(
+                    f"barrier clock timed out after {self.timeout_s}s "
+                    f"({self._arrived}/{self.parties} shards arrived — "
+                    "deadlocked or crashed shard thread?)")
 
 
 _CLOCKS = {

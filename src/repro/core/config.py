@@ -91,6 +91,10 @@ class ServeConfig:
                                      # budget split across shards)
     planner: Optional[str] = None    # cost | equal — shard layout planner
                                      # (None: "cost" when shards is set)
+    parallel: bool = False           # run each shard's engine loop on its
+                                     # own thread (ParallelShardedEngine);
+                                     # False keeps the sequential path
+                                     # bit-identical to PR 9
 
     # --- models (registry names; see repro.core.models) -----------------
     model: Optional[str] = None      # default model for every class (None:
@@ -123,6 +127,8 @@ class ServeConfig:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
         if self.planner is not None and self.shards is None:
             raise ValueError("planner requires shards to be set")
+        if self.parallel and self.shards is None:
+            raise ValueError("parallel requires shards to be set")
 
     def replace(self, **changes) -> "ServeConfig":
         return dataclasses.replace(self, **changes)

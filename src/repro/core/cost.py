@@ -8,6 +8,7 @@ optimizes an identical quantity on either substrate.
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 # unit prices from Section III-B
 P_C = 2.138e-5        # $ / vCPU-second
@@ -41,7 +42,15 @@ class TPUCostModel:
 
 @dataclasses.dataclass
 class CostMeter:
-    """Accumulates per-invocation costs (Fig. 8 / Fig. 12 accounting)."""
+    """Accumulates per-invocation costs (Fig. 8 / Fig. 12 accounting).
+
+    `split_platform` hands one meter to every shard's platform so fleet
+    billing aggregates exactly; under the parallel fleet runtime those
+    shards charge from concurrent threads, so the read-modify-write
+    accumulation happens under a lock.  (The lock is uncontended in the
+    sequential path and invisible to the dataclass API — `total`,
+    `invocations` and `busy_seconds` stay plain readable fields.)
+    """
 
     n_vcpu: float = 2.0
     mem_gb: float = 4.0
@@ -50,9 +59,13 @@ class CostMeter:
     invocations: int = 0
     busy_seconds: float = 0.0
 
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
     def charge(self, t_f: float) -> float:
         c = alibaba_cost(t_f, self.n_vcpu, self.mem_gb, self.gpu_mem_gb)
-        self.total += c
-        self.invocations += 1
-        self.busy_seconds += t_f
+        with self._lock:
+            self.total += c
+            self.invocations += 1
+            self.busy_seconds += t_f
         return c

@@ -91,6 +91,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.clock import Clock, VirtualClock
+from repro.core.framestore import FrameStore
 from repro.core.invoker import Invocation, SLOAwareInvoker
 from repro.core.partitioning import Patch
 from repro.core.stitching import validate
@@ -544,8 +545,7 @@ class DeviceExecutor:
         self.embed_bias = embed_bias
         self.patch = patch
         self._runtimes: Dict[Optional[str], ModelRuntime] = {}
-        self.frames: Dict[object, np.ndarray] = {}
-        self._refs: Dict[object, int] = {}
+        self.store = FrameStore()
         self.n_invocations = 0
         self.n_fused = 0
         self.n_detections = 0
@@ -574,6 +574,10 @@ class DeviceExecutor:
         return rt
 
     # ------------------------------------------------------- frame store ----
+    # The store itself is the striped-lock FrameStore (concurrency-safe:
+    # shard threads of the parallel fleet runtime share it); ``frames`` /
+    # ``_refs`` stay available as point-in-time dict views so tests and
+    # diagnostics that predate the store keep reading the same shapes.
 
     def add_frame(self, frame_id, pixels: np.ndarray, n_patches: int):
         """Register a frame the edge cut ``n_patches`` patches from.
@@ -581,22 +585,21 @@ class DeviceExecutor:
         Frames that produced no patches are never referenced again and
         are not stored at all.
         """
-        if n_patches <= 0:
-            return
-        self.frames[frame_id] = pixels
-        self._refs[frame_id] = self._refs.get(frame_id, 0) + n_patches
+        self.store.add(frame_id, pixels, n_patches)
 
     def on_complete(self, comp: Completion):
         """Completion event: release every routed patch's frame ref."""
+        release = self.store.release
         for p in comp.invocation.patches:
-            left = self._refs.get(p.frame_id)
-            if left is None:
-                continue
-            if left <= 1:
-                del self._refs[p.frame_id]
-                self.frames.pop(p.frame_id, None)
-            else:
-                self._refs[p.frame_id] = left - 1
+            release(p.frame_id)
+
+    @property
+    def frames(self) -> Dict[object, np.ndarray]:
+        return self.store.snapshot()
+
+    @property
+    def _refs(self) -> Dict[object, int]:
+        return self.store.refs_snapshot()
 
     # --------------------------------------------------------- execution ----
 
@@ -614,8 +617,9 @@ class DeviceExecutor:
         rt = self._runtime(inv.model)
         plan = inv.batch_plan()
         crops = []
+        store = self.store
         for patch in inv.patches:
-            frame = self.frames.get(patch.frame_id)
+            frame = store.get(patch.frame_id)
             if frame is None:
                 crops.append(np.zeros((patch.h, patch.w, 3), np.float32))
             else:

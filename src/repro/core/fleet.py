@@ -88,6 +88,8 @@ class FleetInvokerPool(InvokerPool):
         self._heap: List[Tuple[float, int, int, object]] = []
         self._version: Dict[object, int] = {}
         self._reg: Dict[object, int] = {}
+        self._in_heap: Dict[object, bool] = {}
+        self._stale = 0
 
     def _invoker(self, key: object) -> SLOAwareInvoker:
         inv = self.invokers.get(key)
@@ -99,17 +101,25 @@ class FleetInvokerPool(InvokerPool):
 
     def _reindex(self, key: object) -> None:
         """Refresh ``key``'s heap entry after a mutation."""
+        if self._in_heap.get(key):
+            self._stale += 1        # the old live entry just went stale
         version = self._version[key] + 1
         self._version[key] = version
         t = self.invokers[key].next_timer()
         if t != math.inf:
             heapq.heappush(self._heap, (t, self._reg[key], version, key))
-        elif len(self._heap) > 4 * len(self.invokers) + 64:
-            # compact: drop accumulated stale entries so a long run's
-            # heap stays proportional to the live class count
+            self._in_heap[key] = True
+        else:
+            self._in_heap[key] = False
+        if self._stale > 2 * len(self.invokers) + 16:
+            # compact: the exact stale count says dead entries exceed
+            # 2x the live classes, so rebuild — a churn-heavy class set
+            # (cameras cycling between timered and idle) would otherwise
+            # grow the heap without bound between pops
             self._heap = [e for e in self._heap
                           if self._version.get(e[3]) == e[2]]
             heapq.heapify(self._heap)
+            self._stale = 0
 
     def on_patch(self, t_now: float, patch: Patch) -> List[Invocation]:
         key = self.classify(patch)
@@ -124,6 +134,7 @@ class FleetInvokerPool(InvokerPool):
             if self._version.get(key) == version:
                 return t
             heapq.heappop(heap)
+            self._stale -= 1
         return math.inf
 
     def poll(self, t_now: float) -> Optional[Invocation]:
@@ -132,10 +143,12 @@ class FleetInvokerPool(InvokerPool):
             t, _, version, key = heap[0]
             if self._version.get(key) != version:
                 heapq.heappop(heap)
+                self._stale -= 1
                 continue
             if t > t_now:
                 return None
             heapq.heappop(heap)
+            self._in_heap[key] = False
             fired = self.invokers[key].poll(t_now)
             self._reindex(key)
             if fired is not None:
@@ -610,6 +623,18 @@ class ShardedEngine:
         return self.outcomes
 
     def finish(self, t_end: Optional[float] = None):
+        # Barrier-clock members (parallel-runtime equivalence tests):
+        # lift every shard to the fleet-wide max time before finishing,
+        # the non-blocking twin of the threaded runners' end-of-input
+        # ``sync()`` — so both paths flush trailing partial canvases at
+        # the same engine time.
+        aligned = []
+        for eng in self.shards:
+            parent = getattr(eng.clock, "parent", None)
+            if parent is not None and hasattr(parent, "align") \
+                    and all(parent is not p for p in aligned):
+                parent.align()
+                aligned.append(parent)
         for s, eng in enumerate(self.shards):
             eng.finish(t_end)
             for inv in eng.invocations:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Callable, Dict, Optional, Tuple
 
@@ -166,6 +167,11 @@ class OnlineLatencyTable:
         self._worker_ratio: Dict[object, float] = {}
         self.n_observations = 0
         self.n_rejected = 0
+        # Shard threads of the parallel fleet runtime fold observations
+        # and serve estimates concurrently; the EWMA recurrences are
+        # read-modify-write, so both sides take this lock.  RLock keeps
+        # mu_sigma -> seed fallbacks reentrant-safe.
+        self._lock = threading.RLock()
 
     @property
     def slack_sigmas(self) -> float:
@@ -182,9 +188,10 @@ class OnlineLatencyTable:
 
         ``worker=None`` aggregates every worker; a worker with no
         observations reports the aggregate drift."""
-        if worker is not None and worker in self._worker_ratio:
-            return self._clamped(self._worker_ratio[worker])
-        return self._clamped(self._ratio)
+        with self._lock:
+            if worker is not None and worker in self._worker_ratio:
+                return self._clamped(self._worker_ratio[worker])
+            return self._clamped(self._ratio)
 
     def observe(self, batch: int, elapsed: float,
                 worker: Optional[object] = None,
@@ -203,48 +210,52 @@ class OnlineLatencyTable:
         try:
             elapsed = float(elapsed)
         except (TypeError, ValueError):
-            self.n_rejected += 1
+            with self._lock:
+                self.n_rejected += 1
             return False
         if batch < 1 or not math.isfinite(elapsed) or elapsed <= 0.0:
-            self.n_rejected += 1
+            with self._lock:
+                self.n_rejected += 1
             return False
-        self.n_observations += 1
-        a = self.alpha
-        lo, hi = self.ratio_bounds
-        seed_mu = max(self.seed.mu_sigma(batch)[0], self._TINY)
-        elapsed = min(max(elapsed, lo * seed_mu), hi * seed_mu)
-        if batch not in self._mu:
-            self._mu[batch] = elapsed
-            self._var[batch] = 0.0
-            self._count[batch] = 1
-        else:
-            delta = elapsed - self._mu[batch]
-            self._mu[batch] += a * delta
-            # EWMA variance (West): decay old spread, add the new
-            # deviation's contribution
-            self._var[batch] = (1.0 - a) * (self._var[batch]
-                                            + a * delta * delta)
-            self._count[batch] += 1
-        r = elapsed / seed_mu                 # in [lo, hi] by construction
-        self._ratio = r if self._ratio is None else (
-            self._ratio + a * (r - self._ratio))
-        if worker is not None:
-            prev = self._worker_ratio.get(worker)
-            self._worker_ratio[worker] = r if prev is None else (
-                prev + a * (r - prev))
+        with self._lock:
+            self.n_observations += 1
+            a = self.alpha
+            lo, hi = self.ratio_bounds
+            seed_mu = max(self.seed.mu_sigma(batch)[0], self._TINY)
+            elapsed = min(max(elapsed, lo * seed_mu), hi * seed_mu)
+            if batch not in self._mu:
+                self._mu[batch] = elapsed
+                self._var[batch] = 0.0
+                self._count[batch] = 1
+            else:
+                delta = elapsed - self._mu[batch]
+                self._mu[batch] += a * delta
+                # EWMA variance (West): decay old spread, add the new
+                # deviation's contribution
+                self._var[batch] = (1.0 - a) * (self._var[batch]
+                                                + a * delta * delta)
+                self._count[batch] += 1
+            r = elapsed / seed_mu             # in [lo, hi] by construction
+            self._ratio = r if self._ratio is None else (
+                self._ratio + a * (r - self._ratio))
+            if worker is not None:
+                prev = self._worker_ratio.get(worker)
+                self._worker_ratio[worker] = r if prev is None else (
+                    prev + a * (r - prev))
         return True
 
     def mu_sigma(self, batch: int) -> Tuple[float, float]:
-        if self.n_observations == 0:
-            return self.seed.mu_sigma(batch)      # exactly the seed
-        r = self._clamped(self._ratio)
-        seed_mu, seed_sigma = self.seed.mu_sigma(batch)
-        if batch in self._mu:
-            mu = max(self._mu[batch], self._TINY)
-            sigma = max(math.sqrt(max(self._var[batch], 0.0)),
-                        seed_sigma * r, 0.0)
-            return mu, sigma
-        return max(seed_mu * r, self._TINY), max(seed_sigma * r, 0.0)
+        with self._lock:
+            if self.n_observations == 0:
+                return self.seed.mu_sigma(batch)  # exactly the seed
+            r = self._clamped(self._ratio)
+            seed_mu, seed_sigma = self.seed.mu_sigma(batch)
+            if batch in self._mu:
+                mu = max(self._mu[batch], self._TINY)
+                sigma = max(math.sqrt(max(self._var[batch], 0.0)),
+                            seed_sigma * r, 0.0)
+                return mu, sigma
+            return max(seed_mu * r, self._TINY), max(seed_sigma * r, 0.0)
 
     def t_slack(self, batch: int) -> float:
         if batch <= 0:

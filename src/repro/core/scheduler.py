@@ -50,6 +50,7 @@ from repro.core.fleet import (FleetCostModel, FleetInvokerPool, FleetPlan,
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import LatencyBank, LatencyTable, OnlineLatencyTable
 from repro.core.models import make_model
+from repro.core.parallel import ParallelShardedEngine
 from repro.core.partitioning import Patch
 from repro.core.registry import unknown_name
 from repro.core.workers import (ReservedClassPlacement, WorkerPoolExecutor,
@@ -208,6 +209,22 @@ class TangramScheduler:
             return None
         return make_clock(self.config.clock, speed=self.config.wall_speed)
 
+    def _shard_clocks(self, n: int) -> list:
+        """One clock per shard.  Sequential: n independent `_clock()`
+        instances (unchanged).  Parallel: "virtual" stays None (each
+        engine builds a private VirtualClock — shard threads never share
+        virtual time), and a wall clock fans out into per-thread
+        :meth:`~repro.core.clock.WallClock.shard_view`\\ s so every
+        shard reads the same epoch through a thread-private floor."""
+        if not self.config.parallel:
+            return [self._clock() for _ in range(n)]
+        base = self._clock()
+        if base is None:
+            return [None] * n
+        if hasattr(base, "shard_view"):
+            return [base.shard_view() for _ in range(n)]
+        return [base] + [self._clock() for _ in range(n - 1)]  # legacy override
+
     def _sim_executor(self, platform: Platform) -> SimExecutor:
         """A SimExecutor over ``platform``, multi-model aware: each
         model's submissions carry its weight-load cost and sample from
@@ -286,6 +303,7 @@ class TangramScheduler:
                   if config.ingestion_window else None)
         engines = []
         platforms = []
+        clocks = self._shard_clocks(s_count)
         for s in range(s_count):
             w = plan.workers_of(s)
             plat = shard_platforms[s]
@@ -304,10 +322,12 @@ class TangramScheduler:
                 platforms.append(plat)
             engines.append(ServingEngine(
                 self._make_pool(fleet=True), executor,
-                clock=self._clock(),
+                clock=clocks[s],
                 check_invariants=self.check_invariants,
                 ingestion_window=window))
-        sharded = ShardedEngine(engines, plan.shard_of, plan=plan)
+        engine_cls = (ParallelShardedEngine if config.parallel
+                      else ShardedEngine)
+        sharded = engine_cls(engines, plan.shard_of, plan=plan)
         outcomes = sharded.serve(source)
 
         stats = source.stats()

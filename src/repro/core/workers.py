@@ -530,14 +530,23 @@ def share_frame_store(executors: Sequence[object]) -> None:
     Patches cut from one frame may be routed by different workers; with
     per-worker stores each worker's refcount would never drain (worker A
     cannot see the decrements worker B's completions perform).  Sharing
-    the dicts keeps `DeviceExecutor.on_complete`'s eviction exact: the
-    frame disappears when the *pool-wide* last patch is routed."""
+    the store keeps `DeviceExecutor.on_complete`'s eviction exact: the
+    frame disappears when the *pool-wide* last patch is routed.  The
+    store is the striped-lock :class:`~repro.core.framestore.FrameStore`,
+    so the sharing is also safe across the parallel fleet runtime's
+    shard threads; duck-typed executors that predate the store (bare
+    ``frames`` / ``_refs`` dicts) still get the historical dict
+    aliasing."""
     if not executors:
         return
     head = executors[0]
+    store = getattr(head, "store", None)
     for ex in executors[1:]:
-        ex.frames = head.frames
-        ex._refs = head._refs
+        if store is not None and hasattr(ex, "store"):
+            ex.store = store
+        else:
+            ex.frames = head.frames
+            ex._refs = head._refs
 
 
 def device_worker_pool(n_workers: int, make_executor: Callable[[int], object],

@@ -83,6 +83,7 @@ from repro.core.engine import shard_canvases  # noqa: F401  (public re-export)
 from repro.core.invoker import SLOAwareInvoker
 from repro.core.latency import LatencyBank, OnlineLatencyTable, measure
 from repro.core.models import make_model
+from repro.core.parallel import ParallelShardedEngine
 from repro.core.fleet import (FleetInvokerPool, FleetPlan, FleetCostModel,
                               ShardedEngine, fleet_uniform_pool,
                               make_planner)
@@ -216,6 +217,11 @@ def main(argv=None):
                         "workers when the source exposes camera rates) or "
                         "equal (naive contiguous split); sources without "
                         "rate feeds route camera_id %% shards")
+    p.add_argument("--parallel", action="store_true",
+                   help="run each shard's engine loop on its own thread "
+                        "(ParallelShardedEngine) with a bounded arrival "
+                        "queue per shard; requires --shards; without it "
+                        "the sequential sharded path is unchanged")
     p.add_argument("--placement",
                    choices=("least", "round", "affinity", "model"),
                    default="least",
@@ -247,6 +253,8 @@ def main(argv=None):
     if args.shards is not None and args.workers > 1:
         p.error("--shards and --workers > 1 both carve the device set; "
                 "pick one (per-shard worker pools: use the sim scheduler)")
+    if args.parallel and args.shards is None:
+        p.error("--parallel requires --shards")
     if args.cameras < 1:
         p.error("--cameras must be >= 1")
     if args.source == "file" and not args.frames_path:
@@ -278,7 +286,7 @@ def main(argv=None):
         online_latency=args.online_latency,
         source=args.source, ingestion_window=args.ingestion_window,
         model=args.model, model_map=model_map,
-        shards=args.shards, planner=args.planner)
+        shards=args.shards, planner=args.planner, parallel=args.parallel)
 
     m = n = args.canvas
     if config.quantize and config.multi_model:
@@ -453,10 +461,18 @@ def main(argv=None):
     if config.shards:
         window = (max(1, config.ingestion_window // config.shards)
                   if config.ingestion_window else None)
+        if config.parallel and config.clock == "wall":
+            # one wall timeline, one thread-private monotone view each
+            parent_clock = make_clock("wall", speed=config.wall_speed)
+            shard_clocks = [parent_clock.shard_view()
+                            for _ in range(config.shards)]
+        else:
+            shard_clocks = [make_clock(config.clock,
+                                       speed=config.wall_speed)
+                            for _ in range(config.shards)]
         shard_engines = [
             ServingEngine(build_pool(fleet=True), shard_executors[s],
-                          clock=make_clock(config.clock,
-                                           speed=config.wall_speed),
+                          clock=shard_clocks[s],
                           ingestion_window=window)
             for s in range(config.shards)]
         if hasattr(source, "camera_rates"):
@@ -468,7 +484,9 @@ def main(argv=None):
                                 n_shards=config.shards)
         else:
             plan = FleetPlan(n_shards=config.shards)
-        engine = ShardedEngine(shard_engines, plan.shard_of, plan=plan)
+        engine_cls = (ParallelShardedEngine if config.parallel
+                      else ShardedEngine)
+        engine = engine_cls(shard_engines, plan.shard_of, plan=plan)
     else:
         engine = ServingEngine(build_pool(), executor,
                                clock=make_clock(config.clock,
@@ -485,7 +503,8 @@ def main(argv=None):
 
     if config.shards:
         overlap = (f"{config.shards} shard(s), "
-                   f"{config.planner or 'cost'} planner")
+                   f"{config.planner or 'cost'} planner"
+                   + (", parallel" if config.parallel else ""))
     elif config.n_workers > 1:
         overlap = (f"{config.n_workers} worker(s), {config.placement} "
                    f"placement, in-flight high water "

@@ -13,8 +13,38 @@ except ModuleNotFoundError:
     # environments without hypothesis (see tests/_vendor/hypothesis)
     sys.path.append(os.path.join(os.path.dirname(__file__), "_vendor"))
 
+import signal
+import threading
+
 import numpy as np
 import pytest
+
+# Per-test deadline (seconds).  The parallel fleet runtime joins shard
+# threads at finish(); a deadlocked shard would otherwise hang the whole
+# lane silently.  SIGALRM turns a hang into a loud TimeoutError with a
+# traceback pointing at the stuck join/barrier.  pytest-timeout is not a
+# repo dependency — this is the conftest-alarm variant.
+TEST_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "300"))
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    if (TEST_TIMEOUT_S <= 0 or not hasattr(signal, "SIGALRM")
+            or threading.current_thread() is not threading.main_thread()):
+        return (yield)
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"test exceeded {TEST_TIMEOUT_S}s "
+            "(deadlocked shard thread?)")
+
+    old_handler = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(TEST_TIMEOUT_S)
+    try:
+        return (yield)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
 
 # Modules excluded from the CI fast lane.  The former tracked-red modules
 # (arch smoke, sharding API, multi-device dry-run, elastic re-mesh) went

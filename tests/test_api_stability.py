@@ -28,7 +28,14 @@ PUBLIC_API = {
         "ServeConfig", "make_classify", "register_classify",
     },
     "repro.core.clock": {
-        "Clock", "VirtualClock", "WallClock", "make_clock",
+        "BarrierVirtualClock", "Clock", "VirtualClock", "WallClock",
+        "make_clock",
+    },
+    "repro.core.parallel": {
+        "ParallelShardedEngine", "ShardRunner",
+    },
+    "repro.core.framestore": {
+        "FrameStore",
     },
     "repro.core.latency": {
         "LatencyBank", "LatencyTable", "OnlineLatencyTable",
@@ -83,7 +90,7 @@ SERVE_CONFIG_FIELDS = {
     "executor", "use_pallas", "fuse", "quantize", "max_inflight",
     "clock", "wall_speed", "check_invariants", "n_workers", "placement",
     "online_latency", "source", "ingestion_window", "model", "model_map",
-    "shards", "planner",
+    "shards", "planner", "parallel",
 }
 
 

@@ -124,6 +124,47 @@ def test_fleet_pool_decision_identical_to_stock_pool():
     assert stock_timers == fleet_timers
 
 
+def test_fleet_pool_heap_compacts_under_churn():
+    # churn regression: every arrival to a class with a live timer
+    # stales its old heap entry, so a long run on a small class set used
+    # to grow the heap without bound (the old compaction only ran when a
+    # class's timer went to inf).  The stale-entry counter now compacts
+    # once dead entries exceed 2x the live classes — the heap stays
+    # O(classes) — and the decisions stay identical to the stock pool.
+    stock = uniform_pool(256, 256, TABLE, classify=classify)
+    fleet = fleet_uniform_pool(256, 256, TABLE, classify=classify)
+    n_classes, t, max_heap = 6, 0.0, 0
+    stock_fired, fleet_fired = [], []
+    for i in range(3000):
+        t += 0.001
+        # long SLO: the class always holds a live timer, so every
+        # arrival stales an entry and the old code never compacted
+        p = Patch(0, 0, 32, 32, frame_id=i,
+                  camera_id=(i % n_classes) * GROUP, t_gen=t, slo=5.0)
+        stock_fired.extend(stock.on_patch(t, p))
+        fleet_fired.extend(fleet.on_patch(t, p))
+        assert stock.next_timer() == fleet.next_timer()
+        max_heap = max(max_heap, len(fleet._heap))
+    live = len(fleet.invokers)
+    assert live == n_classes
+    assert max_heap <= 3 * live + 32, \
+        f"heap peaked at {max_heap} entries for {live} live classes"
+    # drain both pools once the timers come due: identical decisions
+    for pool, fired in ((stock, stock_fired), (fleet, fleet_fired)):
+        for step in (pool.poll, pool.flush):
+            while True:
+                inv = step(10.0)
+                if inv is None:
+                    break
+                fired.append(inv)
+    assert len(stock_fired) == len(fleet_fired) > 0
+    for a, b in zip(stock_fired, fleet_fired):
+        assert (a.t_submit, a.key) == (b.t_submit, b.key)
+        assert [p.frame_id for p in a.patches] \
+            == [p.frame_id for p in b.patches]
+    assert len(fleet._heap) <= 3 * live + 32
+
+
 def test_fleet_pool_tie_prefers_first_registered_class():
     # two classes with identical timers: the stock pool's dict-order min
     # fires the first-registered class first — the heap must reproduce it

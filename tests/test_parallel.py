@@ -1,0 +1,365 @@
+"""Parallel fleet runtime: per-shard threads, concurrency-safe core.
+
+The load-bearing guarantees:
+
+* ``ParallelShardedEngine`` (one ``ShardRunner`` thread per shard) is
+  *transcript-identical* to the sequential ``ShardedEngine`` on
+  randomized fleets — routed outcomes, violation counts, and per-shard
+  summary rows all match, including under the barrier-synced virtual
+  clock (the deterministic test mode the acceptance criteria pin);
+* the sequential path (``parallel=False``) is untouched — the parallel
+  class only ever *adds* threads on top of the same routing/merge;
+* the shared state the shard threads touch concurrently stays exact:
+  ``CostMeter`` billing aggregates to the cent, the striped-lock
+  ``FrameStore`` drains to empty under concurrent release, and
+  ``OnlineLatencyTable`` folds keep their invariants under concurrent
+  observers;
+* a shard thread that dies mid-run re-raises at ``finish()`` instead of
+  hanging the fleet.
+"""
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.clock import BarrierVirtualClock, WallClock
+from repro.core.config import ServeConfig
+from repro.core.cost import CostMeter, alibaba_cost
+from repro.core.engine import ServingEngine, SimExecutor
+from repro.core.fleet import FleetPlan, ShardedEngine, fleet_uniform_pool
+from repro.core.framestore import FrameStore
+from repro.core.latency import LatencyTable, OnlineLatencyTable
+from repro.core.parallel import ParallelShardedEngine, ShardRunner
+from repro.core.scheduler import TangramScheduler
+from repro.serverless.platform import Platform, PlatformConfig
+from repro.sources import FleetCameraSource, make_source
+
+TABLE = LatencyTable({1: (0.05, 0.0), 2: (0.08, 0.0), 4: (0.12, 0.0),
+                      8: (0.2, 0.0)})
+GROUP = 4
+
+
+def classify(p):
+    return (p.slo, p.camera_id // GROUP)
+
+
+def det_platform(instances=64, seed=0):
+    return Platform(TABLE, PlatformConfig(
+        max_instances=instances, pre_warm=instances, cold_start_s=0.0,
+        keep_alive_s=1e9, seed=seed))
+
+
+def fleet_arrivals(n_cameras=40, duration_s=3.0, seed=7, **kw):
+    return FleetCameraSource(n_cameras=n_cameras, duration_s=duration_s,
+                             seed=seed, **kw).arrivals()
+
+
+def outcome_key(o):
+    return (o.patch.camera_id, o.patch.frame_id, o.patch.x0, o.patch.y0,
+            round(o.t_arrive, 9), round(o.t_submit, 9),
+            round(o.t_finish, 9))
+
+
+def build_fleet(n_shards, cls=ShardedEngine, n_cameras=40,
+                camera_block=GROUP, clocks=None, queue_depth=64):
+    """Identically-constructed fleet for either engine class: camera
+    groups aligned to the batching classes, per-shard deterministic
+    platforms seeded by shard index."""
+    groups = [[] for _ in range(n_shards)]
+    for blk in range((n_cameras + camera_block - 1) // camera_block):
+        cams = range(blk * camera_block,
+                     min((blk + 1) * camera_block, n_cameras))
+        groups[blk % n_shards].extend(cams)
+    plan = FleetPlan(n_shards=n_shards,
+                     camera_groups=tuple(tuple(g) for g in groups))
+    engines = [ServingEngine(
+        fleet_uniform_pool(256, 256, TABLE, classify=classify),
+        SimExecutor(det_platform(seed=s)),
+        clock=clocks[s] if clocks else None)
+        for s in range(n_shards)]
+    if cls is ParallelShardedEngine:
+        return cls(engines, plan.shard_of, plan=plan,
+                   queue_depth=queue_depth)
+    return cls(engines, plan.shard_of, plan=plan)
+
+
+def stats_rows(engine):
+    """shard_stats minus the wall-measured utilization column."""
+    return [{k: v for k, v in row.items() if k != "utilization"}
+            for row in engine.shard_stats()]
+
+
+# ------------------------------------------- transcript equivalence ----
+
+
+@pytest.mark.parametrize("seed,n_shards", [(7, 4), (11, 4), (3, 8)])
+def test_parallel_transcript_identical_to_sequential(seed, n_shards):
+    arrivals = fleet_arrivals(seed=seed, burst_prob=0.3, burst_factor=4.0)
+    seq = build_fleet(n_shards)
+    seq.run(arrivals)
+    par = build_fleet(n_shards, cls=ParallelShardedEngine)
+    par.run(arrivals)
+    assert list(map(outcome_key, par.outcomes)) \
+        == list(map(outcome_key, seq.outcomes))
+    assert sum(o.violated for o in par.outcomes) \
+        == sum(o.violated for o in seq.outcomes)
+    assert stats_rows(par) == stats_rows(seq)
+    assert {inv.shard for inv in par.invocations} \
+        == {inv.shard for inv in seq.invocations}
+
+
+def test_parallel_transcript_identical_under_barrier_clock():
+    # the acceptance-criteria configuration: both arms drive
+    # barrier-synced virtual members; the threaded arm rendezvouses in
+    # the runners' sync(), the sequential arm through finish()'s align()
+    n_shards = 4
+    arrivals = fleet_arrivals(seed=13)
+    seq = build_fleet(n_shards,
+                      clocks=BarrierVirtualClock(n_shards).members)
+    seq.run(arrivals)
+    par_bar = BarrierVirtualClock(n_shards, timeout_s=30.0)
+    par = build_fleet(n_shards, cls=ParallelShardedEngine,
+                      clocks=par_bar.members)
+    par.run(arrivals)
+    assert list(map(outcome_key, par.outcomes)) \
+        == list(map(outcome_key, seq.outcomes))
+    assert stats_rows(par) == stats_rows(seq)
+    # the post-barrier drain is deterministic: each shard ends at the
+    # same engine time on both arms (the final drain past the barrier
+    # advances each member independently)
+    seq_times = [eng.clock.now() for eng in seq.shards]
+    par_times = [eng.clock.now() for eng in par.shards]
+    assert seq_times == par_times
+
+
+def test_parallel_small_queue_depth_backpressures_not_deadlocks():
+    arrivals = fleet_arrivals(n_cameras=16, duration_s=2.0)
+    seq = build_fleet(2, n_cameras=16)
+    seq.run(arrivals)
+    par = build_fleet(2, cls=ParallelShardedEngine, n_cameras=16,
+                      queue_depth=1)
+    par.run(arrivals)
+    assert list(map(outcome_key, par.outcomes)) \
+        == list(map(outcome_key, seq.outcomes))
+
+
+def test_parallel_offer_path_and_empty_finish():
+    arrivals = fleet_arrivals(n_cameras=8, duration_s=1.0)
+    seq = build_fleet(2, n_cameras=8)
+    for a in arrivals:
+        seq.offer(a)
+    seq.finish()
+    par = build_fleet(2, cls=ParallelShardedEngine, n_cameras=8)
+    for a in arrivals:
+        par.offer(a)
+    par.finish()
+    assert list(map(outcome_key, par.outcomes)) \
+        == list(map(outcome_key, seq.outcomes))
+    # finish with no offers (runners never started) must not hang
+    empty = build_fleet(2, cls=ParallelShardedEngine, n_cameras=8)
+    empty.finish()
+    assert empty.outcomes == []
+
+
+def test_parallel_shard_error_propagates_at_finish():
+    class Boom(Exception):
+        pass
+
+    class BoomExecutor:
+        def submit(self, inv):
+            raise Boom("shard executor died")
+
+        def resolve(self, handle):           # pragma: no cover
+            raise AssertionError
+
+    plan = FleetPlan(n_shards=2, camera_groups=((0,), (1,)))
+    engines = [ServingEngine(
+        fleet_uniform_pool(256, 256, TABLE, classify=classify),
+        BoomExecutor()) for _ in range(2)]
+    par = ParallelShardedEngine(engines, plan.shard_of, plan=plan)
+    arrivals = fleet_arrivals(n_cameras=2, duration_s=1.0)
+    with pytest.raises(Boom):
+        par.run(arrivals)
+
+
+# -------------------------------------------------------- clocks ----
+
+
+def test_barrier_clock_align_lifts_all_members():
+    bar = BarrierVirtualClock(3, t0=1.0)
+    bar.members[0].advance_to(2.0)
+    bar.members[2].advance_to(7.0)
+    bar.align()
+    assert [m.now() for m in bar.members] == [7.0, 7.0, 7.0]
+    # monotone: align never rewinds a member
+    bar.members[1].advance_to(9.0)
+    bar.align()
+    assert [m.now() for m in bar.members] == [9.0, 9.0, 9.0]
+
+
+def test_barrier_clock_threaded_sync_rendezvous():
+    bar = BarrierVirtualClock(4, timeout_s=30.0)
+    times = [1.0, 4.0, 2.5, 3.0]
+    seen = []
+
+    def worker(i):
+        m = bar.members[i]
+        m.advance_to(times[i])
+        m.sync()
+        seen.append(m.now())
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert seen == [4.0] * 4
+
+
+def test_barrier_clock_sync_times_out_loudly():
+    bar = BarrierVirtualClock(2, timeout_s=0.05)
+    with pytest.raises(RuntimeError, match="timed out"):
+        bar.members[0].sync()                 # peer never arrives
+
+
+def test_wall_clock_shard_view_shares_timeline():
+    base = WallClock(speed=50.0)
+    a, b = base.shard_view(), base.shard_view()
+    assert a.speed == base.speed and a._epoch == base._epoch
+    t0 = a.now()
+    a.advance_to(t0 + 0.5)
+    # b reads the same timeline (its own floor, no cross-thread write)
+    assert b.now() >= t0
+    assert b._floor != a._floor
+
+
+# ----------------------------------------------- shared-state safety ----
+
+
+def test_cost_meter_concurrent_billing_exact_to_the_cent():
+    meter = CostMeter()
+    n_threads, n_charges, t_f = 8, 400, 0.125
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)        # force aggressive interleaving
+    try:
+        threads = [threading.Thread(
+            target=lambda: [meter.charge(t_f) for _ in range(n_charges)])
+            for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    total_charges = n_threads * n_charges
+    assert meter.invocations == total_charges
+    assert meter.busy_seconds == pytest.approx(total_charges * t_f)
+    sequential = CostMeter()
+    for _ in range(total_charges):
+        sequential.charge(t_f)
+    assert round(meter.total, 2) == round(sequential.total, 2)
+    assert meter.total == pytest.approx(
+        total_charges * alibaba_cost(t_f), rel=1e-12)
+
+
+def test_frame_store_concurrent_release_drains_exactly():
+    store = FrameStore()
+    n_frames, refs_per_frame, n_threads = 64, 8, 8
+    for f in range(n_frames):
+        store.add(f, np.zeros(4), refs_per_frame)
+    assert len(store) == n_frames
+
+    def release_all(offset):
+        for f in range(n_frames):
+            store.release((f + offset) % n_frames)
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        threads = [threading.Thread(target=release_all, args=(i,))
+                   for i in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        sys.setswitchinterval(old)
+    # 8 threads x 1 release each per frame == exactly the 8 refs
+    assert len(store) == 0 and store.refs_snapshot() == {}
+    assert store.get(0) is None and 0 not in store
+
+
+def test_online_latency_table_concurrent_observe_keeps_invariants():
+    online = OnlineLatencyTable(TABLE, alpha=0.25)
+    rng = np.random.default_rng(0)
+    samples = [(int(b), float(e)) for b, e in
+               zip(rng.integers(1, 9, 400), rng.uniform(0.01, 0.4, 400))]
+
+    def observer(worker):
+        for b, e in samples:
+            online.observe(b, e, worker=worker)
+            online.mu_sigma(b)
+
+    threads = [threading.Thread(target=observer, args=(w,))
+               for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert online.n_observations == 4 * len(samples)
+    for b in (1, 2, 4, 8):
+        mu, sigma = online.mu_sigma(b)
+        assert np.isfinite(mu) and mu > 0 and sigma >= 0
+
+
+# --------------------------------------------------- scheduler wiring ----
+
+
+def test_scheduler_parallel_matches_sequential_results():
+    def serve(parallel):
+        cfg = ServeConfig(classify="slo", shards=2, planner="cost",
+                          n_workers=4, source="fleet", parallel=parallel)
+        sched = TangramScheduler(256, 256, TABLE,
+                                 Platform(TABLE, PlatformConfig(
+                                     max_instances=24, pre_warm=12)),
+                                 config=cfg)
+        src = make_source("fleet", n_cameras=16, duration_s=2.0, seed=2)
+        return sched.serve_source(src, name="fleet-par")
+
+    seq, par = serve(False), serve(True)
+    assert par.n_patches == seq.n_patches > 0
+    assert sorted(map(outcome_key, par.outcomes)) \
+        == sorted(map(outcome_key, seq.outcomes))
+    assert par.total_cost == pytest.approx(seq.total_cost)
+    rows_s = [{k: v for k, v in r.items() if k != "utilization"}
+              for r in seq.summary()["per_shard"]]
+    rows_p = [{k: v for k, v in r.items() if k != "utilization"}
+              for r in par.summary()["per_shard"]]
+    assert rows_p == rows_s
+
+
+def test_serve_config_parallel_validation_and_roundtrip():
+    import json
+    with pytest.raises(ValueError, match="parallel"):
+        ServeConfig(parallel=True)
+    cfg = ServeConfig(shards=4, parallel=True)
+    assert ServeConfig.from_dict(
+        json.loads(json.dumps(cfg.to_dict()))) == cfg
+
+
+def test_shard_runner_counts_and_stop():
+    eng = ServingEngine(
+        fleet_uniform_pool(256, 256, TABLE, classify=classify),
+        SimExecutor(det_platform()))
+    runner = ShardRunner(0, eng, queue_depth=8)
+    runner.start()
+    arrivals = fleet_arrivals(n_cameras=4, duration_s=1.0)
+    runner.submit(arrivals)
+    runner.stop()
+    runner.join(timeout=30.0)
+    assert runner.error is None
+    assert runner.submitted == runner.consumed == len(arrivals)
+    assert runner.pending() == 0
+    assert len(eng.outcomes) == len(arrivals)
